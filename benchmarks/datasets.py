@@ -1,0 +1,61 @@
+"""Surrogates for the paper's four SOSD datasets (offline container — see
+DESIGN.md §5.5). Same qualitative CDF shapes, 64-bit key scale:
+
+  amzn  — book popularity: Zipf-ish counts -> cumulative ids (heavy head)
+  face  — user ids: near-uniform with random gaps
+  osm   — cell ids: multi-modal clusters (spatial locality)
+  wiki  — edit timestamps: bursty arrival (piecewise-intensity Poisson)
+
+Plus the paper's skew family: uniform keys raised to powers alpha.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_N = 200_000     # paper: 200M; CPU-scaled (flag --n to raise)
+
+
+def amzn(n=DEFAULT_N, seed=0):
+    rng = np.random.default_rng(seed)
+    # heavy-tailed but smooth popularity counts (id = cumulative popularity)
+    pop = rng.lognormal(3.0, 1.5, n)
+    keys = np.cumsum(pop) + rng.random(n)
+    return np.sort(keys * 1e3)
+
+
+def face(n=DEFAULT_N, seed=1):
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(1, 200, n).astype(np.float64)
+    gaps[rng.random(n) < 0.001] += 1e7          # rare big holes
+    return np.sort(np.cumsum(gaps))
+
+
+def osm(n=DEFAULT_N, seed=2):
+    rng = np.random.default_rng(seed)
+    n_clusters = 64
+    centers = np.sort(rng.random(n_clusters)) * 1.8e19
+    widths = rng.lognormal(30, 2, n_clusters)
+    counts = rng.multinomial(n, rng.dirichlet(np.ones(n_clusters) * 0.4))
+    parts = [rng.normal(c, w, k) for c, w, k in zip(centers, widths, counts)]
+    return np.sort(np.abs(np.concatenate(parts)))
+
+
+def wiki(n=DEFAULT_N, seed=3):
+    rng = np.random.default_rng(seed)
+    n_bursts = 500
+    rates = rng.lognormal(0, 1.5, n_bursts)
+    counts = np.maximum((rates / rates.sum() * n).astype(int), 1)
+    t, parts = 0.0, []
+    for c, r in zip(counts, rates):
+        parts.append(t + np.cumsum(rng.exponential(1.0 / r, c)))
+        t = parts[-1][-1] + rng.exponential(50.0)
+    keys = np.concatenate(parts)[:n]
+    return np.sort(keys * 1e6)
+
+
+def skew(alpha: int, n=DEFAULT_N, seed=4):
+    rng = np.random.default_rng(seed)
+    return np.sort((rng.random(n) ** alpha) * 1e12)
+
+
+REAL = {"amzn": amzn, "face": face, "osm": osm, "wiki": wiki}

@@ -1,0 +1,32 @@
+"""Paper Fig. 5: index build time (a) and lookup time (b) on the four real
+datasets (surrogates; DESIGN.md §5.5), full index roster."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from . import datasets
+from .harness import roster, timed_build, timed_lookup, verify
+
+
+def run(n: int = datasets.DEFAULT_N, n_queries: int = 20_000):
+    rng = np.random.default_rng(42)
+    rows = []
+    for dname, gen in datasets.REAL.items():
+        keys = jnp.asarray(gen(n))
+        q = jnp.asarray(rng.choice(np.asarray(keys), n_queries))
+        for spec in roster():
+            idx, bt = timed_build(spec, keys)
+            res, ns = timed_lookup(spec, idx, q)
+            ok = verify(keys, q, res)
+            extra = ""
+            if hasattr(idx, "reuse_fraction"):
+                extra = f" reuse={idx.reuse_fraction:.2f}"
+            rows.append({
+                "name": f"fig5_{dname}_{spec.name}",
+                "us_per_call": ns / 1e3,
+                "derived": f"build={bt:.3f}s lookup={ns:.0f}ns/q "
+                           f"correct={ok}{extra}",
+            })
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig. 6: build/lookup vs data skewness (alpha = 1,3,5,7,9) —
+RMRT's adaptivity claim: its lookup time stays stable as skew grows."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from . import datasets
+from .harness import roster, timed_build, timed_lookup, verify
+
+ROSTER_SUBSET = ("BTree", "RMI", "RMI-NN-MR", "PGM", "RS", "RMRT")
+
+
+def run(n: int = datasets.DEFAULT_N, n_queries: int = 20_000,
+        alphas=(1, 3, 5, 7, 9)):
+    rng = np.random.default_rng(7)
+    rows = []
+    for alpha in alphas:
+        keys = jnp.asarray(datasets.skew(alpha, n))
+        q = jnp.asarray(rng.choice(np.asarray(keys), n_queries))
+        for spec in roster():
+            if spec.name not in ROSTER_SUBSET:
+                continue
+            idx, bt = timed_build(spec, keys)
+            res, ns = timed_lookup(spec, idx, q)
+            ok = verify(keys, q, res)
+            rows.append({
+                "name": f"fig6_a{alpha}_{spec.name}",
+                "us_per_call": ns / 1e3,
+                "derived": f"build={bt:.3f}s lookup={ns:.0f}ns/q correct={ok}",
+            })
+    return rows

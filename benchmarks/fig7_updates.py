@@ -1,0 +1,53 @@
+"""Paper Fig. 7: insertion time vs insertion ratio (a) and vs fanout /
+branching parameter (b). Dynamic indices only (BTree absorbed into the
+gapped-leaf comparison; RMI/RMI-NN/RS are static and excluded, as in the
+paper)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import reuse, synth, updates
+from . import datasets
+
+
+def run(n: int = 100_000, eps: float = 0.9):
+    rng = np.random.default_rng(13)
+    keys = jnp.asarray(datasets.amzn(n))
+    sp = synth.generate_pool(eps)
+    pool = reuse.build_pool(sp, kind="linear")
+    rows = []
+
+    # (a) insertion ratio sweep
+    for ratio in (0.1, 0.3, 0.5, 0.8, 1.0):
+        ins = np.asarray(datasets.amzn(int(n * ratio), seed=1000 + int(ratio * 10)))
+        dyn = updates.DynamicRMI.build(keys, pool=pool, eps=eps,
+                                       n_leaves=512, kind="linear")
+        t0 = time.time()
+        dyn.insert_batch(ins)
+        dt = time.time() - t0
+        rows.append({
+            "name": f"fig7a_ratio{ratio}",
+            "us_per_call": dt / ins.size * 1e6,
+            "derived": f"insert={dt/ins.size*1e9:.0f}ns/i "
+                       f"rebuilds={dyn.rebuilds} buffered={dyn.total_buffered}",
+        })
+
+    # (b) fanout sweep (number of leaves = insertion-budget granularity)
+    ins = np.asarray(datasets.amzn(int(n * 0.5), seed=77))
+    for n_leaves in (64, 256, 1024, 4096):
+        dyn = updates.DynamicRMI.build(keys, pool=pool, eps=eps,
+                                       n_leaves=n_leaves, kind="linear")
+        t0 = time.time()
+        dyn.insert_batch(ins)
+        dt = time.time() - t0
+        rows.append({
+            "name": f"fig7b_leaves{n_leaves}",
+            "us_per_call": dt / ins.size * 1e6,
+            "derived": f"insert={dt/ins.size*1e9:.0f}ns/i "
+                       f"rebuilds={dyn.rebuilds}",
+        })
+    return rows

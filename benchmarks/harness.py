@@ -1,0 +1,106 @@
+"""Shared benchmark machinery: the paper's index roster, timed builds and
+lookups, CSV rows for run.py."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import btree, pgm, radix_spline, reuse, rmi, rmrt, synth
+
+_POOLS: dict = {}
+
+
+def pools(eps: float = 0.9):
+    """Cached (linear, mlp) pools; pre-train time reported separately."""
+    if eps not in _POOLS:
+        sp = synth.generate_pool(eps)
+        t0 = time.time()
+        lin = reuse.build_pool(sp, kind="linear")
+        jax.block_until_ready(lin.err_hi)
+        t_lin = time.time() - t0
+        t0 = time.time()
+        mlp = reuse.build_pool(sp, kind="mlp", train_steps=400)
+        jax.block_until_ready(mlp.err_hi)
+        t_mlp = time.time() - t0
+        _POOLS[eps] = (lin, mlp, t_lin, t_mlp, sp.size)
+    return _POOLS[eps]
+
+
+@dataclass
+class IndexSpec:
+    name: str
+    build: callable
+    lookup: callable
+
+
+def roster(eps: float = 0.9, n_leaves: int = 1024, warm: bool = True):
+    """The paper's §5 roster: BTree, RMI, RMI-NN, RMI-MR, RMI-NN-MR, PGM,
+    RS, RMRT."""
+    lin_pool, mlp_pool, *_ = pools(eps)
+    return [
+        IndexSpec("BTree", lambda k: btree.build_btree(k, fanout=16),
+                  btree.lookup),
+        IndexSpec("RMI", lambda k: rmi.build_rmi(k, n_leaves, kind="linear"),
+                  rmi.lookup),
+        IndexSpec("RMI-MR", lambda k: rmi.build_rmi(k, n_leaves,
+                                                    kind="linear",
+                                                    pool=lin_pool),
+                  rmi.lookup),
+        IndexSpec("RMI-NN", lambda k: rmi.build_rmi(k, n_leaves, kind="mlp",
+                                                    train_steps=150),
+                  rmi.lookup),
+        IndexSpec("RMI-NN-MR", lambda k: rmi.build_rmi(k, n_leaves,
+                                                       kind="mlp",
+                                                       pool=mlp_pool,
+                                                       train_steps=150),
+                  rmi.lookup),
+        IndexSpec("PGM", lambda k: pgm.build_pgm(k, eps=64), pgm.lookup),
+        IndexSpec("RS", lambda k: radix_spline.build_rs(k, eps=32),
+                  radix_spline.lookup),
+        IndexSpec("RMRT", lambda k: rmrt.build_rmrt(k, leaf_cap=4096,
+                                                    fanout=64, kind="linear",
+                                                    pool=lin_pool),
+                  rmrt.lookup),
+    ]
+
+
+def timed_build(spec: IndexSpec, keys, repeats: int = 2):
+    """Median warm build time (first build pays jit compile; excluded)."""
+    times = []
+    idx = None
+    for r in range(repeats + 1):
+        t0 = time.time()
+        idx = spec.build(keys)
+        _block(idx)
+        if r:
+            times.append(time.time() - t0)
+    return idx, float(np.median(times))
+
+
+def timed_lookup(spec: IndexSpec, idx, queries, repeats: int = 3):
+    res = spec.lookup(idx, queries)
+    jax.block_until_ready(res)
+    times = []
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(spec.lookup(idx, queries))
+        times.append(time.time() - t0)
+    ns_per_q = float(np.median(times)) / queries.shape[0] * 1e9
+    return res, ns_per_q
+
+
+def _block(idx):
+    for leaf in jax.tree.leaves(idx.__dict__ if hasattr(idx, "__dict__")
+                                else idx):
+        if isinstance(leaf, jax.Array):
+            leaf.block_until_ready()
+
+
+def verify(keys, queries, result) -> bool:
+    truth = jnp.searchsorted(jnp.asarray(keys), queries, side="left")
+    return bool(jnp.all(jnp.asarray(result) == truth))

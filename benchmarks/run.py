@@ -1,0 +1,95 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all, quick sizes
+  PYTHONPATH=src python -m benchmarks.run --only fig5 --n 1000000
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a kernel microbench and
+the serving-path row for the Pallas lookup kernel).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def kernel_rows(n: int = 200_000, q: int = 16_384):
+    """Pallas kernels (interpret mode on CPU): correctness-grade timing."""
+    import numpy as np
+    import jax.numpy as jnp
+    import repro  # noqa: F401
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.lognormal(0, 1, n)).astype(np.float32)
+    A = np.polyfit(keys.astype(np.float64), np.arange(n), 1)
+    resid = np.arange(n) - (A[0] * keys + A[1])
+    qs = jnp.asarray(rng.choice(keys, q))
+    w1 = np.zeros((q, 4), np.float32)
+    w1[:, 0] = A[0]
+    zeros = jnp.zeros((q, 4), jnp.float32)
+    args = (qs, jnp.asarray(w1), zeros, zeros,
+            jnp.full((q,), A[1], jnp.float32),
+            jnp.full((q,), resid.min() - 2, jnp.float32),
+            jnp.full((q,), resid.max() + 2, jnp.float32),
+            jnp.asarray(keys))
+    r = ops.index_lookup(*args, linear=True)
+    r.block_until_ready()
+    t0 = time.time()
+    ops.index_lookup(*args, linear=True).block_until_ready()
+    dt = time.time() - t0
+    h = ops.histogram(jnp.asarray(keys), 64, float(keys[0]), float(keys[-1]))
+    h.block_until_ready()
+    t0 = time.time()
+    ops.histogram(jnp.asarray(keys), 64, float(keys[0]),
+                  float(keys[-1])).block_until_ready()
+    dth = time.time() - t0
+    return [
+        {"name": "kernel_lookup_fused", "us_per_call": dt / q * 1e6,
+         "derived": f"{dt/q*1e9:.0f}ns/q interpret-mode n={n}"},
+        {"name": "kernel_histogram", "us_per_call": dth * 1e6,
+         "derived": f"{dth*1e3:.1f}ms for {n} keys m=64 interpret-mode"},
+    ]
+
+
+SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "kernels"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {SUITES}")
+    ap.add_argument("--n", type=int, default=None,
+                    help="dataset size override (default 200k)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    rows = []
+    t_start = time.time()
+    if "table2" in only:
+        from . import table2_synth
+        rows += table2_synth.run()
+    if "fig5" in only:
+        from . import fig5_real
+        rows += fig5_real.run(**({"n": args.n} if args.n else {}))
+    if "fig6" in only:
+        from . import fig6_skew
+        rows += fig6_skew.run(**({"n": args.n} if args.n else {}))
+    if "table3" in only:
+        from . import table3_eps
+        rows += table3_eps.run(**({"n": args.n} if args.n else {}))
+    if "fig7" in only:
+        from . import fig7_updates
+        rows += fig7_updates.run(**({"n": args.n} if args.n else {}))
+    if "kernels" in only:
+        rows += kernel_rows(**({"n": args.n} if args.n else {}))
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"")
+    print(f"# total {time.time()-t_start:.0f}s, {len(rows)} rows",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Table 3: build / lookup / insertion time under varying eps for
+RMI-NN-MR and RMRT. Expected trends (paper): build rises with eps, lookup
+falls with eps, insertion rises with eps (smaller Lemma 4.1 budgets)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import reuse, rmi, rmrt, synth, updates
+from . import datasets
+
+
+def run(n: int = 100_000, n_queries: int = 10_000,
+        eps_list=(0.5, 0.6, 0.7, 0.9), insert_frac: float = 0.2):
+    rng = np.random.default_rng(11)
+    keys = jnp.asarray(datasets.amzn(n))
+    q = jnp.asarray(rng.choice(np.asarray(keys), n_queries))
+    ins = np.asarray(datasets.amzn(int(n * insert_frac), seed=99))
+    rows = []
+    for eps in eps_list:
+        sp = synth.generate_pool(eps)
+        mlp_pool = reuse.build_pool(sp, kind="mlp", train_steps=400)
+        lin_pool = reuse.build_pool(sp, kind="linear")
+
+        # RMI-NN-MR
+        idx = rmi.build_rmi(keys, 512, kind="mlp", pool=mlp_pool,
+                            train_steps=150)  # compile warmup
+        t0 = time.time()
+        idx = rmi.build_rmi(keys, 512, kind="mlp", pool=mlp_pool,
+                            train_steps=150)
+        jax.block_until_ready(idx.err_hi)
+        bt = time.time() - t0
+        rmi.lookup(idx, q).block_until_ready()
+        t0 = time.time()
+        rmi.lookup(idx, q).block_until_ready()
+        lt = (time.time() - t0) / n_queries * 1e9
+
+        dyn = updates.DynamicRMI.build(keys, pool=lin_pool, eps=eps,
+                                       n_leaves=512, kind="linear")
+        t0 = time.time()
+        dyn.insert_batch(ins)
+        it = (time.time() - t0) / ins.size * 1e9
+        rows.append({
+            "name": f"table3_eps{eps}_RMI-NN-MR",
+            "us_per_call": lt / 1e3,
+            "derived": f"build={bt:.2f}s lookup={lt:.0f}ns/q "
+                       f"insert={it:.0f}ns/i rebuilds={dyn.rebuilds} "
+                       f"reuse={idx.reuse_fraction:.2f}",
+        })
+
+        # RMRT
+        t0 = time.time()
+        tree = rmrt.build_rmrt(keys, leaf_cap=4096, fanout=64, kind="linear",
+                               pool=lin_pool)
+        jax.block_until_ready(tree.err_hi)
+        bt2 = time.time() - t0
+        rmrt.lookup(tree, q).block_until_ready()
+        t0 = time.time()
+        rmrt.lookup(tree, q).block_until_ready()
+        lt2 = (time.time() - t0) / n_queries * 1e9
+        rows.append({
+            "name": f"table3_eps{eps}_RMRT",
+            "us_per_call": lt2 / 1e3,
+            "derived": f"build={bt2:.2f}s lookup={lt2:.0f}ns/q "
+                       f"depth={tree.depth} reuse={tree.reuse_fraction:.2f}",
+        })
+    return rows

@@ -1,0 +1,5 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+from .base import ArchConfig, MoECfg, SHAPES, ShapeCfg, get_arch, list_archs
+
+__all__ = ["ArchConfig", "MoECfg", "SHAPES", "ShapeCfg", "get_arch",
+           "list_archs"]

@@ -1,0 +1,17 @@
+"""The paper's contribution: agile model reuse for learned indices.
+
+Public surface:
+  synth.generate_pool(eps)            — synthetic corpus (Table 2 enumeration)
+  reuse.build_pool(corpus, kind)      — batched pool pre-training (Q_MP)
+  pool.reuse_or_train(keys)           — Algorithm 1 for one dataset
+  rmi.build_rmi / rmi.lookup          — RMI, RMI-MR, RMI-NN, RMI-NN-MR
+  rmrt.build_rmrt / rmrt.lookup       — the paper's RMRT
+  updates.DynamicRMI                  — §4 insert handling (Lemma 4.1)
+  distributed.build_sharded           — multi-host sharded index service
+  btree / pgm / radix_spline          — baselines from the paper's roster
+"""
+from . import (adapt, bounds, btree, cdf, distributed, models, pgm,
+               radix_spline, reuse, rmi, rmrt, synth, updates)
+
+__all__ = ["adapt", "bounds", "btree", "cdf", "distributed", "models", "pgm",
+           "radix_spline", "reuse", "rmi", "rmrt", "synth", "updates"]

@@ -1,0 +1,78 @@
+"""Model adaptation (paper §3 "Model adaptation", Lemma 3.2).
+
+A pool model M_S was trained on keys in [xs_s, xs_e] predicting positions in
+[ys_s, ys_e]. To reuse it on D_T with key range [xt_s, xt_e] and position
+range [yt_s, yt_e]:
+
+    T_in(x)  = a1*x + b1,  a1 = S_dx = (xs_e - xs_s)/(xt_e - xt_s),
+                           b1 = xs_s - xt_s * S_dx
+    T_out(y) = a2*y + b2,  a2 = S_dy = (yt_e - yt_s)/(ys_e - ys_s),
+                           b2 = yt_s - ys_s * S_dy
+
+Lemma 3.2: for a linear model both maps fold into (a', b') with zero extra
+prediction cost. We implement the analogous exact fold for the 1x4 MLP (the
+paper's "similar results can be derived for other models"): the input affine
+folds into the first layer, the output affine into the last.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import LinearParams, MLPParams
+
+Array = jax.Array
+
+
+class DomainSpec(NamedTuple):
+    """Key/position ranges of a dataset, as used by T_in / T_out."""
+    x_start: Array
+    x_end: Array
+    y_start: Array
+    y_end: Array
+
+
+def affine_coeffs(src: DomainSpec, tgt: DomainSpec):
+    """Returns ((a1, b1), (a2, b2)) for T_in / T_out."""
+    s_dx = (src.x_end - src.x_start) / (tgt.x_end - tgt.x_start)
+    s_dy = (tgt.y_end - tgt.y_start) / (src.y_end - src.y_start)
+    a1, b1 = s_dx, src.x_start - tgt.x_start * s_dx
+    a2, b2 = s_dy, tgt.y_start - src.y_start * s_dy
+    return (a1, b1), (a2, b2)
+
+
+@jax.jit
+def adapt_linear(p: LinearParams, src: DomainSpec, tgt: DomainSpec) -> LinearParams:
+    """Lemma 3.2 fold: a' = a*S_dx*S_dy,
+    b' = (-a*xt_s*S_dx + a*xs_s + b - ys_s)*S_dy + yt_s."""
+    (a1, b1), (a2, b2) = affine_coeffs(src, tgt)
+    return LinearParams(a=p.a * a1 * a2, b=(p.a * b1 + p.b) * a2 + b2)
+
+
+@jax.jit
+def adapt_mlp(p: MLPParams, src: DomainSpec, tgt: DomainSpec) -> MLPParams:
+    """Exact MLP fold: first layer absorbs T_in, last layer absorbs T_out.
+
+        h  = relu(w1*(a1*x + b1) + c1) = relu((w1*a1)*x + (w1*b1 + c1))
+        y' = a2*(w2·h + c2) + b2      = (a2*w2)·h + (a2*c2 + b2)
+    """
+    (a1, b1), (a2, b2) = affine_coeffs(src, tgt)
+    return MLPParams(
+        w1=p.w1 * a1,
+        b1=p.w1 * b1 + p.b1,
+        w2=p.w2 * a2,
+        b2=p.b2 * a2 + b2,
+    )
+
+
+def domain_of(sorted_keys: Array) -> DomainSpec:
+    """DomainSpec of a sorted dataset with positions 0..n-1."""
+    n = sorted_keys.shape[0]
+    return DomainSpec(
+        x_start=sorted_keys[0],
+        x_end=sorted_keys[-1],
+        y_start=jnp.zeros((), jnp.float64),
+        y_end=jnp.asarray(n - 1, jnp.float64),
+    )

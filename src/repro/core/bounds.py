@@ -1,0 +1,41 @@
+"""Error-bound algebra: Theorem 3.3 (reuse error bounds) and Lemma 4.1
+(insertion budget before rebuild)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.jit
+def reuse_err_bounds(err_lo: Array, err_hi: Array, dist: Array, n_t: Array,
+                     s_dy: Array) -> tuple[Array, Array]:
+    """Theorem 3.3: bounds of a reused model on the target dataset.
+
+        err_lo' = -dist * n_T + err_lo * S_dy
+        err_hi' = +dist * n_T + err_hi * S_dy
+
+    ``dist`` may be the exact KS distance or the Algorithm-2 upper bound
+    dist_h (>= dist, so the result stays a sound bound — Eq. 3).
+    """
+    return (-dist * n_t + err_lo * s_dy, dist * n_t + err_hi * s_dy)
+
+
+@jax.jit
+def insertion_budget(sim: Array, eps: Array, n: Array) -> Array:
+    """Lemma 4.1: max #inserts before a rebuild is required:
+
+        n_i <= (sim - eps) / (1 + eps - sim) * n
+
+    ``sim`` is the build-time similarity between the dataset and whatever the
+    model was trained on (1.0 if freshly trained). Negative budgets clamp to 0
+    (a model reused right at the threshold must rebuild on first insert).
+    """
+    return jnp.maximum(jnp.floor((sim - eps) / (1.0 + eps - sim) * n), 0.0)
+
+
+def widen_for_inserts(err_lo: Array, err_hi: Array, n_inserts: Array):
+    """§4: a sibling leaf whose CDF is untouched by i inserts only needs its
+    bounds widened by i (positions after the insertion point shift by <= i)."""
+    return err_lo - n_inserts, err_hi + n_inserts

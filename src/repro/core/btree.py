@@ -1,0 +1,70 @@
+"""Array-based static B+tree baseline (paper competitor #1, STX-like).
+
+Implicit layout: level l holds the separator keys of its nodes contiguously;
+a lookup descends with one fanout-wide scan per level (branchless,
+vectorized over queries). Build is a single bottom-up pass — this is why the
+paper finds BTree build time unbeatable, which we reproduce.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass
+class BTreeIndex:
+    keys: Array               # (n,) sorted leaf level
+    levels: list              # list of (n_l,) separator arrays, root last
+    fanout: int
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def height(self) -> int:
+        return len(self.levels)
+
+
+def build_btree(keys: Array, fanout: int = 16) -> BTreeIndex:
+    """Bottom-up bulk load: level l+1 = every fanout-th key of level l."""
+    keys = jnp.asarray(keys, jnp.float64)
+    levels = []
+    cur = keys
+    while cur.shape[0] > fanout:
+        cur = cur[fanout - 1::fanout]        # max key of each node
+        levels.append(cur)
+    return BTreeIndex(keys=keys, levels=levels, fanout=fanout)
+
+
+def lookup(index: BTreeIndex, queries: Array) -> Array:
+    """Left-boundary rank of each query (same semantics as rmi.lookup)."""
+    queries = jnp.asarray(queries, jnp.float64)
+    # Descend: at each level, narrow [lo, lo+fanout) by one scan.
+    return _btree_lookup(index.keys, tuple(index.levels), index.fanout, queries)
+
+
+@functools.partial(jax.jit, static_argnames=("fanout",))
+def _btree_lookup(keys, levels: tuple, fanout: int, queries):
+    n = keys.shape[0]
+    # start from the root level: position among root separators
+    node = jnp.zeros(queries.shape, jnp.int32)
+    for lvl in reversed(levels):
+        m = lvl.shape[0]
+        # children of `node` cover separators [node*fanout, (node+1)*fanout)
+        base = node * fanout
+        offs = jnp.arange(fanout)
+        cand = jnp.clip(base[:, None] + offs[None, :], 0, m - 1)
+        below = (lvl[cand] < queries[:, None]) & ((base[:, None] + offs) < m)
+        node = base + below.sum(1).astype(jnp.int32)
+    base = node * fanout
+    offs = jnp.arange(fanout)
+    cand = jnp.clip(base[:, None] + offs[None, :], 0, n - 1)
+    below = (keys[cand] < queries[:, None]) & ((base[:, None] + offs) < n)
+    return jnp.clip(base + below.sum(1).astype(jnp.int32), 0, n)

@@ -1,0 +1,119 @@
+"""CDF machinery: exact KS distance, relative-frequency histograms, and the
+paper's Algorithm 2 histogram-based distance upper bound.
+
+Definitions (paper §3):
+  sim(D_S, D_T)  = 1 - sup_x |cdf_S(x) - cdf_T(x)|          (Def. 3.1)
+  dist(D_S, D_T) = 1 - sim(D_S, D_T)   (two-sample Kolmogorov-Smirnov statistic)
+  dist_h(D_S, D_T) >= dist(D_S, D_T)                        (Eq. 3, Algorithm 2)
+
+All functions are jit-compatible and operate on float64 keys (x64 enabled in
+``repro.__init__``) so 64-bit integer keys survive normalization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Exact two-sample KS distance (Def. 3.1).
+# ---------------------------------------------------------------------------
+@jax.jit
+def ks_distance(sorted_a: Array, sorted_b: Array) -> Array:
+    """Exact ``sup_x |cdf_A(x) - cdf_B(x)|`` for two *sorted* 1-D key arrays.
+
+    Right-continuous empirical CDFs jump only at sample points, so the sup is
+    attained at a point of the union of the two samples; evaluating both CDFs
+    at every union point is exact. O((n+m) log(n+m)) via searchsorted.
+    """
+    union = jnp.concatenate([sorted_a, sorted_b])
+    fa = jnp.searchsorted(sorted_a, union, side="right").astype(jnp.float64) \
+        / sorted_a.shape[0]
+    fb = jnp.searchsorted(sorted_b, union, side="right").astype(jnp.float64) \
+        / sorted_b.shape[0]
+    return jnp.max(jnp.abs(fa - fb))
+
+
+def ks_similarity(sorted_a: Array, sorted_b: Array) -> Array:
+    """sim(D_S, D_T) per Def. 3.1."""
+    return 1.0 - ks_distance(sorted_a, sorted_b)
+
+
+# ---------------------------------------------------------------------------
+# Relative-frequency histograms.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("m",))
+def histogram_sorted(sorted_keys: Array, m: int, lo: Array, hi: Array) -> Array:
+    """m-bin relative-frequency histogram of a *sorted* key array.
+
+    This is the paper's O(m log n) construction: locate the m-1 interior bin
+    edges with binary search instead of scanning all n keys. Bins follow the
+    paper's right-closed convention ( (i/m, (i+1)/m] after normalization ),
+    with the first bin additionally absorbing keys == lo.
+    """
+    n = sorted_keys.shape[0]
+    edges = lo + (hi - lo) * (jnp.arange(1, m + 1, dtype=sorted_keys.dtype) / m)
+    cum = jnp.searchsorted(sorted_keys, edges, side="right")
+    counts = jnp.diff(jnp.concatenate([jnp.zeros((1,), cum.dtype), cum]))
+    # Clip anything above hi into the last bin (defensive; callers pass
+    # lo/hi = data range so cum[-1] == n already).
+    counts = counts.at[-1].add(n - cum[-1])
+    return counts.astype(jnp.float64) / n
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def histogram_stream(keys: Array, m: int, lo: Array, hi: Array) -> Array:
+    """m-bin relative-frequency histogram of an *unsorted* key array (O(n)).
+
+    jnp reference for the Pallas streaming kernel in ``repro.kernels.hist``
+    (used on the update/ingest path where keys arrive unsorted).
+    """
+    n = keys.shape[0]
+    scaled = (keys - lo) / jnp.maximum(hi - lo, jnp.finfo(keys.dtype).tiny)
+    # Right-closed bins: key in ((i)/m, (i+1)/m]  ->  bin = ceil(x*m) - 1.
+    idx = jnp.clip(jnp.ceil(scaled * m).astype(jnp.int32) - 1, 0, m - 1)
+    counts = jnp.zeros((m,), jnp.float64).at[idx].add(1.0)
+    return counts / n
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: histogram-based distance upper bound.
+# ---------------------------------------------------------------------------
+@jax.jit
+def hist_distance(hs: Array, ht: Array) -> Array:
+    """Algorithm 2. ``dist_h(D_S, D_T)`` from two m-bin histograms.
+
+    Guarantees dist_h >= dist (Eq. 3): within bin i, cdf_S is at most the
+    *inclusive* prefix sum P_S + H_S[i] while cdf_T is at least the
+    *exclusive* prefix sum P_T, and symmetrically. Vectorized form of the
+    paper's loop: both branches evaluated for every bin, single max-reduce.
+    """
+    ps = jnp.concatenate([jnp.zeros((1,), hs.dtype), jnp.cumsum(hs)[:-1]])
+    pt = jnp.concatenate([jnp.zeros((1,), ht.dtype), jnp.cumsum(ht)[:-1]])
+    up = hs + ps - pt     # bounds cdf_S(x) - cdf_T(x) from above, per bin
+    dn = ht + pt - ps     # bounds cdf_T(x) - cdf_S(x) from above, per bin
+    return jnp.maximum(jnp.max(up), jnp.max(dn))
+
+
+@jax.jit
+def hist_distance_pool(pool_hists: Array, ht: Array) -> Array:
+    """Batched Algorithm 2: distance of one target histogram against a whole
+    pool ``(P, m)`` of pre-computed synthetic histograms in one shot.
+
+    TPU-native replacement for the paper's sequential priority-queue scan —
+    the selection over the result is done by the caller (see reuse.py). A
+    fused Pallas version lives in ``repro.kernels.ksdist``.
+    """
+    return jax.vmap(lambda hs: hist_distance(hs, ht))(pool_hists)
+
+
+def normalize_keys(keys: Array) -> tuple[Array, Array, Array]:
+    """Map keys to [0, 1]; returns (normalized, lo, hi). Constant datasets map
+    to 0.5 to stay well-defined."""
+    lo, hi = keys.min(), keys.max()
+    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float64).tiny)
+    return (keys - lo) / span, lo, hi

@@ -1,0 +1,174 @@
+"""Distributed learned-index service: range-partitioned keys under
+``shard_map``, replicated model pool, all_to_all query routing.
+
+Scale design (DESIGN.md §4): a production index over O(10^11) keys does not
+fit one host. Keys are range-partitioned across the ``data`` mesh axis (the
+pool — 30 MB at eps=0.9 — is replicated). A query batch arrives sharded;
+each shard routes its queries to the owning shard with a capacity-bucketed
+``all_to_all``, the owner answers with its local RMI (the same jitted lookup
+path as the single-host index), and results return via the inverse
+``all_to_all``. All collectives are explicit, so the dry-run roofline for
+the index service is auditable like the LM cells.
+
+This module is exercised two ways:
+  * functionally on small meshes in tests (shard_map over 1-8 CPU devices),
+  * structurally in the multi-pod dry-run (lower/compile on 256 devices) via
+    ``repro.launch.dryrun --arch index_service``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import rmi as rmi_mod
+
+Array = jax.Array
+
+
+@dataclass
+class ShardedIndex:
+    """Per-shard RMI leaves + replicated routing table."""
+    mesh: Mesh
+    axis: str
+    splits: Array            # (n_shards - 1,) range-partition boundaries
+    # Stacked per-shard RMI components (leading dim = shard), each shard's
+    # arrays padded to the max shard size.
+    keys: Array              # (n_shards, cap)
+    valid: Array             # (n_shards,) number of real keys per shard
+    root: rmi_mod.models.LinearParams
+    leaves: rmi_mod.models.LinearParams
+    err_lo: Array
+    err_hi: Array
+    n_leaves: int
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.keys.shape[0])
+
+
+def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
+                  n_leaves: int = 1024, pool=None) -> ShardedIndex:
+    """Equal-count range partition; one RMI per shard (built batched)."""
+    n_shards = mesh.shape[axis]
+    keys = jnp.asarray(keys, jnp.float64)
+    n = keys.shape[0]
+    cap = -(-n // n_shards)
+    splits = keys[jnp.arange(1, n_shards) * cap - 1]
+    shards, valid = [], []
+    roots, leaves, elos, ehis = [], [], [], []
+    for s in range(n_shards):
+        part = keys[s * cap:(s + 1) * cap]
+        v = part.shape[0]
+        idx = rmi_mod.build_rmi(part, n_leaves=n_leaves, kind="linear",
+                                pool=pool)
+        part = jnp.pad(part, (0, cap - v), constant_values=jnp.inf)
+        shards.append(part)
+        valid.append(v)
+        roots.append(idx.root)
+        leaves.append(idx.leaves)
+        elos.append(idx.err_lo)
+        ehis.append(idx.err_hi)
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    return ShardedIndex(
+        mesh=mesh, axis=axis, splits=splits,
+        keys=jnp.stack(shards), valid=jnp.asarray(valid),
+        root=stack(roots), leaves=stack(leaves),
+        err_lo=jnp.stack(elos), err_hi=jnp.stack(ehis), n_leaves=n_leaves)
+
+
+def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None):
+    """Returns a jitted distributed lookup: (q_local sharded on axis) ->
+    global ranks, same sharding.
+
+    ``capacity_factor``: per-destination slot budget as a multiple of the
+    *balanced* load B/n_shards. None = worst-case B slots per destination
+    (paper-faithful, never drops; all_to_all payload ~ n_shards x B).
+    A factor like 2.0 shrinks the exchange by n_shards/2 at the cost of
+    dropping queries beyond the budget (returned rank -1, retried by the
+    caller) — EXPERIMENTS.md §Perf index-service iteration."""
+    mesh, axis = index.mesh, index.axis
+    n_shards = index.n_shards
+    n_leaves = index.n_leaves
+    cap = index.keys.shape[1]
+
+    def local_lookup(keys, root, leaves, elo, ehi, q):
+        b = rmi_mod.root_buckets("linear", root, q, n_leaves, cap)
+        p = jax.tree.map(lambda a: a[b], leaves)
+        pred = rmi_mod.models.linear_predict(p, q)
+        lo = jnp.clip(jnp.floor(pred + elo[b]), 0, cap - 1).astype(jnp.int32)
+        hi = jnp.clip(jnp.ceil(pred + ehi[b]) + 1, 1, cap).astype(jnp.int32)
+        return rmi_mod.verified_search(keys, q, lo, hi)
+
+    def shard_fn(splits, keys, valid, root, leaves, elo, ehi, q_local):
+        """Runs per shard. q_local: (B_local,). All index args are the
+        *local* shard's slice (shard_map strips the leading shard dim)."""
+        B = q_local.shape[0]
+        me = jax.lax.axis_index(axis)
+        dest = jnp.searchsorted(splits, q_local, side="left").astype(jnp.int32)
+        # capacity-bucketed routing: C slots per destination shard
+        if capacity_factor is None:
+            C = B          # worst case: all local queries target one shard
+        else:
+            C = max(int(B * capacity_factor / n_shards), 1)
+        slot_in_dest = _cumcount(dest, n_shards)
+        send = jnp.full((n_shards, C), jnp.inf, q_local.dtype)
+        send = send.at[dest, jnp.clip(slot_in_dest, 0, C - 1)].set(q_local)
+        origin_pos = jnp.full((n_shards, C), -1, jnp.int32)
+        origin_pos = origin_pos.at[dest, jnp.clip(slot_in_dest, 0, C - 1)].set(
+            jnp.arange(B, dtype=jnp.int32))
+        # exchange: row d of `send` goes to shard d
+        recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+        rpos = jax.lax.all_to_all(origin_pos, axis, 0, 0, tiled=False)
+        # answer locally (padded inf queries return `valid` = rank past end)
+        rq = recv.reshape(-1)
+        ranks = local_lookup(keys[0], jax.tree.map(lambda a: a[0], root),
+                             jax.tree.map(lambda a: a[0], leaves),
+                             elo[0], ehi[0], rq)
+        ranks = jnp.minimum(ranks, valid[0]) + me * cap   # globalize
+        ranks = ranks.reshape(n_shards, C)
+        # return to origin
+        back = jax.lax.all_to_all(ranks, axis, 0, 0, tiled=False)
+        bpos = jax.lax.all_to_all(rpos, axis, 0, 0, tiled=False)
+        # scatter answers to their origin slots; padding (pos -1) is routed
+        # out of range and dropped. With a finite capacity_factor, queries
+        # beyond the budget keep rank -1 (caller retries).
+        flat_pos = bpos.reshape(-1)
+        flat_val = back.reshape(-1)
+        fill = jnp.full((B,), -1, ranks.dtype) if capacity_factor is not None \
+            else jnp.zeros((B,), ranks.dtype)
+        return fill.at[
+            jnp.where(flat_pos >= 0, flat_pos, B)].set(flat_val, mode="drop")
+
+    specs = dict(
+        splits=P(), keys=P(axis), valid=P(axis), root=P(axis),
+        leaves=P(axis), elo=P(axis), ehi=P(axis), q=P(axis))
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(specs["splits"], specs["keys"], specs["valid"],
+                  specs["root"], specs["leaves"], specs["elo"], specs["ehi"],
+                  specs["q"]),
+        out_specs=P(axis), check_vma=True)
+
+    @jax.jit
+    def lookup(q_global: Array) -> Array:
+        return fn(index.splits, index.keys, index.valid, index.root,
+                  index.leaves, index.err_lo, index.err_hi, q_global)
+
+    return lookup
+
+
+def _cumcount(ids: Array, n_bins: int) -> Array:
+    """Occurrence rank of each element among equal ids (stable)."""
+    n = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    start = jnp.searchsorted(sorted_ids, jnp.arange(n_bins))
+    ranks_sorted = jnp.arange(n, dtype=jnp.int32) - start[sorted_ids].astype(jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)

@@ -1,0 +1,122 @@
+"""PGM-style baseline (paper competitor #4): piecewise-linear model index
+with a worst-case error bound per segment, built bottom-up.
+
+Segments come from the streaming shrinking-cone PLA (O(n), single pass,
+NumPy on host — matching the reference PGM's build style); the recursion
+indexes segment start keys with the same construction until one segment
+remains. Lookup descends the hierarchy with eps-bounded searches, then
+binary-searches the final +-eps window (jitted, vectorized).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rmi import bounded_search, verified_search
+
+Array = jax.Array
+
+
+def _shrinking_cone(keys: np.ndarray, eps: int):
+    """Greedy PLA: (starts, slopes) s.t. the line through (keys[start],
+    start) with the cone slope predicts every member rank within +-eps."""
+    n = keys.size
+    starts, slopes = [0], []
+    lo, hi = -np.inf, np.inf          # slope cone
+    x0, y0 = keys[0], 0
+    for i in range(1, n):
+        x = keys[i]
+        if x == x0:
+            continue
+        dx = x - x0
+        s_lo, s_hi = (i - y0 - eps) / dx, (i - y0 + eps) / dx
+        nlo, nhi = max(lo, s_lo), min(hi, s_hi)
+        if nlo > nhi:                 # cone collapsed -> close segment
+            slopes.append(_mid(lo, hi))
+            starts.append(i)
+            x0, y0 = x, i
+            lo, hi = -np.inf, np.inf
+        else:
+            lo, hi = nlo, nhi
+    slopes.append(_mid(lo, hi))
+    return np.asarray(starts, np.int64), np.asarray(slopes)
+
+
+def _mid(lo: float, hi: float) -> float:
+    if not np.isfinite(lo) and not np.isfinite(hi):
+        return 0.0                    # single-point segment
+    if not np.isfinite(lo):
+        return hi
+    if not np.isfinite(hi):
+        return lo
+    return 0.5 * (lo + hi)
+
+
+@dataclass
+class PGMIndex:
+    keys: Array
+    eps: int
+    # per level (leaf level first): segment start keys, slopes, intercepts
+    seg_keys: list
+    seg_slope: list
+    seg_icept: list
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.seg_keys[0].shape[0])
+
+
+def build_pgm(keys: Array, eps: int = 64) -> PGMIndex:
+    keys_np = np.asarray(keys, np.float64)
+    seg_keys, seg_slope, seg_icept = [], [], []
+    cur = keys_np
+    while True:
+        starts, slope = _shrinking_cone(cur, eps)
+        icept = starts - slope * cur[starts]     # line through (key[s], s)
+        seg_keys.append(jnp.asarray(cur[starts]))
+        seg_slope.append(jnp.asarray(slope))
+        seg_icept.append(jnp.asarray(icept))
+        if starts.size <= 1:
+            break
+        cur = cur[starts]
+    return PGMIndex(keys=jnp.asarray(keys_np), eps=eps, seg_keys=seg_keys,
+                    seg_slope=seg_slope, seg_icept=seg_icept)
+
+
+def lookup(index: PGMIndex, queries: Array) -> Array:
+    return _pgm_lookup(index.keys, tuple(index.seg_keys),
+                       tuple(index.seg_slope), tuple(index.seg_icept),
+                       index.eps, jnp.asarray(queries, jnp.float64))
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def _pgm_lookup(keys, seg_keys: tuple, seg_slope: tuple, seg_icept: tuple,
+                eps: int, queries):
+    n = keys.shape[0]
+    # Descend from the root level (last list entry) to the leaf level.
+    seg = jnp.zeros(queries.shape, jnp.int32)
+    for lvl in range(len(seg_keys) - 1, 0, -1):
+        sk, sl, si = seg_keys[lvl], seg_slope[lvl], seg_icept[lvl]
+        pred = sl[seg] * queries + si[seg]
+        m = seg_keys[lvl - 1].shape[0]
+        lo = jnp.clip(pred.astype(jnp.int32) - eps, 0, m - 1)
+        hi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, m)
+        # rank among next level's start keys: last start <= q
+        pos = bounded_search(seg_keys[lvl - 1], queries, lo, hi)
+        nxt = seg_keys[lvl - 1][jnp.clip(pos, 0, m - 1)]
+        seg = jnp.where((pos < m) & (nxt == queries), pos,
+                        jnp.maximum(pos - 1, 0)).astype(jnp.int32)
+    pred = seg_slope[0][seg] * queries + seg_icept[0][seg]
+    lo = jnp.clip(pred.astype(jnp.int32) - eps, 0, n - 1)
+    hi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, n)
+    # duplicate-heavy keys can exceed the cone bound (duplicates carry no
+    # slope constraint); the verified fallback keeps lookups exact
+    return verified_search(keys, queries, lo, hi)

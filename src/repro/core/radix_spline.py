@@ -1,0 +1,121 @@
+"""RadixSpline baseline (paper competitor #5): a single-pass error-bounded
+greedy spline + a radix table over key prefixes.
+
+Build is one pass (GreedySplineCorridor, host NumPy) — the paper's RS builds
+fastest among learned indices but pays lookup cost / size, which our
+benchmarks reproduce. Lookup: radix bucket -> binary search spline points ->
+linear interpolation -> eps-bounded search (jitted, vectorized).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rmi import bounded_search, verified_search
+
+Array = jax.Array
+
+
+def _greedy_spline(keys: np.ndarray, eps: int) -> np.ndarray:
+    """GreedySplineCorridor (Neumann/Michel; as in RadixSpline): indices of
+    spline knots such that chord interpolation between consecutive knots is
+    within +-eps of the true rank.
+
+    Invariant: the cone [lo, hi] from the current knot (xb, yb) contains
+    every slope that passes within +-eps of all points seen since the knot.
+    A point whose exact slope lies inside the cone may safely *end* the
+    segment (the chord hits it exactly and stays within the corridor); when
+    it falls outside, the previous point becomes a knot."""
+    n = keys.size
+    pts = [0]
+    lo_s, hi_s = -np.inf, np.inf
+    xb, yb = keys[0], 0
+    prev = 0
+    for i in range(1, n):
+        x = keys[i]
+        if x == xb:
+            continue
+        s = (i - yb) / (x - xb)
+        if s < lo_s or s > hi_s:
+            # knot at the last in-corridor point, restart cone from it
+            pts.append(prev)
+            xb, yb = keys[prev], prev
+            lo_s, hi_s = -np.inf, np.inf
+            if x == xb:
+                continue
+        dx = x - xb
+        lo_s = max(lo_s, (i - eps - yb) / dx)
+        hi_s = min(hi_s, (i + eps - yb) / dx)
+        prev = i
+    pts.append(n - 1)
+    return np.unique(np.asarray(pts, np.int64))
+
+
+@dataclass
+class RSIndex:
+    keys: Array
+    eps: int
+    spline_x: Array      # (S,) spline point keys
+    spline_y: Array      # (S,) their ranks
+    radix_bits: int
+    radix_table: Array   # (2**bits + 1,) first spline point per radix bucket
+    key_min: float
+    key_max: float
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def size_bytes(self) -> int:
+        return int(self.spline_x.size * 16 + self.radix_table.size * 4)
+
+
+def build_rs(keys: Array, eps: int = 32, radix_bits: int = 12) -> RSIndex:
+    keys_np = np.asarray(keys, np.float64)
+    pts = _greedy_spline(keys_np, eps)
+    sx, sy = keys_np[pts], pts.astype(np.float64)
+    kmin, kmax = float(keys_np[0]), float(keys_np[-1])
+    span = max(kmax - kmin, np.finfo(np.float64).tiny)
+    # radix table over the leading bits of the normalized key
+    buckets = ((sx - kmin) / span * ((1 << radix_bits) - 1)).astype(np.int64)
+    table = np.searchsorted(buckets, np.arange((1 << radix_bits) + 1))
+    return RSIndex(keys=jnp.asarray(keys_np), eps=eps,
+                   spline_x=jnp.asarray(sx), spline_y=jnp.asarray(sy),
+                   radix_bits=radix_bits,
+                   radix_table=jnp.asarray(table, jnp.int32),
+                   key_min=kmin, key_max=kmax)
+
+
+def lookup(index: RSIndex, queries: Array) -> Array:
+    return _rs_lookup(index.keys, index.spline_x, index.spline_y,
+                      index.radix_table, index.radix_bits, index.eps,
+                      index.key_min, index.key_max,
+                      jnp.asarray(queries, jnp.float64))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("radix_bits", "eps", "kmin", "kmax"))
+def _rs_lookup(keys, sx, sy, table, radix_bits: int, eps: int,
+               kmin: float, kmax: float, queries):
+    n = keys.shape[0]
+    S = sx.shape[0]
+    span = max(kmax - kmin, np.finfo(np.float64).tiny)
+    b = jnp.clip(((queries - kmin) / span * ((1 << radix_bits) - 1))
+                 .astype(jnp.int32), 0, (1 << radix_bits) - 1)
+    lo = table[b]
+    hi = jnp.minimum(table[b + 1] + 1, S)
+    # right spline point: first spline key >= q, within [lo, hi)
+    r = bounded_search(sx, queries, lo, hi)
+    r = jnp.clip(r, 1, S - 1)
+    x0, x1 = sx[r - 1], sx[r]
+    y0, y1 = sy[r - 1], sy[r]
+    t = jnp.where(x1 > x0, (queries - x0) / (x1 - x0), 0.0)
+    pred = y0 + t * (y1 - y0)
+    plo = jnp.clip(pred.astype(jnp.int32) - eps, 0, n - 1)
+    phi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, n)
+    return verified_search(keys, queries, plo, phi)

@@ -1,0 +1,390 @@
+"""Two-layer RMI (Kraska et al. 2018) with optional agile model reuse
+(paper §3 "Learned indices with agile model reuse", Fig. 3).
+
+Variants (matching the paper's experiment roster):
+  RMI        root + leaves linear, fresh fits          build_rmi(kind="linear")
+  RMI-NN     root linear, leaves 1x4 MLP, fresh        build_rmi(kind="mlp")
+  RMI-MR     linear leaves, pool reuse                 build_rmi(..., pool=linear_pool)
+  RMI-NN-MR  MLP leaves, pool reuse                    build_rmi(..., pool=mlp_pool)
+
+TPU adaptation: every per-leaf operation is batched across ALL leaves —
+segment closed-form fits, per-leaf similarity histograms, pool selection,
+affine adaptation, residual bounds — so a build is a handful of jit calls
+regardless of leaf count, instead of the paper's per-leaf Python loop.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import models
+from .adapt import DomainSpec, adapt_linear, adapt_mlp
+from .bounds import reuse_err_bounds
+from .reuse import ModelPool, select_from_pool_batch
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Batched per-leaf machinery (shared with RMRT).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def leaf_stats(keys: Array, buckets: Array, n_leaves: int):
+    """Per-leaf (count, key_min, key_max, pos_min, pos_max) via segment ops."""
+    n = keys.shape[0]
+    pos = jnp.arange(n, dtype=jnp.float64)
+    ones = jnp.ones((n,), jnp.float64)
+    count = jax.ops.segment_sum(ones, buckets, n_leaves)
+    kmin = jax.ops.segment_min(keys, buckets, n_leaves)
+    kmax = jax.ops.segment_max(keys, buckets, n_leaves)
+    pmin = jax.ops.segment_min(pos, buckets, n_leaves)
+    pmax = jax.ops.segment_max(pos, buckets, n_leaves)
+    empty = count == 0
+    kmin = jnp.where(empty, 0.0, kmin)
+    kmax = jnp.where(empty, 1.0, kmax)
+    pmin = jnp.where(empty, 0.0, pmin)
+    pmax = jnp.where(empty, 0.0, pmax)
+    return count, kmin, kmax, pmin, pmax
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves", "m"))
+def leaf_histograms(keys: Array, buckets: Array, n_leaves: int, m: int,
+                    kmin: Array, kmax: Array) -> Array:
+    """(n_leaves, m) leaf-normalized similarity histograms, one bincount."""
+    span = jnp.maximum(kmax - kmin, jnp.finfo(jnp.float64).tiny)
+    x = (keys - kmin[buckets]) / span[buckets]
+    b = jnp.clip(jnp.ceil(x * m).astype(jnp.int32) - 1, 0, m - 1)
+    flat = buckets * m + b
+    counts = jnp.zeros((n_leaves * m,), jnp.float64).at[flat].add(1.0)
+    counts = counts.reshape(n_leaves, m)
+    tot = jnp.maximum(counts.sum(1, keepdims=True), 1.0)
+    return counts / tot
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def segment_linear_fit(keys: Array, buckets: Array, n_leaves: int):
+    """Closed-form least-squares (pos on key) per leaf, all leaves at once.
+    jnp oracle for the Pallas kernel in ``repro.kernels.linfit``."""
+    n = keys.shape[0]
+    x = keys.astype(jnp.float64)
+    y = jnp.arange(n, dtype=jnp.float64)
+    seg = lambda v: jax.ops.segment_sum(v, buckets, n_leaves)
+    cnt, sx, sy = seg(jnp.ones_like(x)), seg(x), seg(y)
+    sxx, sxy = seg(x * x), seg(x * y)
+    denom = cnt * sxx - sx * sx
+    a = jnp.where(jnp.abs(denom) > 1e-30, (cnt * sxy - sx * sy) / denom, 0.0)
+    b = jnp.where(cnt > 0, (sy - a * sx) / jnp.maximum(cnt, 1.0), 0.0)
+    return models.LinearParams(a=a, b=b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def segment_residual_bounds(pred: Array, buckets: Array, n_leaves: int):
+    """Per-leaf (min, max) of (true position - prediction), batched."""
+    n = pred.shape[0]
+    r = jnp.arange(n, dtype=jnp.float64) - pred
+    lo = jax.ops.segment_min(r, buckets, n_leaves)
+    hi = jax.ops.segment_max(r, buckets, n_leaves)
+    cnt = jax.ops.segment_sum(jnp.ones((n,)), buckets, n_leaves)
+    lo = jnp.where(cnt > 0, lo, 0.0)
+    hi = jnp.where(cnt > 0, hi, 0.0)
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# The index structure.
+# ---------------------------------------------------------------------------
+@dataclass
+class RMIIndex:
+    keys: Array                      # (n,) sorted
+    root_kind: str                   # "linear" | "mlp"
+    root: models.LinearParams | models.MLPParams
+    leaf_kind: str
+    leaves: models.LinearParams | models.MLPParams   # stacked (B, ...)
+    err_lo: Array                    # (B,)
+    err_hi: Array                    # (B,)
+    n_leaves: int
+    # provenance / reuse accounting (build-time diagnostics)
+    reused_mask: Array               # (B,) bool
+    leaf_sim: Array                  # (B,) build-time similarity (Lemma 4.1 input)
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def reuse_fraction(self) -> float:
+        return float(jnp.mean(self.reused_mask.astype(jnp.float64)))
+
+
+def _root_predict(kind, params, keys):
+    return (models.linear_predict if kind == "linear"
+            else models.mlp_predict)(params, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "n_leaves", "n"))
+def root_buckets(kind: str, params, keys: Array, n_leaves: int, n: int) -> Array:
+    pred = _root_predict(kind, params, keys)
+    return jnp.clip((pred * n_leaves / n).astype(jnp.int32), 0, n_leaves - 1)
+
+
+def build_rmi(
+    keys: Array,
+    n_leaves: int = 1024,
+    kind: str = "linear",
+    root_kind: str = "linear",
+    pool: Optional[ModelPool] = None,
+    paper_bounds: bool = False,
+    train_steps: int = 300,
+    root_subsample: int = 1 << 16,
+    seed: int = 0,
+) -> RMIIndex:
+    """Build a two-layer RMI over a sorted key array.
+
+    With ``pool`` given, every leaf first attempts agile model reuse
+    (batched Algorithm 1 across all leaves); only missing leaves are trained.
+    ``paper_bounds`` selects Theorem 3.3 bounds verbatim; the default also
+    measures residuals (sound and tighter; one batched predict).
+    """
+    keys = jnp.asarray(keys, jnp.float64)
+    n = keys.shape[0]
+    pos = jnp.arange(n, dtype=jnp.float64)
+
+    # ---- root -----------------------------------------------------------
+    if root_kind == "linear":
+        root = models.linear_fit(keys, pos)
+    else:
+        stride = max(1, n // root_subsample)
+        sub, subpos = keys[::stride], pos[::stride]
+        norm = (sub - keys[0]) / (keys[-1] - keys[0])
+        p = models.mlp_train(jax.random.PRNGKey(seed), norm, subpos,
+                             steps=train_steps)
+        span = keys[-1] - keys[0]
+        root = models.MLPParams(w1=p.w1 / span, b1=p.b1 - p.w1 * keys[0] / span,
+                                w2=p.w2, b2=p.b2)
+    buckets = root_buckets(root_kind, root, keys, n_leaves, n)
+
+    # ---- per-leaf stats + reuse selection --------------------------------
+    count, kmin, kmax, pmin, pmax = leaf_stats(keys, buckets, n_leaves)
+    if pool is not None:
+        if pool.sel_a is None:
+            pool._refresh_tables()
+        hists = leaf_histograms(keys, buckets, n_leaves, pool.m, kmin, kmax)
+        sel = select_from_pool_batch(pool.sel_a, pool.sel_ps, hists,
+                                     jnp.float32(pool.eps))
+        found = sel.found & (count > 1)
+        src = jax.tree.map(lambda a: a[sel.index], pool.domains)
+        tgt = DomainSpec(x_start=kmin, x_end=jnp.where(kmax > kmin, kmax, kmin + 1.0),
+                         y_start=pmin, y_end=jnp.maximum(pmax, pmin + 1.0))
+        pool_params = jax.tree.map(lambda a: a[sel.index], pool.params)
+        adapt = adapt_linear if pool.kind == "linear" else adapt_mlp
+        adapted = jax.vmap(adapt)(pool_params, src, tgt)
+        s_dy = (tgt.y_end - tgt.y_start) / (src.y_end - src.y_start)
+        thm_lo, thm_hi = reuse_err_bounds(pool.err_lo[sel.index],
+                                          pool.err_hi[sel.index],
+                                          sel.dist, count, s_dy)
+    else:
+        found = jnp.zeros((n_leaves,), bool)
+
+    # ---- fresh fits for missing leaves (batched over all leaves) ---------
+    if kind == "linear":
+        fresh = segment_linear_fit(keys, buckets, n_leaves)
+    else:
+        fresh = _batched_leaf_mlp(keys, buckets, n_leaves, count, kmin, kmax,
+                                  pmin, train_steps, seed,
+                                  skip_mask=found if pool is not None else None)
+
+    # ---- merge reused + fresh, derive bounds ------------------------------
+    if pool is not None and pool.kind == kind:
+        merge = lambda a, f: jnp.where(
+            jnp.expand_dims(found, tuple(range(1, a.ndim))), a, f)
+        leaves = jax.tree.map(merge, adapted, fresh)
+    else:
+        leaves = fresh
+        found = jnp.zeros((n_leaves,), bool)
+
+    pred = _leaf_predict_all(kind, leaves, keys, buckets)
+    meas_lo, meas_hi = segment_residual_bounds(pred, buckets, n_leaves)
+    if pool is not None and paper_bounds:
+        err_lo = jnp.where(found, thm_lo, meas_lo)
+        err_hi = jnp.where(found, thm_hi, meas_hi)
+    else:
+        err_lo, err_hi = meas_lo, meas_hi
+    # Empty leaves are reachable by out-of-distribution queries: give them a
+    # sound full-array window (plain binary search fallback).
+    err_lo = jnp.where(count > 0, err_lo, -float(n))
+    err_hi = jnp.where(count > 0, err_hi, float(n))
+
+    leaf_sim = jnp.where(found, 1.0 - sel.dist, 1.0) if pool is not None \
+        else jnp.ones((n_leaves,), jnp.float64)
+
+    return RMIIndex(keys=keys, root_kind=root_kind, root=root, leaf_kind=kind,
+                    leaves=leaves, err_lo=err_lo, err_hi=err_hi,
+                    n_leaves=n_leaves, reused_mask=found, leaf_sim=leaf_sim)
+
+
+def _batched_leaf_mlp(keys, buckets, n_leaves, count, kmin, kmax, pmin,
+                      train_steps: int, seed: int, skip_mask=None):
+    """Train leaf MLPs, batched. With ``skip_mask`` (reused leaves), only the
+    *missing* leaves are compacted into the training batch — this is where
+    agile reuse actually saves build time. Host wrapper: padding capacity and
+    compaction are data-dependent, so they are materialized here and passed
+    static to the jitted trainer (sizes rounded to powers of two to keep the
+    jit cache small)."""
+    import numpy as np
+
+    def _pow2(v):
+        return 1 << max(int(v) - 1, 1).bit_length()
+
+    if skip_mask is None:
+        miss = np.arange(n_leaves)
+    else:
+        miss = np.where(~np.asarray(skip_mask))[0]
+    zero = jax.tree.map(
+        lambda a: jnp.zeros((n_leaves,) + a.shape, jnp.float64),
+        models.mlp_init(jax.random.PRNGKey(0)))
+    if miss.size == 0:
+        return zero
+    K = _pow2(miss.size)
+    # Dense leaves are *subsampled* to TRAIN_CAP points for training — a
+    # 13-parameter model doesn't need 30k points, and error bounds are
+    # measured on the full data afterwards, so correctness is unaffected.
+    # This bounds the padded batch at (K, TRAIN_CAP) regardless of skew.
+    TRAIN_CAP = 1024
+    cap = min(_pow2(max(int(jnp.max(count[miss])), 2)), TRAIN_CAP)
+    # Remap buckets: missing leaf -> compact slot; others -> dump slot K.
+    slot_of = np.full((n_leaves,), K, np.int32)
+    slot_of[miss] = np.arange(miss.size, dtype=np.int32)
+    take = lambda a: jnp.concatenate(
+        [a[miss], jnp.zeros((K + 1 - miss.size,), a.dtype)])
+    p = _padded_leaf_mlp_train(
+        keys, jnp.asarray(slot_of)[buckets], K + 1, cap,
+        take(kmin), take(jnp.where(kmax > kmin, kmax, kmin + 1.0)),
+        take(pmin), take(count), train_steps, seed)
+    scat = lambda z, t: z.at[jnp.asarray(miss)].set(t[:miss.size])
+    return jax.tree.map(scat, zero, p)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_leaves", "cap", "train_steps", "seed"))
+def _padded_leaf_mlp_train(keys, buckets, n_leaves: int, cap: int,
+                           kmin, kmax, pmin, count, train_steps: int,
+                           seed: int):
+    n = keys.shape[0]
+    pos = jnp.arange(n, dtype=jnp.float64)
+    # Exact within-leaf rank (cumcount) — correct even for non-monotone MLP
+    # roots where a leaf's members are not a contiguous key range.
+    order = jnp.argsort(buckets, stable=True)
+    sb = buckets[order]
+    run_start = jnp.searchsorted(sb, jnp.arange(n_leaves))
+    offs_sorted = jnp.arange(n, dtype=jnp.int32) - run_start[sb].astype(jnp.int32)
+    offs = jnp.zeros((n,), jnp.int32).at[order].set(offs_sorted)
+    # Decimate leaves bigger than cap: slot = offs * cap / count (collisions
+    # overwrite — still ~cap near-uniformly spaced training points).
+    cnt_b = jnp.maximum(count[buckets], 1.0)
+    slot = jnp.where(cnt_b > cap,
+                     (offs.astype(jnp.float64) * cap / cnt_b).astype(jnp.int32),
+                     offs)
+    flat = buckets * cap + jnp.clip(slot, 0, cap - 1)
+    span = jnp.where(kmax > kmin, kmax - kmin, 1.0)  # single-key leaf guard
+    xn = (keys - kmin[buckets]) / span[buckets]              # leaf-normalized
+    X = jnp.zeros((n_leaves * cap,), jnp.float64).at[flat].set(xn)
+    Y = jnp.zeros((n_leaves * cap,), jnp.float64).at[flat].set(pos)
+    M = jnp.zeros((n_leaves * cap,), jnp.float64).at[flat].set(1.0)
+    X, Y, M = (v.reshape(n_leaves, cap) for v in (X, Y, M))
+    rng = jax.random.split(jax.random.PRNGKey(seed), n_leaves)
+    p = jax.vmap(lambda k, x, y, m: models.mlp_train(
+        k, x, y, steps=train_steps, mask=m))(rng, X, Y, M)
+    # Fold leaf normalization so leaves consume raw keys like pool models do.
+    return models.MLPParams(
+        w1=p.w1 / span[:, None],
+        b1=p.b1 - p.w1 * (kmin / span)[:, None],
+        w2=p.w2, b2=p.b2)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _leaf_predict_all(kind: str, leaves, keys: Array, buckets: Array) -> Array:
+    """Predict every key with its own leaf's model (gather params, elementwise)."""
+    p = jax.tree.map(lambda a: a[buckets], leaves)
+    if kind == "linear":
+        return models.linear_predict(p, keys)
+    h = jax.nn.relu(keys[:, None] * p.w1 + p.b1)
+    return jnp.sum(h * p.w2, -1) + p.b2
+
+
+# ---------------------------------------------------------------------------
+# Lookup: root -> leaf -> bounded branchless binary search.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("root_kind", "leaf_kind",
+                                             "n_leaves", "n"))
+def rmi_lookup(root_kind: str, root, leaf_kind: str, leaves, err_lo, err_hi,
+               keys: Array, queries: Array, n_leaves: int, n: int) -> Array:
+    """Positions of ``queries`` in ``keys`` (first index with key >= query).
+
+    jnp oracle for the Pallas serving kernel (``repro.kernels.lookup``):
+    predict, clamp the window to the leaf's error bounds, then a fixed-
+    iteration branchless binary search inside the window.
+    """
+    b = root_buckets(root_kind, root, queries, n_leaves, n)
+    p = jax.tree.map(lambda a: a[b], leaves)
+    if leaf_kind == "linear":
+        pred = models.linear_predict(p, queries)
+    else:
+        h = jax.nn.relu(queries[:, None] * p.w1 + p.b1)
+        pred = jnp.sum(h * p.w2, -1) + p.b2
+    lo = jnp.clip(jnp.floor(pred + err_lo[b]), 0, n - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + err_hi[b]) + 1, 1, n).astype(jnp.int32)
+    return verified_search(keys, queries, lo, hi)
+
+
+@jax.jit
+def verified_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
+    """Bounded search + seam verification. Error bounds are measured on the
+    indexed keys, so *member* lookups always land; a non-member query routed
+    near a leaf boundary can fall outside its leaf's window. Verify the
+    left-boundary invariant and re-search the full array for the (rare)
+    violations — total lookups stay sound for any query distribution."""
+    n = keys.shape[0]
+    r = bounded_search(keys, queries, lo, hi)
+    rc = jnp.clip(r, 0, n - 1)
+    valid = ((r == 0) | (keys[jnp.clip(r - 1, 0, n - 1)] < queries)) & \
+            ((r == n) | (keys[rc] >= queries))
+
+    def _fallback(_):
+        full = bounded_search(keys, queries, jnp.zeros_like(lo),
+                              jnp.full_like(hi, n))
+        return jnp.where(valid, r, full)
+
+    return jax.lax.cond(jnp.all(valid), lambda _: r, _fallback, None)
+
+
+@jax.jit
+def bounded_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
+    """Branchless binary search of each query in keys[lo:hi] (left boundary:
+    first position with keys[p] >= q). Fixed iteration count = ceil(log2 n)
+    so it vectorizes with no data-dependent control flow."""
+    n = keys.shape[0]
+    import math as _math
+    iters = _math.ceil(_math.log2(max(n, 2))) + 1
+
+    def body(_, lh):
+        lo, hi = lh
+        active = hi - lo > 0
+        mid = (lo + hi) // 2
+        below = keys[jnp.clip(mid, 0, n - 1)] < queries
+        new_lo = jnp.where(below, mid + 1, lo)
+        new_hi = jnp.where(below, hi, mid)
+        return (jnp.where(active, new_lo, lo), jnp.where(active, new_hi, hi))
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo
+
+
+def lookup(index: RMIIndex, queries: Array) -> Array:
+    return rmi_lookup(index.root_kind, index.root, index.leaf_kind,
+                      index.leaves, index.err_lo, index.err_hi, index.keys,
+                      jnp.asarray(queries, jnp.float64), index.n_leaves,
+                      index.n)

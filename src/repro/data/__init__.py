@@ -1,0 +1,2 @@
+"""Data pipeline with learned-index integration (the paper's technique as a
+first-class framework feature — DESIGN.md §3)."""

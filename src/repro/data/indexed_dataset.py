@@ -1,0 +1,89 @@
+"""IndexedDataset: sample-ID -> (shard, offset) resolution served by the
+paper's agile-reuse learned index.
+
+This is where "A Lazy Approach for Efficient Index Learning" plugs into the
+training framework: streaming corpora arrive as shards of (sorted) sample
+keys (document ids, hash keys); resolving a sample key to its storage
+location is a learned-index lookup. New shards are indexed by *reusing*
+pool models (build cost ~histogram + selection instead of training), and
+in-place ingestion uses Lemma 4.1 to decide when a leaf model must be
+rebuilt — exactly the paper's update path, embedded in a data pipeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reuse as reuse_mod
+from repro.core import rmi as rmi_mod
+from repro.core import synth
+from repro.core.updates import DynamicRMI
+
+
+@dataclass
+class ShardInfo:
+    shard_id: int
+    keys: np.ndarray              # sorted sample keys
+    index: object                 # RMIIndex
+    reuse_fraction: float
+
+
+@dataclass
+class IndexedDataset:
+    """Sharded corpus with one learned index per shard + routing table."""
+    pool: reuse_mod.ModelPool
+    eps: float = 0.9
+    n_leaves: int = 256
+    shards: list = field(default_factory=list)
+    boundaries: list = field(default_factory=list)   # max key per shard
+
+    @classmethod
+    def create(cls, eps: float = 0.9, kind: str = "linear",
+               pool: reuse_mod.ModelPool | None = None, **kw):
+        if pool is None:
+            pool = reuse_mod.build_pool(synth.generate_pool(eps), kind=kind)
+        return cls(pool=pool, eps=eps, **kw)
+
+    # -- ingest ------------------------------------------------------------
+    def add_shard(self, keys: np.ndarray) -> ShardInfo:
+        """Index a new shard via agile model reuse (the paper's build path)."""
+        keys = np.sort(np.asarray(keys, np.float64))
+        idx = rmi_mod.build_rmi(jnp.asarray(keys), n_leaves=self.n_leaves,
+                                kind=self.pool.kind, pool=self.pool)
+        info = ShardInfo(shard_id=len(self.shards), keys=keys, index=idx,
+                         reuse_fraction=idx.reuse_fraction)
+        self.shards.append(info)
+        self.boundaries.append(keys[-1])
+        return info
+
+    # -- resolve -------------------------------------------------------------
+    def locate(self, sample_keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(shard_id, offset) per key — the pipeline's address resolution."""
+        q = np.asarray(sample_keys, np.float64)
+        shard_of = np.searchsorted(np.asarray(self.boundaries), q, side="left")
+        shard_of = np.clip(shard_of, 0, len(self.shards) - 1)
+        offsets = np.empty(q.shape, np.int64)
+        for sid in np.unique(shard_of):
+            mask = shard_of == sid
+            offsets[mask] = np.asarray(
+                rmi_mod.lookup(self.shards[sid].index, jnp.asarray(q[mask])))
+        return shard_of, offsets
+
+    @property
+    def mean_reuse(self) -> float:
+        return float(np.mean([s.reuse_fraction for s in self.shards])) \
+            if self.shards else 0.0
+
+
+def synthetic_token_stream(key: int, vocab: int, batch: int, seq: int):
+    """Deterministic synthetic LM batches (zipf-ish unigram) — the loader
+    used by examples/train_lm.py on CPU."""
+    rng = np.random.default_rng(key)
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks ** 1.1
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq + 1), p=probs)
+        yield toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blockwise causal flash attention (forward).
+
+This is the top §Perf lever identified by the roofline loop
+(EXPERIMENTS.md): the jnp blockwise attention materializes the f32
+(B, H, Sq, kv_block) score/exp tensors in HBM several times per block —
+the dominant memory term of most train/prefill cells. This kernel keeps
+the whole online-softmax update in VMEM: per grid cell it loads a
+(BQ, dh) query tile and one (BK, dh) KV tile, runs QK^T -> masked exp ->
+accumulate on the MXU/VPU, and only the (BQ, dh) output ever returns to
+HBM.
+
+Grid: (batch*heads, Sq/BQ, Skv/BK) with the KV dim innermost; m/l/acc
+live in VMEM scratch across the KV iterations of one (bh, q) cell.
+
+Validated in interpret mode against the production jnp path
+(models.layers.flash_attention) — which is itself the oracle used by the
+LM substrate — over shape sweeps in tests/test_kernels.py. On this CPU
+container the kernel cannot be lowered for real (no TPU), so the dry-run
+cells keep the jnp path; the expected effect on the memory term is
+quantified in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ, BK = 128, 128
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, sq: int, skv: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (BQ, dh)
+    k = k_ref[0].astype(jnp.float32)                    # (BK, dh)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (BQ, BK)
+    q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    mask = k_pos < skv
+    if causal:
+        mask &= k_pos <= q_pos
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, H, dh) (GQA pre-broadcast by caller).
+
+    Returns (B, Sq, H, dh) in q's dtype. Padding to (BQ, BK) multiples is
+    handled here; padded KV positions are masked inside the kernel.
+    """
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / float(dh) ** 0.5
+    sq_pad = -(-Sq // BQ) * BQ
+    sk_pad = -(-Skv // BK) * BK
+
+    def prep(x, s_pad):
+        x = jnp.pad(x, ((0, 0), (0, s_pad - x.shape[1]), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(B * H, s_pad, dh)
+
+    qp, kp, vp = prep(q, sq_pad), prep(k, sk_pad), prep(v, sk_pad)
+
+    kern = functools.partial(_flash_kernel, sq=Sq, skv=Skv, causal=causal,
+                             scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, sq_pad // BQ, sk_pad // BK),
+        in_specs=[
+            pl.BlockSpec((1, BQ, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sq_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, 1), jnp.float32),    # running max m
+            pltpu.VMEM((BQ, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((BQ, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out.reshape(B, H, sq_pad, dh).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

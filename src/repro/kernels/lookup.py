@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused learned-index lookup — the serving hot path.
+
+One kernel per query tile fuses the three stages the paper executes per
+query (leaf-model predict -> error-bound window -> bounded binary search):
+
+  1. tiny-MLP / linear predict (T-wide vectorized, 4-neuron MXU-free math),
+  2. window clamp from the leaf's error bounds,
+  3. branchless fixed-iteration binary search against the key array resident
+     in VMEM (dynamic vectorized gather within VMEM).
+
+Memory layout: the per-device key shard is a single VMEM block (f32; up to
+~3M keys in 12 MiB of a 16 MiB v5e VMEM). Indexes larger than one shard are
+split by the distributed layer (core.distributed) across chips, which is the
+production topology anyway. Leaf-model params arrive pre-gathered per query
+(an XLA gather feeding the kernel), so the kernel itself is gather-free on
+its parameter side.
+
+Semantics match core.rmi.bounded_search: left boundary, clamped window; the
+seam-fallback verification stays in the ops wrapper (XLA), keeping the
+kernel single-pass.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TQ = 1024      # queries per grid step
+H = 4          # paper's hidden width
+
+
+def _lookup_kernel(q_ref, w1_ref, b1_ref, w2_ref, b2_ref, elo_ref, ehi_ref,
+                   keys_ref, out_ref, *, n_keys: int, iters: int,
+                   linear: bool):
+    q = q_ref[...].reshape(TQ)
+    elo = elo_ref[...].reshape(TQ)
+    ehi = ehi_ref[...].reshape(TQ)
+
+    if linear:
+        a = w1_ref[...].reshape(TQ, H)[:, 0]
+        c = b2_ref[...].reshape(TQ)
+        pred = a * q + c
+    else:
+        w1 = w1_ref[...].reshape(TQ, H)
+        b1 = b1_ref[...].reshape(TQ, H)
+        w2 = w2_ref[...].reshape(TQ, H)
+        c = b2_ref[...].reshape(TQ)
+        h = jnp.maximum(q[:, None] * w1 + b1, 0.0)
+        pred = jnp.sum(h * w2, axis=1) + c
+
+    lo = jnp.clip(jnp.floor(pred + elo), 0, n_keys - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + ehi) + 1.0, 1, n_keys).astype(jnp.int32)
+
+    keys = keys_ref[...].reshape(-1)            # full VMEM-resident shard
+
+    def body(_, lh):
+        lo, hi = lh
+        active = hi - lo > 0
+        mid = (lo + hi) // 2
+        kv = jnp.take(keys, jnp.clip(mid, 0, n_keys - 1))
+        below = kv < q
+        nlo = jnp.where(below, mid + 1, lo)
+        nhi = jnp.where(below, hi, mid)
+        return (jnp.where(active, nlo, lo), jnp.where(active, nhi, hi))
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    out_ref[...] = lo.reshape(out_ref.shape)
+
+
+def lookup_pallas(queries, w1, b1, w2, b2, err_lo, err_hi, keys, *,
+                  linear: bool = False, interpret: bool = True):
+    """Positions (left boundary) of ``queries`` in ``keys``.
+
+    queries/err_lo/err_hi: (Q,) f32, per-query (pre-gathered leaf bounds);
+    w1/b1/w2: (Q, H) f32 (ignored-except-w1 row 0 when linear); b2: (Q,) f32;
+    keys: (S,) f32 sorted.
+    """
+    Q = queries.shape[0]
+    S = keys.shape[0]
+    q_pad = -(-Q // TQ) * TQ
+    s_pad = -(-S // 128) * 128
+    iters = math.ceil(math.log2(max(S, 2))) + 1
+
+    pad1 = lambda a: jnp.pad(a.astype(jnp.float32), (0, q_pad - Q)) \
+        .reshape(-1, 8, TQ // 8)
+    pad2 = lambda a: jnp.pad(a.astype(jnp.float32),
+                             ((0, q_pad - Q), (0, 0))).reshape(-1, TQ, H)
+    kp = jnp.pad(keys.astype(jnp.float32), (0, s_pad - S),
+                 constant_values=jnp.inf).reshape(1, 8, s_pad // 8)
+
+    kern = functools.partial(_lookup_kernel, n_keys=S, iters=iters,
+                             linear=linear)
+    out = pl.pallas_call(
+        kern,
+        grid=(q_pad // TQ,),
+        in_specs=[
+            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # q
+            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # w1
+            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # b1
+            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # w2
+            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # b2
+            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # elo
+            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # ehi
+            pl.BlockSpec((1, 8, s_pad // 8), lambda i: (0, 0, 0)),  # keys
+        ],
+        out_specs=pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32),
+        interpret=interpret,
+    )(pad1(queries), pad2(w1), pad2(b1), pad2(w2), pad1(b2), pad1(err_lo),
+      pad1(err_hi), kp)
+    return out.reshape(-1)[:Q]

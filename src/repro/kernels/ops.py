@@ -1,0 +1,99 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in Python via the Pallas interpreter, which is the
+validation mode) and to False on real TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import hist as _hist
+from . import ksdist as _ksdist
+from . import linfit as _linfit
+from . import lookup as _lookup
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def histogram(keys: jax.Array, m: int, lo, hi, interpret: bool | None = None):
+    """Streaming m-bin relative-frequency histogram (unsorted keys)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _hist.hist_pallas(keys, m, lo, hi, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ksdist_matrix(tgt_hists, pool_a, pool_ps, interpret: bool | None = None):
+    """(L, P) Algorithm-2 distance matrix (targets x pool)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ksdist.ksdist_pallas(tgt_hists, pool_a, pool_ps,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def segment_linfit(x, y, buckets, n_buckets: int,
+                   interpret: bool | None = None):
+    """Per-bucket least-squares (slope, intercept): (n_buckets, 2) f64.
+
+    Two kernel passes for f32 moment stability: pass 1 accumulates
+    (count, Sum x, Sum y) -> per-bucket means; inputs are then centered *per
+    bucket* in f64 (within-bucket dynamic range is tiny, so the f32 kernel
+    moments of pass 2 are exact enough) and pass 2 accumulates the centered
+    cross moments. Global standardization alone cancels catastrophically
+    when buckets are narrow slices of the key range.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    x64 = x.astype(jnp.float64)
+    y64 = y.astype(jnp.float64)
+    # pass 1 on globally standardized coords (safe for means)
+    mu_x, sd_x = jnp.mean(x64), jnp.maximum(jnp.std(x64), 1e-30)
+    mu_y, sd_y = jnp.mean(y64), jnp.maximum(jnp.std(y64), 1e-30)
+    xs = ((x64 - mu_x) / sd_x).astype(jnp.float32)
+    ys = ((y64 - mu_y) / sd_y).astype(jnp.float32)
+    s1 = _linfit.linfit_sums_pallas(xs, ys, buckets, n_buckets,
+                                    interpret=interpret)
+    n = s1[:, 0].astype(jnp.float64)
+    nn = jnp.maximum(n, 1.0)
+    bmu_x = s1[:, 1].astype(jnp.float64) / nn       # in standardized coords
+    bmu_y = s1[:, 2].astype(jnp.float64) / nn
+    # pass 2: per-bucket centered
+    xc = (((x64 - mu_x) / sd_x) - bmu_x[buckets]).astype(jnp.float32)
+    yc = (((y64 - mu_y) / sd_y) - bmu_y[buckets]).astype(jnp.float32)
+    s2 = _linfit.linfit_sums_pallas(xc, yc, buckets, n_buckets,
+                                    interpret=interpret)
+    sxy = s2[:, 3].astype(jnp.float64)
+    sxx = s2[:, 4].astype(jnp.float64)
+    a_s = jnp.where(sxx > 1e-20, sxy / sxx, 0.0)
+    # map back: y = a x + b in raw coordinates
+    a = a_s * sd_y / sd_x
+    b = (bmu_y * sd_y + mu_y) - a * (bmu_x * sd_x + mu_x)
+    return jnp.stack([a, jnp.where(n > 0, b, 0.0)], 1)
+
+
+@functools.partial(jax.jit, static_argnames=("linear", "interpret"))
+def index_lookup(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
+                 linear: bool = False, interpret: bool | None = None):
+    """Fused serving lookup (predict -> window -> bounded search) with the
+    XLA-side seam verification (rare fallback re-search, see core.rmi)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    r = _lookup.lookup_pallas(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
+                              linear=linear, interpret=interpret)
+    # seam verification in f32 space (kernel semantics)
+    kf = keys.astype(jnp.float32)
+    qf = queries.astype(jnp.float32)
+    n = keys.shape[0]
+    rc = jnp.clip(r, 0, n - 1)
+    valid = ((r == 0) | (kf[jnp.clip(r - 1, 0, n - 1)] < qf)) & \
+            ((r == n) | (kf[rc] >= qf))
+
+    def _fb(_):
+        full = jnp.searchsorted(kf, qf, side="left").astype(r.dtype)
+        return jnp.where(valid, r, full)
+
+    return jax.lax.cond(jnp.all(valid), lambda _: r, _fb, None)

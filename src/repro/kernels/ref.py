@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (same dtypes/semantics).
+
+Each function mirrors its kernel's contract exactly (f32 math where the
+kernel computes in f32) so tests can assert_allclose across shape/dtype
+sweeps in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def hist_ref(keys: jax.Array, m: int, lo, hi) -> jax.Array:
+    """Oracle for hist.hist_pallas (f32, right-closed bins)."""
+    k = keys.astype(jnp.float32)
+    x = (k - jnp.float32(lo)) / (jnp.float32(hi) - jnp.float32(lo))
+    b = jnp.clip(jnp.ceil(x * m).astype(jnp.int32) - 1, 0, m - 1)
+    counts = jnp.zeros((m,), jnp.float32).at[b].add(1.0)
+    return counts / jnp.float32(keys.shape[0])
+
+
+def ksdist_ref(tgt_hists: jax.Array, pool_a: jax.Array,
+               pool_ps: jax.Array) -> jax.Array:
+    """Oracle for ksdist.ksdist_pallas: (L, P) Algorithm-2 distances."""
+    ht = tgt_hists.astype(jnp.float32)
+    pt = jnp.concatenate(
+        [jnp.zeros((ht.shape[0], 1), jnp.float32), jnp.cumsum(ht, 1)[:, :-1]], 1)
+    up = jnp.max(pool_a[None, :, :] - pt[:, None, :], axis=2)
+    dn = jnp.max((ht + pt)[:, None, :] - pool_ps[None, :, :], axis=2)
+    return jnp.maximum(up, dn)
+
+
+def linfit_sums_ref(x: jax.Array, y: jax.Array, buckets: jax.Array,
+                    n_buckets: int) -> jax.Array:
+    """Oracle for linfit.linfit_sums_pallas: (n_buckets, 5) moment sums."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    seg = lambda v: jax.ops.segment_sum(v, buckets, n_buckets)
+    return jnp.stack([seg(jnp.ones_like(x)), seg(x), seg(y), seg(x * y),
+                      seg(x * x)], axis=1)
+
+
+def lookup_ref(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
+               linear: bool = False) -> jax.Array:
+    """Oracle for lookup.lookup_pallas (f32 predict + bounded search)."""
+    q = queries.astype(jnp.float32)
+    keys = keys.astype(jnp.float32)
+    n = keys.shape[0]
+    if linear:
+        pred = w1[:, 0].astype(jnp.float32) * q + b2.astype(jnp.float32)
+    else:
+        h = jnp.maximum(q[:, None] * w1.astype(jnp.float32)
+                        + b1.astype(jnp.float32), 0.0)
+        pred = jnp.sum(h * w2.astype(jnp.float32), 1) + b2.astype(jnp.float32)
+    lo = jnp.clip(jnp.floor(pred + err_lo.astype(jnp.float32)), 0, n - 1
+                  ).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + err_hi.astype(jnp.float32)) + 1.0, 1, n
+                  ).astype(jnp.int32)
+    iters = math.ceil(math.log2(max(n, 2))) + 1
+
+    def body(_, lh):
+        lo, hi = lh
+        active = hi - lo > 0
+        mid = (lo + hi) // 2
+        kv = keys[jnp.clip(mid, 0, n - 1)]
+        below = kv < q
+        nlo = jnp.where(below, mid + 1, lo)
+        nhi = jnp.where(below, hi, mid)
+        return (jnp.where(active, nlo, lo), jnp.where(active, nhi, hi))
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo

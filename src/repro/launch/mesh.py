@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+IMPORTANT: functions, not module-level constants — importing this module
+never touches jax device state. The dry-run entry point sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import (see dryrun.py lines 1-2); smoke tests and benchmarks see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod(s): 16x16 = 256 chips per pod; 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh():
+    """(1,1,1) mesh on a single device: the same manual-SPMD code paths run
+    with every collective a no-op — used by CPU smoke/integration tests."""
+    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = 16):
+    """Elasticity helper: best (pod, data, model) factorization for an
+    arbitrary surviving-device count (see train/elastic.py)."""
+    model = min(model_parallel, devices)
+    while devices % model:
+        model -= 1
+    rest = devices // model
+    pod = 2 if rest % 2 == 0 and rest >= 32 else 1
+    data = rest // pod
+    return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)

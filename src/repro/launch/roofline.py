@@ -1,0 +1,105 @@
+"""Roofline aggregation: reads experiments/dryrun/*.json (written by
+dryrun.py / sweep.py) and emits the EXPERIMENTS.md §Roofline table.
+
+Per (arch x shape x mesh):
+  compute_s    = HLO_FLOPs_per_chip / 197e12        (bf16 peak, v5e)
+  memory_s     = HLO_bytes_per_chip / 819e9         (HBM BW)
+  collective_s = per-chip link traffic / 50e9       (ICI, ring model)
+  dominant     = argmax of the three
+  MODEL_FLOPS  = 6*N*D (train) | 2*N*D (prefill) | 2*N_active*B (decode)
+  useful       = MODEL_FLOPS / (HLO_FLOPs_per_chip * chips)
+
+  PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9          # v5e
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    if arch == "index_service":
+        return 0.0
+    cfg = get_arch(arch)
+    n_active = cfg.param_count(active_only=True)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def load(dir_: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        if os.path.basename(path).startswith("_"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        mf = model_flops(r["arch"], r.get("shape", "train_4k")) \
+            if r["arch"] != "index_service" else 0.0
+        hlo_total = r["hlo_flops_per_chip"] * r["chips"]
+        r["model_flops"] = mf
+        r["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+        rr = r["roofline"]
+        bound = max(rr["compute_s"], rr["memory_s"], rr["collective_s"])
+        # roofline fraction: how much of the bound step time is the ideal
+        # compute time (1.0 = perfectly compute-bound at peak)
+        r["roofline_fraction"] = rr["compute_s"] / bound if bound else 0.0
+        r["hbm_ok"] = r["memory"]["peak_bytes_est"] <= HBM_PER_CHIP
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful | roofline_frac | HBM GB/chip | fits |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in rows:
+        rr = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rr['compute_s']:.3e} | {rr['memory_s']:.3e} "
+            f"| {rr['collective_s']:.3e} | {rr['dominant'][:-2]} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['memory']['peak_bytes_est']/1e9:.2f} "
+            f"| {'Y' if r['hbm_ok'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(fmt_table(rows))
+    # pick hillclimb candidates
+    single = [r for r in rows if r["mesh"] == "single"
+              and r["arch"] != "index_service"]
+    if single:
+        worst = min(single, key=lambda r: r["roofline_fraction"])
+        coll = max(single, key=lambda r: r["roofline"]["collective_s"] /
+                   max(sum(r["roofline"][k] for k in
+                           ("compute_s", "memory_s", "collective_s")), 1e-30))
+        print(f"\nworst roofline fraction: {worst['arch']} {worst['shape']} "
+              f"({worst['roofline_fraction']:.2f})")
+        print(f"most collective-bound:   {coll['arch']} {coll['shape']}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell as a subprocess
+(XLA_FLAGS isolation + per-cell timeout + crash containment), resumable —
+existing result JSONs are skipped.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.sweep --mesh multi --timeout 1800
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, get_arch, list_archs
+
+
+def cells(meshes=("single", "multi")):
+    out = []
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.subquadratic:
+                continue  # pure full-attention archs skip (DESIGN.md)
+            for mesh in meshes:
+                out.append((arch, shape.name, mesh))
+    for mesh in meshes:
+        out.append(("index_service", "lookup_64k", mesh))
+    return out
+
+
+def run(out_dir: str, meshes, timeout: int, only_arch=None, jobs=1):
+    todo = []
+    for arch, shape, mesh in cells(meshes):
+        if only_arch and arch != only_arch:
+            continue
+        path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+        if os.path.exists(path):
+            continue
+        todo.append((arch, shape, mesh, path))
+    print(f"[sweep] {len(todo)} cells to run")
+    results = []
+    for i, (arch, shape, mesh, path) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", out_dir]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=timeout,
+                                  env=dict(os.environ, PYTHONPATH="src"))
+            ok = proc.returncode == 0
+            err = proc.stderr.strip().splitlines()[-1] if (proc.stderr and
+                                                           not ok) else ""
+        except subprocess.TimeoutExpired:
+            ok, err = False, f"timeout>{timeout}s"
+        dt = time.time() - t0
+        status = "ok" if ok else f"FAIL ({err[:120]})"
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh}: {status} "
+              f"({dt:.0f}s)", flush=True)
+        results.append({"arch": arch, "shape": shape, "mesh": mesh,
+                        "ok": ok, "seconds": round(dt, 1), "error": err})
+        with open(os.path.join(out_dir, "_sweep_log.json"), "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    os.makedirs(args.out, exist_ok=True)
+    run(args.out, meshes, args.timeout, only_arch=args.arch)
+
+
+if __name__ == "__main__":
+    main()

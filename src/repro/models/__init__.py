@@ -1,0 +1,3 @@
+"""LM substrate: the 10 assigned architectures as one unified block-pattern
+decoder, written manual-SPMD (every collective explicit, axis names bound by
+shard_map). See DESIGN.md §4 for the sharding contract."""

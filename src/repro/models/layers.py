@@ -1,0 +1,376 @@
+"""Shared transformer layers, written manual-SPMD (axis names bound by
+shard_map; see models/sharding.py for the contract).
+
+Numerics: params/activations bf16, accumulations f32
+(preferred_element_type), norms/softmax in f32.
+
+Gradient correctness under manual SPMD: we rely on shard_map's
+check_vma=True varying-manual-axes system — psum transposes are inserted
+exactly where replication demands them, so replicated-parameter gradients
+arrive globally summed with NO manual sync (validated by
+tests/test_multidevice.py::test_spmd_numeric_equivalence; a manual
+sync_grad double-counts). The one obligation on this code is vma hygiene:
+scan carries must be pcast to the body's natural vma
+(sharding.scan_aligned) — over-varying a carry silently scales gradients
+by mesh-axis sizes. ``sync_grad`` is kept only as a reference utility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import FSDP, TP, fsdp_gather, scan_aligned, tp_psum
+
+Array = jax.Array
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# grad sync for replicated params (manual-SPMD correctness)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def sync_grad(x: Array, axes: tuple) -> Array:
+    return x
+
+
+def _sync_fwd(x, axes):
+    return x, None
+
+
+def _sync_bwd(axes, _, g):
+    return (jax.lax.psum(g, axes) if axes else g,)
+
+
+sync_grad.defvjp(_sync_fwd, _sync_bwd)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x: (B, S, H, dh); pos: (B, S) int32. Half-split (NeoX) rotation."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = pos[..., None].astype(F32) * freqs            # (B, S, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, pos3: Array, theta: float, sections: tuple) -> Array:
+    """M-RoPE (qwen2-vl): pos3 (3, B, S) = (t, h, w) ids; the dh/2 frequency
+    slots are split into `sections` groups, each rotated by its own id."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    # section id per frequency slot
+    sec = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                     total_repeat_length=dh // 2)       # (dh/2,)
+    pos = pos3.astype(F32)[sec, :, :]                   # (dh/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1) * freqs              # (B, S, dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) attention — O(block) memory, causal, GQA
+# ---------------------------------------------------------------------------
+def flash_attention(q: Array, k: Array, v: Array, *, q_offset: Array,
+                    kv_valid: Array | None = None, kv_block: int = 1024,
+                    bias_qk: tuple | None = None,
+                    return_partial: bool = False) -> Array:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hkv, dh) with H % Hkv == 0.
+
+    Online-softmax over kv blocks (lax.scan -> one compiled block body).
+    Causal mask uses global positions (q_offset for decode); ``kv_valid``
+    masks an under-filled cache. ``bias_qk`` optionally supplies additive
+    (per-query, per-key) head-wise bias terms (Fq, Fk+i) for the mLSTM
+    reuse of this machinery.
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+    kv_block = min(kv_block, -(-Skv // 128) * 128)
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if bias_qk is not None:
+        bias_qk = (bias_qk[0],
+                   jnp.pad(bias_qk[1], ((0, 0), (0, pad), (0, 0)),
+                           constant_values=0.0))
+    if kv_valid is None and pad:
+        kv_valid = jnp.asarray(Skv, jnp.int32)   # mask tail padding
+
+    qf = q.astype(F32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, start):
+        # each block is dynamic-sliced from the (padded) KV — scanning over
+        # a transposed copy instead moves the WHOLE cache through HBM every
+        # decode step (EXPERIMENTS.md §Perf P10)
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, kv_block, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, kv_block, axis=1)
+        kb = jnp.repeat(kb, G, axis=2)                  # GQA broadcast
+        vb = jnp.repeat(vb, G, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(F32))
+        kv_pos = start + jnp.arange(kv_block)
+        mask = kv_pos[None, :] <= q_pos[:, None]        # causal
+        if kv_valid is not None:
+            mask &= (kv_pos < kv_valid)[None, :]
+        if bias_qk is not None:
+            fq, fk = bias_qk                            # (B,Sq,H), (B,Skv,H)
+            fkb = jax.lax.dynamic_slice_in_dim(fk, start, kv_block, 1)
+            s = s + fq.transpose(0, 2, 1)[:, :, :, None] \
+                  + fkb.transpose(0, 2, 1)[:, :, None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(-1))
+        # guard: fully-masked rows keep m finite
+        m_new = jnp.maximum(m_new, -1e30)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(F32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, F32)
+    l0 = jnp.zeros((B, H, Sq), F32)
+    a0 = jnp.zeros((B, H, Sq, dh), F32)
+    starts = jnp.arange(nb) * kv_block
+    (m, l, acc), _ = scan_aligned(body, (m0, l0, a0), starts)
+    if return_partial:
+        return m, l, acc                                # combine across shards
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)    # (B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA + optional qk_norm / bias / rope kinds)
+# ---------------------------------------------------------------------------
+class AttnParams(NamedTuple):
+    ln: Array          # (d,)
+    wq: Array          # (d, Hl*dh)   [global (d, Hp*dh), TP on cols]
+    wk: Array          # (d, KVl*dh)
+    wv: Array          # (d, KVl*dh)
+    wo: Array          # (Hl*dh, d)   [TP on rows]
+    bq: Array          # (Hl*dh,) or ()
+    bk: Array
+    bv: Array
+    qn: Array          # (dh,) qk_norm scales (or ())
+    kn: Array
+
+
+def attention_block(p: AttnParams, x: Array, cfg, *, pos, cache=None,
+                    layer_slot: int = 0, tp_shard: bool,
+                    reduce: bool = True) -> tuple:
+    """x: (B, S, d) replicated over TP. Returns (out, new_cache_slot).
+
+    cache: None (train/prefill w/o cache) or dict with k/v (B, Smax, KV, dh)
+    local slices + `length` (filled prefix). One tp_psum at the output.
+    """
+    B, S, d = x.shape
+    dh = cfg.head_dim
+    h = rms_norm(x, p.ln, cfg.norm_eps)
+    wq = fsdp_gather(p.wq)
+    wk = fsdp_gather(p.wk)
+    wv = fsdp_gather(p.wv)
+
+    q = jnp.einsum("bsd,dh->bsh", h, wq,
+                   preferred_element_type=F32).astype(BF16)
+    k = jnp.einsum("bsd,dh->bsh", h, wk,
+                   preferred_element_type=F32).astype(BF16)
+    v = jnp.einsum("bsd,dh->bsh", h, wv,
+                   preferred_element_type=F32).astype(BF16)
+    if cfg.qkv_bias:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    Hl = q.shape[-1] // dh
+    q = q.reshape(B, S, Hl, dh)
+    k = k.reshape(B, S, -1, dh)
+    v = v.reshape(B, S, -1, dh)
+    if tp_shard and not cfg.kv_sharded:
+        # replicated-KV GQA: every rank computed all n_kv heads; slice the
+        # single KV head serving this rank's contiguous q-head block.
+        first_q = jax.lax.axis_index(TP) * Hl
+        g = (first_q * cfg.n_kv_heads) // cfg.n_heads_padded
+        k = jax.lax.dynamic_slice_in_dim(k, g, 1, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, g, 1, axis=2)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p.qn, cfg.norm_eps)
+        k = rms_norm(k, p.kn, cfg.norm_eps)
+    if cfg.rope == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+
+    new_cache = None
+    if cache is None:
+        o = flash_attention(q, k, v, q_offset=jnp.zeros((), jnp.int32))
+    elif cache.get("seq_sharded", False):
+        # long-context decode: cache time axis sharded over `data`; each
+        # rank computes a partial softmax over its chunk, combined with one
+        # psum (flash-decoding). The new token's K/V is written by the rank
+        # owning global position `length`.
+        S_l = cache["k"].shape[1]
+        base = jax.lax.axis_index(FSDP) * S_l
+        off = cache["length"] - base
+        mine = (off >= 0) & (off < S_l)
+        offc = jnp.clip(off, 0, S_l - 1)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, offc, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, offc, 1)
+        kc = jnp.where(mine, kc, cache["k"])
+        vc = jnp.where(mine, vc, cache["v"])
+        m, l, acc = flash_attention(q, kc, vc, q_offset=cache["length"] - base,
+                                    return_partial=True)
+        m_g = jax.lax.pmax(m, FSDP)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, FSDP)
+        acc_g = jax.lax.psum(acc * corr[..., None], FSDP)
+        o = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]) \
+            .transpose(0, 2, 1, 3).astype(q.dtype)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # decode: append to cache at position `length`, attend over prefix
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["length"], 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["length"], 1)
+        o = flash_attention(q, kc, vc, q_offset=cache["length"],
+                            kv_valid=cache["length"] + S)
+        new_cache = {"k": kc, "v": vc}
+
+    o = o.reshape(B, S, Hl * dh)
+    wo = fsdp_gather(p.wo, axis=1)
+    out = jnp.einsum("bsh,hd->bsd", o, wo, preferred_element_type=F32)
+    if tp_shard and reduce:
+        out = tp_psum(out)
+    return (out.astype(x.dtype) if reduce else out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+class MLPParams(NamedTuple):
+    ln: Array
+    w_gate: Array      # (d, f_l)
+    w_up: Array        # (d, f_l)
+    w_down: Array      # (f_l, d)
+
+
+def mlp_block(p: MLPParams, x: Array, cfg, *, tp_shard: bool,
+              reduce: bool = True, pre_normed: Array | None = None) -> Array:
+    h = rms_norm(x, p.ln, cfg.norm_eps) if pre_normed is None else pre_normed
+    wg = fsdp_gather(p.w_gate)
+    wu = fsdp_gather(p.w_up)
+    wd = fsdp_gather(p.w_down, axis=1)
+    g = jnp.einsum("bsd,df->bsf", h, wg, preferred_element_type=F32)
+    u = jnp.einsum("bsd,df->bsf", h, wu, preferred_element_type=F32)
+    a = (jax.nn.silu(g) * u).astype(BF16)
+    out = jnp.einsum("bsf,fd->bsd", a, wd, preferred_element_type=F32)
+    if tp_shard and reduce:
+        out = tp_psum(out)
+    return out.astype(x.dtype) if reduce else out
+
+
+# ---------------------------------------------------------------------------
+# MoE block — expert parallelism as tensor parallelism (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+class MoEParams(NamedTuple):
+    ln: Array
+    router: Array      # (d, E) replicated over TP
+    w_gate: Array      # (E_l, d, fe)
+    w_up: Array        # (E_l, d, fe)
+    w_down: Array      # (E_l, fe, d)
+    sh_gate: Array     # (d, n_shared*fe / tp) or ()
+    sh_up: Array
+    sh_down: Array
+
+
+def moe_block(p: MoEParams, x: Array, cfg, *, tp_shard: bool,
+              capacity_factor: float = 1.25) -> Array:
+    """Activations are replicated over TP after attention, so each model
+    rank owns E/tp experts and dispatches its *local* experts for ALL its
+    data-shard tokens — no all_to_all; the block ends in the same single
+    psum as a dense TP MLP. Capacity-bucketed (dropped tokens pass through
+    the residual, standard top-k capacity semantics).
+    """
+    mc = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E = mc.n_experts
+    E_pad = cfg.n_experts_padded
+    tp = cfg.tp if tp_shard else 1
+    E_l = E_pad // tp
+    C = max(int(T * mc.top_k * capacity_factor / E), 4)
+
+    h = rms_norm(x, p.ln, cfg.norm_eps).reshape(T, d)
+    router = fsdp_gather(p.router)   # replicated over TP; grad-sync by spec
+    logits = jnp.einsum("td,de->te", h, router,
+                        preferred_element_type=F32)    # (T, E)
+    gates, top_e = jax.lax.top_k(logits, mc.top_k)     # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = top_e.reshape(-1)                          # (T*k,)
+    flat_w = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), mc.top_k)
+    # position of each assignment within its expert (global cumcount)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=F32)       # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)    # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0].astype(jnp.int32)
+
+    base = (jax.lax.axis_index(TP) if tp_shard else 0) * E_l
+    local = (flat_e >= base) & (flat_e < base + E_l) & (pos < C)
+    e_loc = jnp.clip(flat_e - base, 0, E_l - 1)
+    slot = jnp.where(local, e_loc * C + pos, E_l * C)   # overflow -> dropped
+
+    hx = h.astype(BF16)
+    buf = jnp.zeros((E_l * C + 1, d), BF16).at[slot].set(hx[flat_t])
+    buf = buf[:E_l * C].reshape(E_l, C, d)
+
+    wg = fsdp_gather(p.w_gate, axis=1)
+    wu = fsdp_gather(p.w_up, axis=1)
+    wd = fsdp_gather(p.w_down, axis=2)   # (E_l, fe, d): FSDP on d
+    g = jnp.einsum("ecd,edf->ecf", buf, wg, preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu, preferred_element_type=F32)
+    y = jnp.einsum("ecf,efd->ecd", (jax.nn.silu(g) * u).astype(BF16), wd,
+                   preferred_element_type=F32)          # (E_l, C, d)
+
+    y_flat = jnp.concatenate([y.reshape(E_l * C, d),
+                              jnp.zeros((1, d), F32)])
+    contrib = y_flat[slot] * flat_w[:, None]
+    out = jnp.zeros((T, d), F32).at[flat_t].add(
+        jnp.where(local[:, None], contrib, 0.0))
+
+    if mc.n_shared:
+        sg = fsdp_gather(p.sh_gate)
+        su = fsdp_gather(p.sh_up)
+        sd = fsdp_gather(p.sh_down, axis=1)
+        g2 = jnp.einsum("td,df->tf", h, sg, preferred_element_type=F32)
+        u2 = jnp.einsum("td,df->tf", h, su, preferred_element_type=F32)
+        out = out + jnp.einsum("tf,fd->td", (jax.nn.silu(g2) * u2).astype(BF16),
+                               sd, preferred_element_type=F32)
+    if tp_shard:
+        out = tp_psum(out)
+    return out.reshape(B, S, d).astype(x.dtype)

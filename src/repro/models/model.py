@@ -1,0 +1,437 @@
+"""Unified block-pattern decoder covering all 10 assigned architectures.
+
+One parameter *factory* (`build_tree`) is the single source of truth for
+shapes, shardings and initializers: it is instantiated three ways —
+  init_params(cfg, key)   -> real arrays (smoke tests / examples)
+  param_specs(cfg)        -> PartitionSpec tree (shard_map in_specs)
+  param_shapes(cfg)       -> ShapeDtypeStructs (dry-run lowering, no alloc)
+
+Forward modes:
+  "train"    full sequence, loss-ready hidden states
+  "prefill"  full sequence + KV/SSM caches out, last-position logits
+  "decode"   single token step against caches
+
+The layer stack is an lax.scan over stacked superblocks (params stacked on
+axis 0), with the superblock body optionally jax.checkpoint'd (train remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers, ssm, xlstm
+from .sharding import (FSDP, TP, batch_axes, fsdp_gather, psum_forced,
+                       scan_aligned, tp_psum)
+
+Array = jax.Array
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# parameter factory
+# ---------------------------------------------------------------------------
+class Leaf(NamedTuple):
+    shape: tuple
+    spec: tuple          # PartitionSpec entries (pre-stacking)
+    fan_in: int          # for init scaling (0 -> zeros, -1 -> ones)
+
+
+def _block_leaves(cfg, kind: str, pos: int) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    tp = TP if cfg.tp_shard else None
+    out: dict[str, Any] = {}
+    if kind == "attn":
+        Hp = cfg.n_heads_padded
+        KV = cfg.n_kv_padded
+        kv_spec = tp if cfg.kv_sharded else None
+        out["core"] = layers.AttnParams(
+            ln=Leaf((d,), (None,), -1),
+            wq=Leaf((d, Hp * dh), (FSDP, tp), d),
+            wk=Leaf((d, KV * dh), (FSDP, kv_spec), d),
+            wv=Leaf((d, KV * dh), (FSDP, kv_spec), d),
+            wo=Leaf((Hp * dh, d), (tp, FSDP), Hp * dh),
+            bq=Leaf((Hp * dh,), (tp,), 0) if cfg.qkv_bias else None,
+            bk=Leaf((KV * dh,), (kv_spec,), 0) if cfg.qkv_bias else None,
+            bv=Leaf((KV * dh,), (kv_spec,), 0) if cfg.qkv_bias else None,
+            qn=Leaf((dh,), (None,), -1) if cfg.qk_norm else None,
+            kn=Leaf((dh,), (None,), -1) if cfg.qk_norm else None,
+        )
+    elif kind == "mamba":
+        di, ds, dtr, K = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+        out["core"] = ssm.MambaParams(
+            ln=Leaf((d,), (None,), -1),
+            in_proj=Leaf((d, 2 * di), (FSDP, tp), d),
+            conv_w=Leaf((K, di), (None, tp), K),
+            conv_b=Leaf((di,), (tp,), 0),
+            x_proj=Leaf((di, dtr + 2 * ds), (tp, None), di),
+            dt_w=Leaf((dtr, di), (None, tp), dtr),
+            dt_b=Leaf((di,), (tp,), 0),
+            a_log=Leaf((di, ds), (tp, None), -1),
+            d_skip=Leaf((di,), (tp,), -1),
+            out_proj=Leaf((di, d), (tp, FSDP), di),
+        )
+    elif kind == "mlstm":
+        NH = cfg.xl_heads
+        ef = cfg.expand * d
+        out["core"] = xlstm.MLSTMParams(
+            ln=Leaf((d,), (None,), -1),
+            w_qkv=Leaf((ef, 3 * ef), (FSDP, tp), ef),
+            w_if=Leaf((d, 2 * NH), (FSDP, None), d),
+            b_if=Leaf((2 * NH,), (None,), 0),
+            w_o=Leaf((d, ef), (FSDP, tp), d),
+            w_up=Leaf((d, 2 * ef), (FSDP, tp), d),
+            w_down=Leaf((ef, d), (tp, FSDP), ef),
+            ln_inner=Leaf((ef,), (None,), -1),
+        )
+    elif kind == "slstm":
+        NH = cfg.xl_heads
+        dh_s = d // NH
+        out["core"] = xlstm.SLSTMParams(
+            ln=Leaf((d,), (None,), -1),
+            w_x=Leaf((d, 4 * NH * dh_s), (FSDP, tp), d),
+            r_h=Leaf((NH, dh_s, 4 * dh_s), (None, None, None), dh_s),
+            b=Leaf((4 * NH * dh_s,), (None,), 0),
+            w_up=Leaf((d, cfg.expand * d), (FSDP, tp), d),
+            w_down=Leaf((cfg.expand * d, d), (tp, FSDP), cfg.expand * d),
+            ln_ff=Leaf((d,), (None,), -1),
+        )
+    else:
+        raise ValueError(kind)
+
+    # FFN stage (attn/mamba layers only; xlstm blocks carry their own)
+    if kind in ("attn", "mamba") and cfg.d_ff > 0:
+        tpn = tp
+        if cfg.moe_at(pos):
+            mc = cfg.moe
+            E_l = cfg.n_experts_padded // (cfg.tp if cfg.tp_shard else 1)
+            fe = mc.d_expert
+            out["ffn"] = layers.MoEParams(
+                ln=Leaf((d,), (None,), -1),
+                router=Leaf((d, mc.n_experts), (FSDP, None), d),
+                w_gate=Leaf((cfg.n_experts_padded, d, fe), (tpn, FSDP, None), d),
+                w_up=Leaf((cfg.n_experts_padded, d, fe), (tpn, FSDP, None), d),
+                w_down=Leaf((cfg.n_experts_padded, fe, d), (tpn, None, FSDP), fe),
+                sh_gate=(Leaf((d, mc.n_shared * fe), (FSDP, tpn), d)
+                         if mc.n_shared else None),
+                sh_up=(Leaf((d, mc.n_shared * fe), (FSDP, tpn), d)
+                       if mc.n_shared else None),
+                sh_down=(Leaf((mc.n_shared * fe, d), (tpn, FSDP),
+                              mc.n_shared * fe) if mc.n_shared else None),
+            )
+        else:
+            out["ffn"] = layers.MLPParams(
+                ln=Leaf((d,), (None,), -1),
+                w_gate=Leaf((d, cfg.d_ff), (FSDP, tpn), d),
+                w_up=Leaf((d, cfg.d_ff), (FSDP, tpn), d),
+                w_down=Leaf((cfg.d_ff, d), (tpn, FSDP), cfg.d_ff),
+            )
+    else:
+        out["ffn"] = None
+    return out
+
+
+def build_tree(cfg) -> dict:
+    """Leaf-description tree (pre-stacking; superblock leaves get an n_sb
+    stacking axis added by the instantiators)."""
+    d = cfg.d_model
+    tp = TP if cfg.tp_shard else None
+    tree: dict[str, Any] = {}
+    if not cfg.embed_input:
+        tree["embed"] = Leaf((cfg.vocab_padded, d), (tp, FSDP), d)
+    tree["sb"] = {f"pos{i}": _block_leaves(cfg, cfg.pattern[i], i)
+                  for i in range(cfg.sb)}
+    tree["final_ln"] = Leaf((d,), (None,), -1)
+    tree["lm_head"] = Leaf((d, cfg.vocab_padded), (FSDP, tp), d)
+    return tree
+
+
+def _is_leaf(x):
+    return isinstance(x, Leaf)
+
+
+def _instantiate(cfg, fn: Callable[[Leaf, bool], Any]) -> dict:
+    """fn(leaf, stacked) -> instantiated leaf."""
+    tree = build_tree(cfg)
+    out = {k: jax.tree.map(lambda l: fn(l, False), v, is_leaf=_is_leaf)
+           for k, v in tree.items() if k != "sb"}
+    out["sb"] = jax.tree.map(lambda l: fn(l, True), tree["sb"],
+                             is_leaf=_is_leaf)
+    return out
+
+
+def param_specs(cfg) -> dict:
+    def f(l: Leaf, stacked: bool):
+        spec = ((None,) if stacked else ()) + l.spec
+        return P(*spec)
+    return _instantiate(cfg, f)
+
+
+def param_shapes(cfg, dtype=BF16) -> dict:
+    def f(l: Leaf, stacked: bool):
+        shape = ((cfg.n_sb,) if stacked else ()) + l.shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return _instantiate(cfg, f)
+
+
+def init_params(cfg, key: Array, dtype=BF16) -> dict:
+    leaves = jax.tree.leaves(build_tree(cfg), is_leaf=_is_leaf)
+    keys = iter(jax.random.split(key, len(leaves) + 1))
+
+    def f(l: Leaf, stacked: bool):
+        shape = ((cfg.n_sb,) if stacked else ()) + l.shape
+        if l.fan_in == 0:
+            return jnp.zeros(shape, dtype)
+        if l.fan_in == -1:
+            return jnp.ones(shape, dtype)
+        w = jax.random.normal(next(keys), shape, F32) / jnp.sqrt(l.fan_in)
+        return w.astype(dtype)
+    return _instantiate(cfg, f)
+
+
+def param_sync_axes(cfg) -> dict:
+    """Per-leaf comma-joined mesh axes the leaf is *replicated* over
+    (gradients need an explicit psum over exactly these; layers.sync_grad).
+    Strings, not tuples, so the tree zips with the param tree under
+    jax.tree.map (tuples would be traversed as pytree nodes)."""
+    def f(l: Leaf, stacked: bool):
+        present = {a for a in l.spec if a}
+        return ",".join(a for a in ("pod", "data", "model")
+                        if a not in present)
+    return _instantiate(cfg, f)
+
+
+# ---------------------------------------------------------------------------
+# caches / recurrent state
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_seq: int, *, seq_shard: int = 1,
+               shapes_only: bool = False, local: bool = True) -> dict:
+    """Decode-state tree, stacked over superblocks. ``seq_shard`` > 1 splits
+    the KV time axis across the data axis (long_500k flash-decode).
+    ``local=False`` builds GLOBAL shapes (dry-run lowering: the TP-sharded
+    dims carry the full padded extent; shard_map splits them)."""
+    mk = (jax.ShapeDtypeStruct if shapes_only
+          else (lambda s, d: jnp.zeros(s, d)))
+    tp = cfg.tp if (cfg.tp_shard and local) else 1
+    out = {}
+    for i in range(cfg.sb):
+        kind = cfg.pattern[i]
+        n_sb = cfg.n_sb
+        if kind == "attn":
+            if cfg.kv_sharded:
+                KVl = cfg.n_kv_padded // tp
+            elif cfg.tp_shard:
+                # replicated-KV GQA: each rank stores its group's one head
+                KVl = 1 if local else cfg.tp
+            else:
+                KVl = cfg.n_kv_heads
+            s_local = max_seq // seq_shard
+            out[f"pos{i}"] = {
+                "k": mk((n_sb, batch, s_local, KVl, cfg.head_dim), BF16),
+                "v": mk((n_sb, batch, s_local, KVl, cfg.head_dim), BF16),
+            }
+        elif kind == "mamba":
+            di_l = cfg.d_inner // tp
+            out[f"pos{i}"] = {
+                "conv": mk((n_sb, batch, cfg.d_conv - 1, di_l), BF16),
+                "h": mk((n_sb, batch, di_l, cfg.d_state), F32),
+            }
+        elif kind == "mlstm":
+            NH = cfg.xl_heads
+            dh = cfg.expand * cfg.d_model // NH
+            out[f"pos{i}"] = {
+                "c": mk((n_sb, batch, NH, dh, dh), F32),
+                "n": mk((n_sb, batch, NH, dh), F32),
+                "m": mk((n_sb, batch, NH), F32),
+            }
+        elif kind == "slstm":
+            NH = cfg.xl_heads
+            dh = cfg.d_model // NH
+            z = (n_sb, batch, NH, dh)
+            out[f"pos{i}"] = {k: mk(z, F32) for k in ("h", "c", "n", "m")}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg, tokens: Array, tp_shard: bool) -> Array:
+    """Vocab-sharded embedding lookup: local-range take + psum over TP."""
+    w = fsdp_gather(params["embed"], axis=1)            # (V_l, d)
+    V_l = w.shape[0]
+    base = (jax.lax.axis_index(TP) * V_l) if tp_shard else 0
+    local = tokens - base
+    ok = (local >= 0) & (local < V_l)
+    x = jnp.take(w, jnp.clip(local, 0, V_l - 1), axis=0)
+    x = jnp.where(ok[..., None], x, 0)
+    if tp_shard:
+        x = tp_psum(x.astype(F32)).astype(BF16)
+    return x
+
+
+def _run_block(cfg, pos_idx: int, kind: str, blk_params, x, *, pos, cache,
+               tp_shard):
+    new_cache = None
+    if kind == "attn" and cfg.parallel_block and \
+            isinstance(blk_params.get("ffn"), layers.MLPParams):
+        # Cohere-style parallel block: attn and FFN partials share one psum
+        o, new_cache = layers.attention_block(
+            blk_params["core"], x, cfg, pos=pos, cache=cache,
+            tp_shard=tp_shard, reduce=False)
+        m = layers.mlp_block(blk_params["ffn"], x, cfg, tp_shard=tp_shard,
+                             reduce=False)
+        comb = o + m
+        if tp_shard:
+            comb = layers.tp_psum(comb)
+        return x + comb.astype(x.dtype), new_cache
+    if kind == "attn":
+        o, new_cache = layers.attention_block(
+            blk_params["core"], x, cfg, pos=pos, cache=cache,
+            tp_shard=tp_shard)
+        x = x + o
+    elif kind == "mamba":
+        st = ssm.MambaState(**cache) if cache is not None else None
+        o, nst = ssm.mamba_block(blk_params["core"], x, cfg, state=st,
+                                 tp_shard=tp_shard)
+        x = x + o
+        if nst is not None:
+            new_cache = nst._asdict()
+    elif kind == "mlstm":
+        st = xlstm.MLSTMState(**cache) if cache is not None else None
+        o, nst = xlstm.mlstm_block(blk_params["core"], x, cfg, state=st,
+                                   tp_shard=tp_shard)
+        x = x + o
+        if nst is not None and cache is not None:
+            new_cache = nst._asdict()
+    elif kind == "slstm":
+        st = xlstm.SLSTMState(**cache) if cache is not None else None
+        o, nst = xlstm.slstm_block(blk_params["core"], x, cfg, state=st,
+                                   tp_shard=tp_shard)
+        x = o  # slstm block returns residual-included
+        if nst is not None and cache is not None:
+            new_cache = nst._asdict()
+    if blk_params.get("ffn") is not None:
+        if isinstance(blk_params["ffn"], layers.MoEParams):
+            x = x + layers.moe_block(blk_params["ffn"], x, cfg,
+                                     tp_shard=tp_shard)
+        else:
+            x = x + layers.mlp_block(blk_params["ffn"], x, cfg,
+                                     tp_shard=tp_shard)
+    return x, new_cache
+
+
+def forward(params, cfg, inputs: Array, *, pos, caches=None,
+            mode: str = "train", remat: bool = True, cache_len=None,
+            seq_sharded: bool = False):
+    """inputs: token ids (B, S) or embeddings (B, S, d) for embed_input
+    archs. pos: (B, S) positions (or (3, B, S) for mrope). ``cache_len``:
+    scalar filled-prefix length of the caches (decode/prefill-continue).
+    Returns (hidden (B,S,d), new_caches)."""
+    tp_shard = cfg.tp_shard
+    if cfg.embed_input:
+        x = inputs.astype(BF16)
+    else:
+        x = embed_tokens(params, cfg, inputs, tp_shard)
+
+    decode = mode == "decode"
+
+    def superblock(x, sb_args):
+        p_sb, cache_sb = sb_args
+        new_caches = {}
+        for i in range(cfg.sb):
+            kind = cfg.pattern[i]
+            c = cache_sb.get(f"pos{i}") if cache_sb is not None else None
+            if c is not None and kind == "attn":
+                c = dict(c, length=cache_len, seq_sharded=seq_sharded)
+            x, nc = _run_block(cfg, i, kind, p_sb[f"pos{i}"], x,
+                               pos=pos, cache=c, tp_shard=tp_shard)
+            if nc is not None:
+                nc.pop("length", None)
+                new_caches[f"pos{i}"] = nc
+        return x, (new_caches if new_caches else None)
+
+    if decode:
+        if cache_len is None:
+            cache_len = pos.reshape(-1)[0]
+        cache_len = jnp.asarray(cache_len, jnp.int32)
+        if cfg.rope != "mrope":
+            pos = jnp.broadcast_to(cache_len, inputs.shape[:2])
+    elif caches is not None:           # prefill into fresh caches
+        cache_len = jnp.zeros((), jnp.int32)
+
+    body = superblock
+    if remat and mode == "train":
+        body = jax.checkpoint(superblock, prevent_cse=False)
+
+    if caches is None:
+        x, _ = scan_aligned(lambda c, p: body(c, (p, None)), x, params["sb"])
+        new_caches = None
+    else:
+        x, new_caches = scan_aligned(lambda c, a: body(c, a), x,
+                                     (params["sb"], caches))
+    return x, new_caches
+
+
+def lm_logits(params, cfg, x: Array, tp_shard: bool) -> Array:
+    """(B, S, V_local) logits (TP-sharded on vocab)."""
+    h = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = fsdp_gather(params["lm_head"])                   # (d, V_l)
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=F32)
+
+
+def lm_loss(params, cfg, x: Array, labels: Array, tp_shard: bool,
+            seq_chunk: int = 512) -> Array:
+    """Mean cross-entropy with vocab TP-sharded; seq-chunked so the full
+    (B, S, V) logits tensor never materializes."""
+    B, S, d = x.shape
+    h = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    w = fsdp_gather(params["lm_head"])                   # (d, V_l)
+    V_l = w.shape[1]
+    base = (jax.lax.axis_index(TP) * V_l) if tp_shard else 0
+    ch = min(seq_chunk, S)
+    nch = -(-S // ch)
+    pad = nch * ch - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hp = hp.reshape(B, nch, ch, d).transpose(1, 0, 2, 3)
+    lp = lp.reshape(B, nch, ch).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, args):
+        # rematerialized: without this the backward saves each chunk's full
+        # (B, ch, V_local) f32 logits/exp residuals — 13 GB/chip on the
+        # vocab-unsharded xlstm cell (EXPERIMENTS.md §Perf P6)
+        hc, lc = args
+        logits = jnp.einsum("bsd,dv->bsv", hc, w,
+                            preferred_element_type=F32)
+        # stability offset only; exact under stop_gradient (cancels in lse).
+        # stop_gradient BEFORE pmax: pmax has no differentiation rule, and
+        # with a symbolic-zero tangent it is never asked for one.
+        mx = jax.lax.stop_gradient(logits.max(-1))
+        if tp_shard:
+            mx = jax.lax.pmax(mx, TP)
+        lse = jnp.exp(logits - mx[..., None]).sum(-1)
+        if tp_shard:
+            lse = tp_psum(lse)
+        lse = jnp.log(lse) + mx
+        loc = lc - base
+        ok = (loc >= 0) & (loc < V_l)
+        true_logit = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, V_l - 1)[..., None], -1)[..., 0]
+        true_logit = jnp.where(ok, true_logit, 0.0)
+        if tp_shard:
+            true_logit = tp_psum(true_logit)
+        valid = (lc >= 0).astype(F32)
+        nll = (lse - true_logit) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = scan_aligned(
+        chunk_loss, (jnp.zeros((), F32), jnp.zeros((), F32)), (hp, lp))
+    # aggregate across the batch-sharded axes
+    tot = psum_forced(tot, batch_axes())
+    cnt = psum_forced(cnt, batch_axes())
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,141 @@
+"""Mamba block (jamba's SSM layers), manual-SPMD.
+
+Sharding: d_inner is TP-sharded (jamba: 8192/16 = 512 per rank); the
+selective-scan state (B, d_inner_l, d_state) is rank-local; x_proj is the
+block's only TP reduction (row-sharded matmul -> psum) besides out_proj.
+
+Sequence handling: training/prefill runs the selective scan chunked over
+time via lax.scan (compiled body = one chunk; recurrence carried across
+chunks). Within a chunk the recurrence is materialized step-by-step — a
+chunk-parallel (associative-scan) variant is a recorded hillclimb candidate
+in EXPERIMENTS.md §Perf. Decode is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import TP, fsdp_gather, scan_aligned, tp_psum
+
+Array = jax.Array
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+class MambaParams(NamedTuple):
+    ln: Array          # (d,)
+    in_proj: Array     # (d, 2*di_l)
+    conv_w: Array      # (d_conv, di_l)
+    conv_b: Array      # (di_l,)
+    x_proj: Array      # (di_l, dt_rank + 2*d_state)
+    dt_w: Array        # (dt_rank, di_l)
+    dt_b: Array        # (di_l,)
+    a_log: Array       # (di_l, d_state)
+    d_skip: Array      # (di_l,)
+    out_proj: Array    # (di_l, d)
+
+
+class MambaState(NamedTuple):
+    conv: Array        # (B, d_conv-1, di_l) trailing inputs
+    h: Array           # (B, di_l, d_state) f32
+
+
+def _ssm_scan(x, dt, b_in, c_in, a, d_skip, h0, chunk: int):
+    """Selective scan: h_t = exp(dt_t a) h_{t-1} + dt_t b_t x_t;
+    y_t = c_t . h_t + D x_t.  Shapes: x/dt (B,S,di), b/c (B,S,ds),
+    a (di,ds), h0 (B,di,ds). Chunked lax.scan; returns (y, h_final)."""
+    B, S, di = x.shape
+    ds = a.shape[1]
+    nc = S // chunk
+
+    @jax.checkpoint
+    def chunk_body(h, args):
+        # rematerialized per chunk: without this the backward saves the
+        # per-timestep (B, di, ds) recurrence residuals for the WHOLE
+        # sequence (jamba train_4k: >100 GB/chip; EXPERIMENTS.md §Perf)
+        xc, dtc, bc, cc = args      # (B, L, ...)
+
+        def step(h, t_args):
+            xt, dtt, bt, ct = t_args           # (B,di),(B,di),(B,ds),(B,ds)
+            decay = jnp.exp(dtt[..., None] * a)            # (B,di,ds)
+            h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bds,bs->bd", h, ct) + d_skip * xt
+            return h, y
+
+        h, yc = scan_aligned(step, h,
+                             (xc.transpose(1, 0, 2), dtc.transpose(1, 0, 2),
+                              bc.transpose(1, 0, 2), cc.transpose(1, 0, 2)))
+        return h, yc.transpose(1, 0, 2)
+
+    xr = x.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    br = b_in.reshape(B, nc, chunk, ds).transpose(1, 0, 2, 3)
+    cr = c_in.reshape(B, nc, chunk, ds).transpose(1, 0, 2, 3)
+    h, y = scan_aligned(chunk_body, h0, (xr, dtr, br, cr))
+    return y.transpose(1, 0, 2, 3).reshape(B, S, di), h
+
+
+def mamba_block(p: MambaParams, x: Array, cfg, *, state: MambaState | None,
+                tp_shard: bool, chunk: int = 256) -> tuple:
+    """x: (B, S, d) replicated over TP -> (out, new_state)."""
+    B, S, d = x.shape
+    from .layers import rms_norm
+    h = rms_norm(x, p.ln, cfg.norm_eps)
+
+    w_in = fsdp_gather(p.in_proj)
+    xz = jnp.einsum("bsd,de->bse", h, w_in, preferred_element_type=F32)
+    di_l = xz.shape[-1] // 2
+    xs, z = xz[..., :di_l], xz[..., di_l:]
+
+    # depthwise causal conv over time (d_conv taps)
+    K = cfg.d_conv
+    if state is None:
+        pad = jnp.zeros((B, K - 1, di_l), xs.dtype)
+        new_conv = xs[:, S - (K - 1):, :] if S >= K - 1 else None
+    else:
+        pad = state.conv.astype(xs.dtype)
+        new_conv = jnp.concatenate([pad, xs], 1)[:, -(K - 1):, :]
+    xp = jnp.concatenate([pad, xs], axis=1)             # (B, S+K-1, di_l)
+    xc = sum(xp[:, i:i + S, :] * p.conv_w[i] for i in range(K)) + p.conv_b
+    xc = jax.nn.silu(xc)
+
+    # x_proj: row-sharded over TP -> psum for the small (dt, B, C) features
+    feats = jnp.einsum("bsd,de->bse", xc.astype(BF16), p.x_proj,
+                       preferred_element_type=F32)
+    if tp_shard:
+        feats = tp_psum(feats)
+    dtr = cfg.dt_rank
+    dt_in = feats[..., :dtr]
+    b_in = feats[..., dtr:dtr + cfg.d_state]
+    c_in = feats[..., dtr + cfg.d_state:]
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in.astype(BF16), p.dt_w,
+                   preferred_element_type=F32) + p.dt_b)
+    a = -jnp.exp(p.a_log.astype(F32))                   # (di_l, ds)
+
+    h0 = state.h if state is not None else jnp.zeros((B, di_l, cfg.d_state), F32)
+    if S == 1:  # decode fast path
+        decay = jnp.exp(dt[:, 0, :, None] * a)
+        hn = decay * h0 + (dt[:, 0] * xc[:, 0].astype(F32))[..., None] \
+            * b_in[:, 0, None, :]
+        y = jnp.einsum("bds,bs->bd", hn, c_in[:, 0]) + p.d_skip * xc[:, 0]
+        y = y[:, None, :]
+    else:
+        ch = min(chunk, S)
+        assert S % ch == 0
+        y, hn = _ssm_scan(xc.astype(F32), dt, b_in, c_in, a, p.d_skip, h0, ch)
+
+    y = y * jax.nn.silu(z)
+    w_out = fsdp_gather(p.out_proj, axis=1)
+    out = jnp.einsum("bse,ed->bsd", y.astype(BF16), w_out,
+                     preferred_element_type=F32)
+    if tp_shard:
+        out = tp_psum(out)
+    new_state = MambaState(
+        conv=(new_conv if new_conv is not None else
+              jnp.zeros((B, K - 1, di_l), xs.dtype)).astype(BF16),
+        h=hn) if state is not None or S == 1 else None
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,190 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential), manual-SPMD but — per the
+xlstm-125m config — weights replicated across TP (tp_shard=False; the model
+is far too small for 16-way tensor parallel, see DESIGN.md).
+
+mLSTM train/prefill uses the stabilized *parallel* form through the shared
+blockwise-attention machinery (exponential-gate bias terms F_q - F_k + i_k
+via flash_attention's bias_qk hook, unnormalized-softmax semantics
+approximated by its running max/denominator); decode is the O(1) recurrent
+update of (C, n, m). sLSTM is inherently sequential: lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import flash_attention, rms_norm
+from .sharding import fsdp_gather, scan_aligned
+
+Array = jax.Array
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+class MLSTMParams(NamedTuple):
+    ln: Array        # (d,)
+    w_qkv: Array     # (d, 3*NH*dh)
+    w_if: Array      # (d, 2*NH)  input/forget gate projections
+    b_if: Array      # (2*NH,)
+    w_o: Array       # (d, NH*dh) output gate
+    w_up: Array      # (d, 2*ef*d)  pre-up-projection (expand factor)
+    w_down: Array    # (ef*d, d)
+    ln_inner: Array  # (NH*dh,)
+
+
+class MLSTMState(NamedTuple):
+    c: Array         # (B, NH, dh, dh) f32
+    n: Array         # (B, NH, dh) f32
+    m: Array         # (B, NH) f32
+
+
+def mlstm_block(p: MLSTMParams, x: Array, cfg, *, state: MLSTMState | None,
+                tp_shard: bool) -> tuple:
+    B, S, d = x.shape
+    NH = cfg.xl_heads
+    h = rms_norm(x, p.ln, cfg.norm_eps)
+
+    # up-projection (expand 2x) with gate, xLSTM block style
+    wu = fsdp_gather(p.w_up)
+    up = jnp.einsum("bsd,de->bse", h, wu, preferred_element_type=F32)
+    u, gate = jnp.split(up, 2, axis=-1)
+    ef_d = u.shape[-1]
+    dh = ef_d // NH
+
+    # q, k, v straight from the up-projected stream
+    q, k, v = jnp.split(_qkv(p, u, d), 3, axis=-1)
+    q = q.reshape(B, S, NH, dh)
+    k = k.reshape(B, S, NH, dh) / jnp.sqrt(dh).astype(F32)
+    v = v.reshape(B, S, NH, dh)
+
+    gif = jnp.einsum("bsd,dg->bsg", h, fsdp_gather(p.w_if),
+                     preferred_element_type=F32) + p.b_if
+    ig, fg = gif[..., :NH], gif[..., NH:]               # (B, S, NH)
+    logf = jax.nn.log_sigmoid(fg)
+
+    if S == 1 and state is not None:
+        mn = jnp.maximum(logf[:, 0] + state.m, ig[:, 0])        # (B, NH)
+        fw = jnp.exp(logf[:, 0] + state.m - mn)
+        iw = jnp.exp(ig[:, 0] - mn)
+        kt, vt, qt = k[:, 0], v[:, 0], q[:, 0]                  # (B,NH,dh)
+        c = fw[..., None, None] * state.c + \
+            iw[..., None, None] * jnp.einsum("bhk,bhv->bhkv",
+                                             kt.astype(F32), vt.astype(F32))
+        n = fw[..., None] * state.n + iw[..., None] * kt.astype(F32)
+        num = jnp.einsum("bhk,bhkv->bhv", qt.astype(F32), c)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt.astype(F32), n))
+        out_h = num / jnp.maximum(den, jnp.exp(-mn))[..., None]
+        new_state = MLSTMState(c=c, n=n, m=mn)
+        o = out_h.reshape(B, 1, NH * dh)
+    else:
+        # parallel form: blockwise attention with gate bias terms
+        F_cum = jnp.cumsum(logf, axis=1)                        # (B, S, NH)
+        bias_q = F_cum                                           # F_t
+        bias_k = ig - F_cum                                      # i_s - F_s
+        o = flash_attention(q.astype(BF16), k.astype(BF16), v.astype(BF16),
+                            q_offset=jnp.zeros((), jnp.int32),
+                            bias_qk=(bias_q, bias_k))
+        o = o.reshape(B, S, NH * dh)
+        if state is not None:
+            # prefill: materialize the final recurrent state so decode can
+            # continue.  C_S = sum_s exp(F_S - F_s + i_s - m) k_s v_s^T
+            wlog = (F_cum[:, -1:, :] - F_cum + ig)              # (B,S,NH)
+            m_fin = wlog.max(1)                                 # (B,NH)
+            wts = jnp.exp(wlog - m_fin[:, None, :])
+            c = jnp.einsum("bsh,bshk,bshv->bhkv", wts, k.astype(F32),
+                           v.astype(F32))
+            n = jnp.einsum("bsh,bshk->bhk", wts, k.astype(F32))
+            new_state = MLSTMState(c=c, n=n, m=m_fin)
+        else:
+            new_state = None
+
+    o = rms_norm(o, p.ln_inner, cfg.norm_eps)
+    og = jnp.einsum("bsd,de->bse", h, fsdp_gather(p.w_o),
+                    preferred_element_type=F32)
+    o = o * jax.nn.sigmoid(og)
+    y = o.astype(F32) * jax.nn.silu(gate)
+    wd = fsdp_gather(p.w_down, axis=1)   # (ef, d): FSDP on d
+    out = jnp.einsum("bse,ed->bsd", y.astype(BF16), wd,
+                     preferred_element_type=F32)
+    return out.astype(x.dtype), new_state
+
+
+def _qkv(p: MLSTMParams, u: Array, d: int) -> Array:
+    wqkv = fsdp_gather(p.w_qkv)
+    return jnp.einsum("bse,ef->bsf", u.astype(BF16), wqkv,
+                      preferred_element_type=F32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+class SLSTMParams(NamedTuple):
+    ln: Array        # (d,)
+    w_x: Array       # (d, 4*NH*dh)  gates i,f,z,o from input
+    r_h: Array       # (NH, dh, 4*dh) block-diagonal recurrent weights
+    b: Array         # (4*NH*dh,)
+    w_up: Array      # (d_head_total -> ffn) (d, ff)
+    w_down: Array    # (ff, d)
+    ln_ff: Array     # (d,)
+
+
+class SLSTMState(NamedTuple):
+    h: Array         # (B, NH, dh) f32
+    c: Array
+    n: Array
+    m: Array         # (B, NH, dh)
+
+
+def slstm_block(p: SLSTMParams, x: Array, cfg, *, state: SLSTMState | None,
+                tp_shard: bool) -> tuple:
+    B, S, d = x.shape
+    NH = cfg.xl_heads
+    dh = d // NH
+    xin = rms_norm(x, p.ln, cfg.norm_eps)
+    wx = fsdp_gather(p.w_x)
+    gx = jnp.einsum("bsd,dg->bsg", xin, wx,
+                    preferred_element_type=F32) + p.b    # (B,S,4*NH*dh)
+    gx = gx.reshape(B, S, NH, 4 * dh)
+
+    if state is None:
+        z = jnp.zeros((B, NH, dh), F32)
+        st = SLSTMState(h=z, c=z, n=z + 1e-6, m=z)
+    else:
+        st = state
+
+    def step(st, gxt):
+        rec = jnp.einsum("bhd,hdg->bhg", st.h, p.r_h.astype(F32))
+        g = gxt + rec                                    # (B, NH, 4*dh)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        mn = jnp.maximum(gf + st.m, gi)                  # exp-gate stabilizer
+        i_ = jnp.exp(gi - mn)
+        f_ = jnp.exp(gf + st.m - mn)
+        c = f_ * st.c + i_ * jnp.tanh(gz)
+        n = f_ * st.n + i_
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return SLSTMState(h=h, c=c, n=n, m=mn), h
+
+    if S == 1:
+        new_st, h = step(st, gx[:, 0])
+        hs = h[:, None]
+    else:
+        new_st, hs = scan_aligned(step, st,
+                                  gx.transpose(1, 0, 2, 3))
+        hs = hs.transpose(1, 0, 2, 3)                    # (B,S,NH,dh)
+    hs = hs.reshape(B, S, d)
+
+    # small gated FFN (proj factor 4/3-ish via cfg-independent 2x here)
+    hf = rms_norm(hs.astype(x.dtype), p.ln_ff, cfg.norm_eps)
+    wu = fsdp_gather(p.w_up)
+    wd = fsdp_gather(p.w_down, axis=1)   # (ef, d): FSDP on d
+    ff = jnp.einsum("bsd,df->bsf", hf, wu, preferred_element_type=F32)
+    ff = jax.nn.silu(ff).astype(BF16)
+    out = jnp.einsum("bsf,fd->bsd", ff, wd, preferred_element_type=F32)
+    return (hs.astype(F32) + out).astype(x.dtype), \
+        (new_st if state is not None or S == 1 else None)

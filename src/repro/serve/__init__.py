@@ -1,0 +1,2 @@
+"""Serving runtime: prefill + decode steps, paged KV cache with learned
+page-table option."""

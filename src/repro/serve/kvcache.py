@@ -1,0 +1,90 @@
+"""Paged KV cache with a learned page table.
+
+vLLM-style paging: the logical KV sequence of each request is scattered
+over fixed-size physical pages; a page table maps (request, logical_block)
+-> physical page. The default table is a dense int32 array; the *learned*
+mode replaces the dense table for the (sorted) global block-key space with
+the paper's lookup path — (request_id << 32 | logical_block) keys indexed by
+an agile-reuse RMI, exercising repro.kernels.lookup as the serving hot path.
+
+This module manages the page pool on the host (allocation is control-plane)
+while gather/scatter of KV pages is jitted data-plane work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedKVCache:
+    n_pages: int
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    n_layers: int
+    dtype: object = jnp.bfloat16
+    kv: jax.Array = None                 # (L, 2, n_pages, page, H, dh)
+    free: list = None
+    table: dict = field(default_factory=dict)   # (req, block) -> page
+
+    def __post_init__(self):
+        if self.kv is None:
+            self.kv = jnp.zeros((self.n_layers, 2, self.n_pages,
+                                 self.page_size, self.n_kv_heads,
+                                 self.head_dim), self.dtype)
+        if self.free is None:
+            self.free = list(range(self.n_pages))
+
+    # -- control plane -----------------------------------------------------
+    def allocate(self, req: int, logical_block: int) -> int:
+        if not self.free:
+            raise MemoryError("KV page pool exhausted")
+        page = self.free.pop()
+        self.table[(req, logical_block)] = page
+        return page
+
+    def release(self, req: int) -> None:
+        for key in [k for k in self.table if k[0] == req]:
+            self.free.append(self.table.pop(key))
+
+    def pages_for(self, req: int, n_blocks: int) -> np.ndarray:
+        return np.asarray([self.table[(req, b)] for b in range(n_blocks)],
+                          np.int32)
+
+    # -- data plane ----------------------------------------------------------
+    def write(self, layer: int, req_pages: np.ndarray, pos_in_page: int,
+              k: jax.Array, v: jax.Array) -> None:
+        """Append one token's K/V for a batch of requests (pages gathered
+        per request)."""
+        pages = jnp.asarray(req_pages)
+        self.kv = self.kv.at[layer, 0, pages, pos_in_page].set(k)
+        self.kv = self.kv.at[layer, 1, pages, pos_in_page].set(v)
+
+    def gather(self, layer: int, pages: np.ndarray) -> tuple:
+        """(k, v) of shape (n_blocks, page, H, dh) for one request."""
+        p = jnp.asarray(pages)
+        return self.kv[layer, 0, p], self.kv[layer, 1, p]
+
+
+def learned_page_table(table: dict):
+    """Build a learned index over the page table's flat key space.
+
+    Returns (lookup_fn, keys, pages): lookup_fn(query_keys) -> page ids via
+    the paper's RMI + bounded-search kernel. Used by benchmarks to compare
+    dense vs learned table lookup at scale."""
+    from repro.core import rmi as rmi_mod
+    items = sorted(table.items())
+    keys = jnp.asarray([float((r << 22) | b) for (r, b), _ in items])
+    pages = jnp.asarray([p for _, p in items], jnp.int32)
+    idx = rmi_mod.build_rmi(keys, n_leaves=max(len(items) // 64, 1),
+                            kind="linear")
+
+    def lookup(query_keys: jax.Array) -> jax.Array:
+        pos = rmi_mod.lookup(idx, query_keys)
+        return pages[jnp.clip(pos, 0, pages.shape[0] - 1)]
+
+    return lookup, keys, pages

@@ -1,0 +1,166 @@
+"""shard_map serving steps.
+
+prefill: full-sequence forward into fresh caches, returns last-token logits.
+decode:  one-token step against the caches (the shape cells ``decode_32k``
+         and ``long_500k`` lower THIS function, not train_step).
+
+Sharding variants:
+  batch-sharded (decode_32k): batch over (pod, data), KV heads over model.
+  seq-sharded   (long_500k, global_batch=1): batch replicated, cache time
+                axis sharded over data, flash-decoding psum combine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.sharding import (TP, batch_axes_for, set_batch_axes,
+                                   set_fsdp_gather, set_mesh_axes,
+                                   unvary)
+
+F32 = jnp.float32
+
+
+def unvary_to_specs(tree, specs):
+    """Align each output leaf's varying-axes to exactly the axes named in
+    its out_spec (numeric identity, see sharding.unvary)."""
+    def axes_of(sp):
+        out = []
+        for e in sp:
+            if e is None:
+                continue
+            out += list(e) if isinstance(e, tuple) else [e]
+        return tuple(out)
+    return jax.tree.map(
+        lambda x, sp: unvary(x, keep=axes_of(sp)), tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.Array) or hasattr(x, "shape"))
+
+
+def _cache_specs(cfg, mesh, *, batch_sharded: bool, seq_shard: bool) -> dict:
+    tp = TP if cfg.tp_shard else None
+    b_ax = batch_axes_for(mesh) if batch_sharded else None
+    seq_ax = "data" if seq_shard else None
+    out = {}
+    for i in range(cfg.sb):
+        kind = cfg.pattern[i]
+        if kind == "attn":
+            # heads dim is TP-sharded both for kv_sharded archs (padded kv
+            # heads) and kv-replicated ones (tp one-head slots)
+            kv_tp = tp if (cfg.kv_sharded or cfg.tp_shard) else None
+            kv = P(None, b_ax, seq_ax, kv_tp, None)
+            out[f"pos{i}"] = {"k": kv, "v": kv}
+        elif kind == "mamba":
+            out[f"pos{i}"] = {"conv": P(None, b_ax, None, tp),
+                              "h": P(None, b_ax, tp, None)}
+        elif kind == "mlstm":
+            out[f"pos{i}"] = {"c": P(None, b_ax, None, None, None),
+                              "n": P(None, b_ax, None, None),
+                              "m": P(None, b_ax, None)}
+        elif kind == "slstm":
+            z = P(None, b_ax, None, None)
+            out[f"pos{i}"] = {k: z for k in ("h", "c", "n", "m")}
+    return out
+
+
+def serve_shapes(cfg, shape, mesh) -> dict:
+    """ShapeDtypeStructs for the decode cell (GLOBAL shapes)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_batch_shards = 1
+    for a in batch_axes_for(mesh):
+        n_batch_shards *= mesh.shape[a]
+    batch_sharded = B >= n_batch_shards
+    seq_shard = not batch_sharded
+    if cfg.embed_input:
+        tok = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((3, B, 1) if cfg.rope == "mrope" else (B, 1),
+                               jnp.int32)
+    # per-shard cache shapes -> global: multiply sharded dims back up.
+    # init_cache builds LOCAL shapes given batch_local; for lowering we want
+    # GLOBAL arrays, so pass global batch and the full seq.
+    caches = M.init_cache(cfg, B, S, seq_shard=1, shapes_only=True,
+                          local=False)
+    return {"tokens": tok, "pos": pos, "caches": caches,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+            "batch_sharded": batch_sharded, "seq_shard": seq_shard}
+
+
+def _strip_fsdp(specs):
+    """Serve-replicated weights: drop the data-axis shard from param specs
+    (weights fully resident per chip; no per-step gather)."""
+    return jax.tree.map(
+        lambda sp: P(*(None if e == "data" else e for e in sp)), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_decode_step(cfg, mesh, *, batch_sharded: bool = True,
+                     seq_shard: bool = False,
+                     replicate_weights: bool = False):
+    """Returns (fn, in_specs). fn(params, caches, tokens, pos, cache_len)
+    -> (next_token_ids (B,), new_caches). ``replicate_weights`` trades
+    params-HBM for eliminating every per-step weight all_gather (small
+    archs; EXPERIMENTS.md §Perf)."""
+    p_specs = M.param_specs(cfg)
+    if replicate_weights:
+        p_specs = _strip_fsdp(p_specs)
+    c_specs = _cache_specs(cfg, mesh, batch_sharded=batch_sharded,
+                           seq_shard=seq_shard)
+    b_ax = batch_axes_for(mesh) if batch_sharded else None
+    tok_spec = P(b_ax, None, None) if cfg.embed_input else P(b_ax, None)
+    pos_spec = P(None, b_ax, None) if cfg.rope == "mrope" else P(b_ax, None)
+    mesh_b_axes = batch_axes_for(mesh)
+
+    def step_fn(params, caches, tokens, pos, cache_len):
+        set_batch_axes(mesh_b_axes)
+        set_mesh_axes(mesh.axis_names)
+        set_fsdp_gather(not replicate_weights)
+        x, new_caches = M.forward(params, cfg, tokens, pos=pos,
+                                  caches=caches, mode="decode",
+                                  cache_len=cache_len, seq_sharded=seq_shard)
+        logits = M.lm_logits(params, cfg, x, cfg.tp_shard)   # (B,1,V_l)
+        logits = logits[:, 0, :]
+        if cfg.tp_shard:
+            logits = jax.lax.all_gather(logits, TP, axis=1, tiled=True)
+        nxt = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        b_keep = (mesh_b_axes if batch_sharded else ())
+        return (unvary(nxt, keep=b_keep),
+                unvary_to_specs(new_caches, c_specs))
+
+    in_specs = (p_specs, c_specs, tok_spec, pos_spec, P())
+    out_specs = (P(b_ax), c_specs)
+    fn = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=True)
+    return jax.jit(fn, donate_argnums=(1,)), in_specs
+
+
+def make_prefill(cfg, mesh, *, batch_sharded: bool = True):
+    """Full-sequence prefill: returns last-position logits + filled caches.
+    Lowered by the ``prefill_32k`` cells."""
+    p_specs = M.param_specs(cfg)
+    c_specs = _cache_specs(cfg, mesh, batch_sharded=batch_sharded,
+                           seq_shard=False)
+    b_ax = batch_axes_for(mesh) if batch_sharded else None
+    tok_spec = P(b_ax, None, None) if cfg.embed_input else P(b_ax, None)
+    pos_spec = P(None, b_ax, None) if cfg.rope == "mrope" else P(b_ax, None)
+    mesh_b_axes = batch_axes_for(mesh)
+
+    def prefill_fn(params, caches, tokens, pos):
+        set_batch_axes(mesh_b_axes)
+        set_mesh_axes(mesh.axis_names)
+        set_fsdp_gather(True)
+        x, new_caches = M.forward(params, cfg, tokens, pos=pos,
+                                  caches=caches, mode="prefill")
+        last = x[:, -1:, :]
+        logits = M.lm_logits(params, cfg, last, cfg.tp_shard)[:, 0, :]
+        b_keep = (mesh_b_axes if batch_sharded else ()) + ((TP,) if cfg.tp_shard else ())
+        return (unvary(logits, keep=b_keep),
+                unvary_to_specs(new_caches, c_specs))
+
+    in_specs = (p_specs, c_specs, tok_spec, pos_spec)
+    out_specs = (P(b_ax, TP if cfg.tp_shard else None), c_specs)
+    fn = jax.shard_map(prefill_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=True)
+    return jax.jit(fn, donate_argnums=(1,)), in_specs

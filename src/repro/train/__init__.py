@@ -1,0 +1,2 @@
+"""Distributed training runtime: sharded AdamW, the shard_map train step,
+gradient compression, checkpointing, elasticity."""

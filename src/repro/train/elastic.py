@@ -1,0 +1,80 @@
+"""Elastic scaling + straggler mitigation (simulated; tested with a fake
+clock in tests/test_runtime.py).
+
+At 1000+ nodes, failures are routine. The controller below implements the
+policy layer the launcher uses:
+  * heartbeat registry with a deadline — hosts that miss it are `suspect`,
+  * straggler mitigation: a step that exceeds `straggler_factor` x the
+    trailing-median step time marks the slowest host and (policy) either
+    reassigns its data shard or triggers a re-mesh,
+  * re-mesh: on confirmed loss, pick the best (pod, data, model)
+    factorization of the survivors (launch.mesh.make_mesh_for), restore the
+    latest checkpoint *resharded* to the new mesh, and resume — parameters
+    are FSDP-sharded so any device count that preserves divisibility works.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class HostState:
+    last_heartbeat: float
+    step_times: list = field(default_factory=list)
+
+
+@dataclass
+class ElasticController:
+    n_hosts: int
+    heartbeat_timeout: float = 60.0
+    straggler_factor: float = 2.0
+    clock: callable = time.monotonic
+    hosts: dict = None
+    generation: int = 0            # bumps on every re-mesh
+
+    def __post_init__(self):
+        now = self.clock()
+        self.hosts = {h: HostState(now) for h in range(self.n_hosts)}
+
+    # -- signals -----------------------------------------------------------
+    def heartbeat(self, host: int, step_time: float | None = None):
+        st = self.hosts.get(host)
+        if st is None:
+            return
+        st.last_heartbeat = self.clock()
+        if step_time is not None:
+            st.step_times.append(step_time)
+            st.step_times = st.step_times[-32:]
+
+    # -- queries -------------------------------------------------------------
+    def dead_hosts(self) -> list:
+        now = self.clock()
+        return [h for h, st in self.hosts.items()
+                if now - st.last_heartbeat > self.heartbeat_timeout]
+
+    def stragglers(self) -> list:
+        meds = {h: statistics.median(st.step_times)
+                for h, st in self.hosts.items() if len(st.step_times) >= 4}
+        if len(meds) < 2:
+            return []
+        global_med = statistics.median(meds.values())
+        return [h for h, m in meds.items()
+                if m > self.straggler_factor * global_med]
+
+    # -- actions -------------------------------------------------------------
+    def plan(self) -> dict:
+        """Returns the action the launcher should take this round."""
+        dead = self.dead_hosts()
+        if dead:
+            survivors = [h for h in self.hosts if h not in dead]
+            for h in dead:
+                del self.hosts[h]
+            self.generation += 1
+            return {"action": "remesh", "survivors": len(survivors),
+                    "generation": self.generation}
+        slow = self.stragglers()
+        if slow:
+            return {"action": "reassign_data", "hosts": slow}
+        return {"action": "none"}

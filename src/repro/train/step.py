@@ -1,0 +1,167 @@
+"""The shard_map training step (manual SPMD — DESIGN.md §4).
+
+Collective inventory per step (all explicit in this file or the layers):
+  all_gather(data)        FSDP weight materialization (per superblock)
+  psum_scatter(data)      its transpose: gradient reduce-scatter (ZeRO)
+  psum(model)             one per block output + loss softmax terms
+  psum(pod)               gradient DP sync (optionally int8-compressed)
+  psum(pod,data)          scalar loss/metric aggregation
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.layers import sync_grad
+from repro.models.sharding import (batch_axes_for, scan_aligned,
+                                   set_batch_axes, set_fsdp_gather,
+                                   set_mesh_axes, set_psum_dtype,
+                                   unvary)
+from . import grad_compress, optimizer
+
+F32 = jnp.float32
+
+
+def batch_specs(cfg, mesh) -> dict:
+    b_ax = batch_axes_for(mesh)
+    pos_spec = P(None, b_ax, None) if cfg.rope == "mrope" \
+        else P(b_ax, None)
+    tok = P(b_ax, None, None) if cfg.embed_input \
+        else P(b_ax, None)
+    return {"inputs": tok, "labels": P(b_ax, None), "pos": pos_spec}
+
+
+def batch_shapes(cfg, shape, dtype_tokens=jnp.int32) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_input:
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), dtype_tokens)
+    pos = jax.ShapeDtypeStruct((3, B, S) if cfg.rope == "mrope" else (B, S),
+                               jnp.int32)
+    return {"inputs": inputs, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "pos": pos}
+
+
+def auto_microbatch(cfg, shape, mesh, *, budget_bytes: float = 2.5e9) -> int:
+    """Microbatch count so the rematerialization checkpoint residuals
+    (one saved x per superblock per microbatch-step) fit the budget:
+        saved = B_local/nmb * S * d_model * 2B * n_sb  <=  budget."""
+    n_batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_batch *= mesh.shape[a]
+    b_local = max(shape.global_batch // n_batch, 1)
+    # hybrid/ssm archs save wider residuals (d_inner streams, chunk scans)
+    width = cfg.d_model * (3 if "mamba" in cfg.pattern else 1)
+    saved = b_local * shape.seq_len * width * 2 * cfg.n_sb
+    nmb = 1
+    while saved / nmb > budget_bytes and nmb < b_local:
+        nmb *= 2
+    return nmb
+
+
+def make_train_step(cfg, mesh, *, lr: float = 3e-4, compress_pod: bool = False,
+                    remat: bool = True, donate: bool = True,
+                    microbatch: int = 1, psum_dtype=None):
+    """Returns (step_fn, in_specs_dict). step_fn(params, opt, residual,
+    batch) -> (params, opt, residual, metrics).
+
+    ``microbatch`` > 1 enables gradient accumulation: the local batch is
+    split into that many slices scanned sequentially, with f32 grad
+    accumulators (bytes ~= params/chip * 4) — this is what bounds the
+    activation footprint of the big train cells (EXPERIMENTS.md §Perf)."""
+    p_specs = M.param_specs(cfg)
+    has_pod = "pod" in mesh.axis_names
+
+    def parse(s: str) -> tuple:
+        axes = tuple(a for a in s.split(",") if a)
+        return axes if has_pod else tuple(a for a in axes if a != "pod")
+
+    sync_axes = M.param_sync_axes(cfg)
+    # replication weight for exact global grad-norm (data/model only)
+    repl_w = jax.tree.map(
+        lambda s: 1.0 / float(jnp.prod(jnp.asarray(
+            [mesh.shape[a] for a in parse(s) if a in ("data", "model")]
+            or [1.0]))), sync_axes)
+
+    bspecs = batch_specs(cfg, mesh)
+    b_axes = batch_axes_for(mesh)
+
+    def step_fn(params, opt, residual, inputs, labels, pos):
+        set_batch_axes(b_axes)   # trace-time: bind loss psums to this mesh
+        set_mesh_axes(mesh.axis_names)
+        set_fsdp_gather(True)
+        set_psum_dtype(psum_dtype)
+        # NOTE: no manual grad-sync. Under shard_map with check_vma=True,
+        # JAX's varying-manual-axes system transposes psums correctly, so
+        # replicated-parameter gradients arrive globally summed already
+        # (verified in tests/test_multidevice.py::test_spmd_numeric_...).
+        params_s = params
+
+        def loss_fn(p, inp, lab, po):
+            x, _ = M.forward(p, cfg, inp, pos=po, mode="train",
+                             remat=remat)
+            return M.lm_loss(p, cfg, x, lab, cfg.tp_shard)
+
+        if microbatch == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params_s, inputs, labels, pos)
+        else:
+            nmb = microbatch
+            B = inputs.shape[0]
+            assert B % nmb == 0, (B, nmb)
+            split0 = lambda a: a.reshape((nmb, B // nmb) + a.shape[1:])
+            mb_in = split0(inputs)
+            mb_lab = split0(labels)
+            if cfg.rope == "mrope":   # pos is (3, B, S): batch on axis 1
+                mb_pos = pos.reshape((3, nmb, B // nmb) + pos.shape[2:]) \
+                    .transpose(1, 0, 2, 3)
+            else:
+                mb_pos = split0(pos)
+
+            def mb_body(carry, mb):
+                acc, lsum = carry
+                inp, lab, po = mb
+                l, g = jax.value_and_grad(loss_fn)(params_s, inp, lab, po)
+                acc = jax.tree.map(lambda a, gi: a + gi.astype(F32), acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (grads, lsum), _ = scan_aligned(
+                mb_body, (zeros, jnp.zeros((), F32)),
+                (mb_in, mb_lab, mb_pos))
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            loss = lsum / nmb
+
+        if has_pod:
+            if compress_pod:
+                grads, residual = grad_compress.compressed_pod_psum(
+                    grads, residual)
+            else:
+                grads = jax.tree.map(lambda g: jax.lax.psum(g, "pod"), grads)
+
+        gnorm = optimizer.global_grad_norm(grads, repl_w)
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-12))
+        new_params, new_opt = optimizer.update(params, grads, opt, lr=lr,
+                                               scale=scale)
+        metrics = {"loss": unvary(loss), "grad_norm": unvary(gnorm)}
+        return new_params, new_opt, residual, metrics
+
+    # residual spec: mirrors params when compressing, dummy scalar otherwise
+    res_spec = p_specs if compress_pod else P()
+    in_specs = (p_specs, optimizer.state_specs(p_specs), res_spec,
+                bspecs["inputs"], bspecs["labels"], bspecs["pos"])
+    out_specs = (p_specs, optimizer.state_specs(p_specs), res_spec,
+                 {"loss": P(), "grad_norm": P()})
+
+    fn = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=True)
+    if donate:
+        return jax.jit(fn, donate_argnums=(0, 1, 2)), in_specs
+    return jax.jit(fn), in_specs

@@ -1,0 +1,164 @@
+"""Property-based tests (hypothesis) for the paper's invariants:
+
+  Eq. 3      dist_h >= exact KS distance (the reuse decision is conservative)
+  Lemma 3.2  affine folding is exact (linear AND our MLP extension)
+  Thm 3.3    error-bound algebra + soundness with measured bounds
+  Lemma 4.1  insertion budget keeps the worst-case CDF drift within sim-eps
+  + search/bucketing invariants the system relies on.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro  # noqa: F401
+from repro.core import adapt, bounds, cdf, models
+from repro.core.rmi import bounded_search
+
+SET = settings(max_examples=40, deadline=None)
+
+
+def sorted_keys(draw, min_size=5, max_size=300):
+    xs = draw(st.lists(st.floats(0.001, 1e9, allow_nan=False,
+                                 allow_infinity=False),
+                       min_size=min_size, max_size=max_size, unique=True))
+    return np.sort(np.asarray(xs, np.float64))
+
+
+@st.composite
+def two_datasets(draw):
+    return sorted_keys(draw), sorted_keys(draw)
+
+
+@SET
+@given(two_datasets(), st.integers(4, 128))
+def test_eq3_hist_distance_upper_bounds_ks(ds, m):
+    """Algorithm 2 over ANY bin count m upper-bounds the exact KS distance
+    (both datasets normalized to [0,1] like the production path)."""
+    a, b = ds
+    an = (a - a.min()) / max(a.max() - a.min(), 1e-300)
+    bn = (b - b.min()) / max(b.max() - b.min(), 1e-300)
+    ha = cdf.histogram_sorted(jnp.asarray(an), m, jnp.float64(0), jnp.float64(1))
+    hb = cdf.histogram_sorted(jnp.asarray(bn), m, jnp.float64(0), jnp.float64(1))
+    d_h = float(cdf.hist_distance(ha, hb))
+    d_ks = float(cdf.ks_distance(jnp.asarray(an), jnp.asarray(bn)))
+    assert d_h >= d_ks - 1e-9, (d_h, d_ks)
+
+
+@SET
+@given(two_datasets())
+def test_ks_distance_metric_properties(ds):
+    a, b = ds
+    da = jnp.asarray(a)
+    db = jnp.asarray(b)
+    assert abs(float(cdf.ks_distance(da, da))) < 1e-12
+    d1, d2 = float(cdf.ks_distance(da, db)), float(cdf.ks_distance(db, da))
+    assert abs(d1 - d2) < 1e-12
+    assert -1e-12 <= d1 <= 1.0 + 1e-12
+
+
+@SET
+@given(st.integers(0, 2 ** 31), st.floats(1.0, 100.0), st.floats(0.0, 1e6),
+       st.floats(1.0, 1e3), st.floats(0.0, 1e6), st.floats(1.0, 1e3))
+def test_lemma32_linear_fold_exact(seed, a, xs, xw, ys, yw):
+    """Folded linear model == T_out(M(T_in(x))) pointwise."""
+    rng = np.random.default_rng(seed)
+    p = models.LinearParams(a=jnp.float64(a), b=jnp.float64(rng.normal()))
+    src = adapt.DomainSpec(jnp.float64(xs), jnp.float64(xs + xw),
+                           jnp.float64(ys), jnp.float64(ys + yw))
+    tgt = adapt.DomainSpec(jnp.float64(xs * 2 + 1), jnp.float64(xs * 2 + 1 + xw * 3),
+                           jnp.float64(0.0), jnp.float64(999.0))
+    folded = adapt.adapt_linear(p, src, tgt)
+    (a1, b1), (a2, b2) = adapt.affine_coeffs(src, tgt)
+    x = jnp.asarray(rng.uniform(float(tgt.x_start), float(tgt.x_end), 50))
+    direct = a2 * (models.linear_predict(p, a1 * x + b1)) + b2
+    np.testing.assert_allclose(np.asarray(models.linear_predict(folded, x)),
+                               np.asarray(direct), rtol=1e-9, atol=1e-6)
+
+
+@SET
+@given(st.integers(0, 2 ** 31))
+def test_lemma32_mlp_fold_exact(seed):
+    """Our MLP extension of Lemma 3.2 is exact too."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    p = models.mlp_init(key)
+    src = adapt.DomainSpec(jnp.float64(0.0), jnp.float64(1.0),
+                           jnp.float64(0.0), jnp.float64(99.0))
+    tgt = adapt.DomainSpec(jnp.float64(5.0), jnp.float64(125.0),
+                           jnp.float64(0.0), jnp.float64(4999.0))
+    folded = adapt.adapt_mlp(p, src, tgt)
+    (a1, b1), (a2, b2) = adapt.affine_coeffs(src, tgt)
+    x = jnp.asarray(rng.uniform(5.0, 125.0, 64))
+    direct = a2 * models.mlp_predict(p, a1 * x + b1) + b2
+    np.testing.assert_allclose(np.asarray(models.mlp_predict(folded, x)),
+                               np.asarray(direct), rtol=1e-7, atol=1e-5)
+
+
+@SET
+@given(st.floats(0.0, 0.5), st.floats(0.5, 0.999), st.integers(10, 10 ** 7))
+def test_lemma41_budget_bounds_cdf_drift(gap, eps, n):
+    """Inserting <= budget points (all at one spot — worst case) keeps the
+    CDF drift n_i/(n_i+n) within the slack sim - eps."""
+    sim = min(eps + gap, 1.0)
+    budget = float(bounds.insertion_budget(jnp.float64(sim),
+                                           jnp.float64(eps), jnp.float64(n)))
+    n_i = int(budget)
+    drift = n_i / (n_i + n)
+    assert drift <= (sim - eps) + 1e-9
+    # one more insert may exceed the slack (budget is tight up to flooring)
+    if sim - eps > 1e-6 and budget > 0:
+        n_over = int(budget) + max(int(0.01 * n), 2)
+        assert n_over / (n_over + n) > (sim - eps) - 1.0 / n - 1e-9
+
+
+@SET
+@given(st.integers(0, 2 ** 31), st.integers(2, 400))
+def test_thm33_bounds_sound_with_exact_distance(seed, ns):
+    """Reusing a model across datasets with exact-KS distance `dist`, the
+    Thm 3.3 window (widened by the CDF quantization term 1) contains every
+    true position."""
+    rng = np.random.default_rng(seed)
+    src_keys = jnp.asarray(np.sort(rng.random(ns)))
+    tgt_keys = jnp.asarray(np.sort(rng.random(ns) ** 1.2))
+    pos_s = jnp.arange(ns, dtype=jnp.float64)
+    p = models.linear_fit(src_keys, pos_s)
+    elo, ehi = models.linear_err_bounds(p, src_keys, pos_s)
+    src = adapt.domain_of(src_keys)
+    tgt = adapt.domain_of(tgt_keys)
+    folded = adapt.adapt_linear(p, src, tgt)
+    dist = cdf.ks_distance(
+        (src_keys - src_keys[0]) / (src_keys[-1] - src_keys[0] + 1e-300),
+        (tgt_keys - tgt_keys[0]) / (tgt_keys[-1] - tgt_keys[0] + 1e-300))
+    s_dy = (tgt.y_end - tgt.y_start) / (src.y_end - src.y_start)
+    lo, hi = bounds.reuse_err_bounds(elo, ehi, dist, jnp.float64(ns), s_dy)
+    pred = models.linear_predict(folded, tgt_keys)
+    resid = jnp.arange(ns, dtype=jnp.float64) - pred
+    # +-1 slack: empirical CDFs quantize at 1/n (finite-sample edge term)
+    assert float(resid.min()) >= float(lo) - 1.0 - 1e-6
+    assert float(resid.max()) <= float(hi) + 1.0 + 1e-6
+
+
+@SET
+@given(st.integers(0, 2 ** 31), st.integers(2, 500), st.integers(1, 50))
+def test_bounded_search_matches_searchsorted(seed, n, nq):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(np.sort(rng.normal(0, 100, n)))
+    q = jnp.asarray(rng.normal(0, 120, nq))
+    truth = jnp.searchsorted(keys, q, side="left")
+    got = bounded_search(keys, q, jnp.zeros(nq, jnp.int32),
+                         jnp.full(nq, n, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(truth))
+
+
+@SET
+@given(st.integers(0, 2 ** 31), st.integers(1, 300), st.integers(2, 64))
+def test_histograms_consistent(seed, n, m):
+    """Sorted O(m log n) histogram == streaming O(n) histogram; sums to 1."""
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.random(n))
+    lo, hi = jnp.float64(0.0), jnp.float64(1.0)
+    h1 = cdf.histogram_sorted(jnp.asarray(keys), m, lo, hi)
+    h2 = cdf.histogram_stream(jnp.asarray(keys), m, lo, hi)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-12)
+    assert abs(float(h1.sum()) - 1.0) < 1e-9

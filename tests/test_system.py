@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system: agile reuse builds
+correct indices, the full roster answers lookups exactly, the distributed
+service and data pipeline resolve addresses, and a short LM training run
+learns (loss decreases)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.core import btree, pgm, radix_spline, reuse, rmi, rmrt, synth
+from repro.core.updates import DynamicRMI
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def pools():
+    sp = synth.generate_pool(0.9, limit=400, seed=0)
+    return (reuse.build_pool(sp, kind="linear"),
+            reuse.build_pool(sp, kind="mlp", train_steps=300))
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return jnp.asarray(np.sort(RNG.lognormal(0, 0.8, 120_000) * 1e9))
+
+
+def _truth(keys, q):
+    return jnp.searchsorted(keys, q, side="left")
+
+
+def test_algorithm1_reuse_or_train(pools, keys):
+    lin_pool, _ = pools
+    m = lin_pool.reuse_or_train(keys, enqueue=False)
+    pred = m.predict(keys)
+    r = jnp.arange(keys.shape[0]) - pred
+    assert float(r.min()) >= float(m.err_lo) - 1e-6
+    assert float(r.max()) <= float(m.err_hi) + 1e-6
+
+
+def test_full_roster_exact_lookups(pools, keys):
+    lin_pool, mlp_pool = pools
+    q = jnp.asarray(RNG.choice(np.asarray(keys), 5_000))
+    qn = jnp.asarray(np.sort(RNG.lognormal(0, 0.8, 1_000) * 1e9))
+    truth, truth_n = _truth(keys, q), _truth(keys, qn)
+    cases = {
+        "btree": btree.build_btree(keys),
+        "rmi": rmi.build_rmi(keys, 256, kind="linear"),
+        "rmi-mr": rmi.build_rmi(keys, 256, kind="linear", pool=lin_pool),
+        "rmi-nn-mr": rmi.build_rmi(keys, 256, kind="mlp", pool=mlp_pool,
+                                   train_steps=100),
+        "pgm": pgm.build_pgm(keys, eps=64),
+        "rs": radix_spline.build_rs(keys, eps=32),
+        "rmrt": rmrt.build_rmrt(keys, leaf_cap=2048, fanout=32,
+                                kind="linear", pool=lin_pool),
+    }
+    looks = {"btree": btree.lookup, "pgm": pgm.lookup,
+             "rs": radix_spline.lookup, "rmrt": rmrt.lookup}
+    for name, idx in cases.items():
+        look = looks.get(name, rmi.lookup)
+        np.testing.assert_array_equal(np.asarray(look(idx, q)),
+                                      np.asarray(truth), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(look(idx, qn)),
+                                      np.asarray(truth_n), err_msg=name)
+
+
+def test_paper_bounds_mode(pools, keys):
+    """Theorem 3.3 windows (paper-faithful mode) still give exact lookups
+    through the verified search."""
+    lin_pool, _ = pools
+    idx = rmi.build_rmi(keys, 256, kind="linear", pool=lin_pool,
+                        paper_bounds=True)
+    q = jnp.asarray(RNG.choice(np.asarray(keys), 3_000))
+    np.testing.assert_array_equal(np.asarray(rmi.lookup(idx, q)),
+                                  np.asarray(_truth(keys, q)))
+
+
+def test_dynamic_index_inserts(pools, keys):
+    lin_pool, _ = pools
+    d = DynamicRMI.build(keys, pool=lin_pool, eps=0.9, n_leaves=128,
+                         kind="linear")
+    ins = RNG.lognormal(0, 0.8, 20_000) * 1e9
+    d.insert_batch(ins)
+    f, _ = d.find(jnp.asarray(RNG.choice(ins, 500)))
+    assert bool(jnp.all(f))
+    f2, _ = d.find(jnp.asarray(RNG.choice(np.asarray(keys), 500)))
+    assert bool(jnp.all(f2))
+    assert d.rebuilds > 0          # Lemma 4.1 budgets actually trigger
+
+
+def test_indexed_dataset_pipeline(pools):
+    from repro.data.indexed_dataset import IndexedDataset
+    lin_pool, _ = pools
+    ds = IndexedDataset.create(pool=lin_pool, eps=0.9, n_leaves=64)
+    for s in range(3):
+        ds.add_shard(np.sort(RNG.lognormal(0, 0.5, 30_000)) * 1e6
+                     + s * 1e11)
+    q = RNG.choice(ds.shards[1].keys, 300)
+    sid, off = ds.locate(q)
+    assert (sid == 1).all()
+    np.testing.assert_allclose(ds.shards[1].keys[off], q)
+
+
+def test_lm_training_learns():
+    """~1M-param reduced LM: 30 steps must reduce loss."""
+    from repro.launch.train import train
+    losses = train("qwen3-4b", steps=30, batch=4, seq=64, lr=3e-3,
+                   reduced=True, ckpt_dir=None, d_model=64, log_every=100)
+    assert losses[-1] < losses[0] * 0.9, (losses[0], losses[-1])
