@@ -1,0 +1,137 @@
+"""Lookup-path microbenchmark — the serving perf trajectory.
+
+Times ns/query for the paper's §5 roster across key counts and lookup
+paths, and writes ``BENCH_lookup.json`` (committed) so subsequent PRs can
+track the hot path:
+
+  jnp-full-depth      the pre-PR serving path: XLA bounded search at
+                      ceil(log2 n) + 1 iterations (``clamp_iters=False``)
+  jnp-window-clamped  same path with the §4 error-window-clamped static
+                      depth (RMIIndex.search_iters) — the "after" row
+  pallas-interpret    the fused Pallas kernel (in-kernel leaf routing +
+                      tiled keys) under the interpreter; correctness-grade
+                      timing only — on CPU containers this measures the
+                      interpreter, not the kernel, but pins the trajectory
+                      for TPU runs
+  native              variants without a depth toggle (BTree; PGM/RS are
+                      always eps-clamped now)
+
+  PYTHONPATH=src python -m benchmarks.bench_lookup [--sizes 65536 262144]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import btree, pgm, radix_spline, rmi, rmrt
+
+from . import harness
+
+Q = 16_384
+REPEATS = 3
+
+
+def _time(fn, queries) -> float:
+    import jax
+    jax.block_until_ready(fn(queries))          # compile / warm
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.time()
+        jax.block_until_ready(fn(queries))
+        times.append(time.time() - t0)
+    return float(np.median(times)) / queries.shape[0] * 1e9
+
+
+def bench(sizes: list[int], eps: float = 0.9) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.kernels.lookup import full_iters
+
+    lin_pool, mlp_pool, *_ = harness.pools(eps)
+    rows: list[dict] = []
+    rng = np.random.default_rng(7)
+    for n in sizes:
+        keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+        keys = np.unique(keys.astype(np.float32)).astype(np.float64)
+        kj = jnp.asarray(keys)
+        q = jnp.asarray(rng.choice(keys, Q))
+
+        builds = {
+            "BTree": lambda: btree.build_btree(kj, fanout=16),
+            "RMI": lambda: rmi.build_rmi(kj, 1024, kind="linear"),
+            "RMI-MR": lambda: rmi.build_rmi(kj, 1024, kind="linear",
+                                            pool=lin_pool),
+            "RMI-NN": lambda: rmi.build_rmi(kj, 1024, kind="mlp",
+                                            train_steps=150),
+            "RMI-NN-MR": lambda: rmi.build_rmi(kj, 1024, kind="mlp",
+                                               pool=mlp_pool,
+                                               train_steps=150),
+            "PGM": lambda: pgm.build_pgm(kj, eps=64),
+            "RS": lambda: radix_spline.build_rs(kj, eps=32),
+            "RMRT": lambda: rmrt.build_rmrt(kj, leaf_cap=4096, fanout=64,
+                                            kind="linear", pool=lin_pool),
+        }
+        for name, build in builds.items():
+            idx = build()
+            paths: dict[str, tuple] = {}
+            if name.startswith("RMI"):
+                paths = {
+                    "jnp-full-depth": (
+                        lambda qq, i=idx: rmi.lookup(i, qq,
+                                                     clamp_iters=False),
+                        full_iters(idx.n)),
+                    "jnp-window-clamped": (
+                        lambda qq, i=idx: rmi.lookup(i, qq),
+                        idx.search_iters),
+                    "pallas-interpret": (
+                        lambda qq, i=idx: rmi.lookup(i, qq, use_kernel=True),
+                        idx.search_iters),
+                }
+            elif name == "RMRT":
+                paths = {
+                    "jnp-full-depth": (
+                        lambda qq, i=idx: rmrt.lookup(i, qq,
+                                                      clamp_iters=False),
+                        full_iters(idx.n)),
+                    "jnp-window-clamped": (
+                        lambda qq, i=idx: rmrt.lookup(i, qq),
+                        idx.search_iters),
+                }
+            else:
+                look = {"BTree": btree.lookup, "PGM": pgm.lookup,
+                        "RS": radix_spline.lookup}[name]
+                paths = {"native": (lambda qq, i=idx, lk=look: lk(i, qq),
+                                    None)}
+            for path, (fn, iters) in paths.items():
+                ns = _time(fn, q)
+                assert harness.verify(kj, q, fn(q)), (name, path)
+                rows.append({"variant": name, "n_keys": int(kj.shape[0]),
+                             "path": path, "ns_per_query": round(ns, 1),
+                             "iters": iters})
+                print(f"{name:10s} n={int(kj.shape[0]):>8d} {path:20s} "
+                      f"{ns:10.0f} ns/q  iters={iters}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[1 << 16, 1 << 18])
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_lookup.json"))
+    args = ap.parse_args()
+    rows = bench(args.sizes)
+    meta = {"queries": Q, "repeats": REPEATS, "mode": "interpret/CPU",
+            "note": "pallas-interpret rows time the Pallas interpreter "
+                    "(correctness-grade); jnp rows are the XLA serving path."}
+    Path(args.out).write_text(json.dumps({"meta": meta, "rows": rows},
+                                         indent=1) + "\n")
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

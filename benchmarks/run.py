@@ -20,23 +20,20 @@ def kernel_rows(n: int = 200_000, q: int = 16_384):
     import repro  # noqa: F401
     from repro.kernels import ops
 
+    from repro.core import rmi
+
     rng = np.random.default_rng(0)
     keys = np.sort(rng.lognormal(0, 1, n)).astype(np.float32)
-    A = np.polyfit(keys.astype(np.float64), np.arange(n), 1)
-    resid = np.arange(n) - (A[0] * keys + A[1])
     qs = jnp.asarray(rng.choice(keys, q))
-    w1 = np.zeros((q, 4), np.float32)
-    w1[:, 0] = A[0]
-    zeros = jnp.zeros((q, 4), jnp.float32)
-    args = (qs, jnp.asarray(w1), zeros, zeros,
-            jnp.full((q,), A[1], jnp.float32),
-            jnp.full((q,), resid.min() - 2, jnp.float32),
-            jnp.full((q,), resid.max() + 2, jnp.float32),
-            jnp.asarray(keys))
-    r = ops.index_lookup(*args, linear=True)
+    idx = rmi.build_rmi(jnp.asarray(keys), n_leaves=256, kind="linear")
+    root, mat, vec = idx.packed_tables()
+    args = (qs, root, mat, vec, jnp.asarray(keys))
+    kw = dict(n_leaves=idx.n_leaves, root_kind=idx.root_kind,
+              leaf_kind=idx.leaf_kind, iters=idx.search_iters)
+    r = ops.index_lookup(*args, **kw)
     r.block_until_ready()
     t0 = time.time()
-    ops.index_lookup(*args, linear=True).block_until_ready()
+    ops.index_lookup(*args, **kw).block_until_ready()
     dt = time.time() - t0
     h = ops.histogram(jnp.asarray(keys), 64, float(keys[0]), float(keys[-1]))
     h.block_until_ready()

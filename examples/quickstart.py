@@ -49,13 +49,13 @@ pos2 = rmrt.lookup(tree, q)
 assert bool(jnp.all(keys[pos2] == q))
 print("RMI + RMRT lookups: exact ✓")
 
-# the Pallas serving kernel (interpret mode on CPU)
-b = rmi.root_buckets(index.root_kind, index.root, q, index.n_leaves, index.n)
-import jax
-leaf = jax.tree.map(lambda a: a[b], index.leaves)
-r = ops.index_lookup(q.astype(jnp.float32), leaf.w1, leaf.b1, leaf.w2,
-                     leaf.b2, index.err_lo[b], index.err_hi[b],
-                     index.keys.astype(jnp.float32))
+# the Pallas serving kernel (interpret mode on CPU): in-kernel leaf routing
+# over the VMEM-resident tables, search depth clamped to the error window
+root_blk, mat, vec = index.packed_tables()
+r = ops.index_lookup(q.astype(jnp.float32), root_blk, mat, vec,
+                     index.keys.astype(jnp.float32),
+                     n_leaves=index.n_leaves, root_kind=index.root_kind,
+                     leaf_kind=index.leaf_kind, iters=index.search_iters)
 hit = float(jnp.mean((jnp.abs(keys[jnp.clip(r, 0, index.n-1)] - q)
                       / q < 1e-6).astype(jnp.float32)))
 print(f"Pallas fused-lookup kernel: {hit:.1%} within f32 resolution ✓")

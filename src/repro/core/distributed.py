@@ -46,6 +46,7 @@ class ShardedIndex:
     err_lo: Array
     err_hi: Array
     n_leaves: int
+    search_iters: int | None = None   # error-window depth across all shards
 
     @property
     def n_shards(self) -> int:
@@ -75,11 +76,14 @@ def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
         elos.append(idx.err_lo)
         ehis.append(idx.err_hi)
     stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    from ..kernels.lookup import search_iters
+    err_lo_all, err_hi_all = jnp.stack(elos), jnp.stack(ehis)
     return ShardedIndex(
         mesh=mesh, axis=axis, splits=splits,
         keys=jnp.stack(shards), valid=jnp.asarray(valid),
         root=stack(roots), leaves=stack(leaves),
-        err_lo=jnp.stack(elos), err_hi=jnp.stack(ehis), n_leaves=n_leaves)
+        err_lo=err_lo_all, err_hi=err_hi_all, n_leaves=n_leaves,
+        search_iters=search_iters(err_lo_all, err_hi_all, cap))
 
 
 def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None):
@@ -97,13 +101,15 @@ def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None)
     n_leaves = index.n_leaves
     cap = index.keys.shape[1]
 
+    iters = index.search_iters      # static across shards; closure-captured
+
     def local_lookup(keys, root, leaves, elo, ehi, q):
         b = rmi_mod.root_buckets("linear", root, q, n_leaves, cap)
         p = jax.tree.map(lambda a: a[b], leaves)
         pred = rmi_mod.models.linear_predict(p, q)
         lo = jnp.clip(jnp.floor(pred + elo[b]), 0, cap - 1).astype(jnp.int32)
         hi = jnp.clip(jnp.ceil(pred + ehi[b]) + 1, 1, cap).astype(jnp.int32)
-        return rmi_mod.verified_search(keys, q, lo, hi)
+        return rmi_mod.verified_search(keys, q, lo, hi, iters=iters)
 
     def shard_fn(splits, keys, valid, root, leaves, elo, ehi, q_local):
         """Runs per shard. q_local: (B_local,). All index args are the

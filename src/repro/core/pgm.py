@@ -109,8 +109,10 @@ def _pgm_lookup(keys, seg_keys: tuple, seg_slope: tuple, seg_icept: tuple,
         m = seg_keys[lvl - 1].shape[0]
         lo = jnp.clip(pred.astype(jnp.int32) - eps, 0, m - 1)
         hi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, m)
-        # rank among next level's start keys: last start <= q
-        pos = bounded_search(seg_keys[lvl - 1], queries, lo, hi)
+        # rank among next level's start keys: last start <= q.
+        # Window is 2*eps+2 wide by the cone bound -> clamp the search depth.
+        pos = bounded_search(seg_keys[lvl - 1], queries, lo, hi,
+                             iters=_eps_iters(eps))
         nxt = seg_keys[lvl - 1][jnp.clip(pos, 0, m - 1)]
         seg = jnp.where((pos < m) & (nxt == queries), pos,
                         jnp.maximum(pos - 1, 0)).astype(jnp.int32)
@@ -119,4 +121,10 @@ def _pgm_lookup(keys, seg_keys: tuple, seg_slope: tuple, seg_icept: tuple,
     hi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, n)
     # duplicate-heavy keys can exceed the cone bound (duplicates carry no
     # slope constraint); the verified fallback keeps lookups exact
-    return verified_search(keys, queries, lo, hi)
+    return verified_search(keys, queries, lo, hi, iters=_eps_iters(eps))
+
+
+def _eps_iters(eps: int) -> int:
+    """Search depth for a +-eps window (2*eps+2 positions)."""
+    from ..kernels.lookup import full_iters
+    return full_iters(2 * eps + 2)

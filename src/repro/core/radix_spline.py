@@ -118,4 +118,8 @@ def _rs_lookup(keys, sx, sy, table, radix_bits: int, eps: int,
     pred = y0 + t * (y1 - y0)
     plo = jnp.clip(pred.astype(jnp.int32) - eps, 0, n - 1)
     phi = jnp.clip(pred.astype(jnp.int32) + eps + 2, 1, n)
-    return verified_search(keys, queries, plo, phi)
+    # +-eps window -> clamped search depth (the radix-table spline search
+    # above keeps full depth: bucket occupancy is not statically bounded)
+    from ..kernels.lookup import full_iters
+    return verified_search(keys, queries, plo, phi,
+                           iters=full_iters(2 * eps + 2))

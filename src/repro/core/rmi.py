@@ -110,6 +110,10 @@ class RMIIndex:
     # provenance / reuse accounting (build-time diagnostics)
     reused_mask: Array               # (B,) bool
     leaf_sim: Array                  # (B,) build-time similarity (Lemma 4.1 input)
+    # lazily-derived serving state (host-side caches, not build outputs)
+    _iters: int | None = None        # error-window search depth
+    _packed: tuple | None = None     # (root, mat, vec) kernel tables
+    _f32_exact: bool | None = None   # keys round-trip through f32
 
     @property
     def n(self) -> int:
@@ -118,6 +122,48 @@ class RMIIndex:
     @property
     def reuse_fraction(self) -> float:
         return float(jnp.mean(self.reused_mask.astype(jnp.float64)))
+
+    @property
+    def search_iters(self) -> int:
+        """Static per-query search depth bounded by the error window (§4)."""
+        if self._iters is None:
+            from ..kernels.lookup import search_iters
+            self._iters = search_iters(self.err_lo, self.err_hi, self.n)
+        return self._iters
+
+    @property
+    def f32_exact(self) -> bool:
+        """True when every key round-trips through f32 — the precondition
+        for the Pallas kernel path, which searches (and seam-verifies) in
+        f32: distinct f64 keys that collide in f32 would resolve to wrong
+        positions undetectably."""
+        if self._f32_exact is None:
+            k32 = self.keys.astype(jnp.float32).astype(jnp.float64)
+            self._f32_exact = bool(jnp.all(k32 == self.keys))
+        return self._f32_exact
+
+    def packed_tables(self) -> tuple:
+        """(root, mat, vec) VMEM-layout tables for the fused Pallas kernel."""
+        if self._packed is None:
+            from ..kernels import lookup as _lk
+            root = _lk.pack_root(self.root_kind, self.root)
+            w1, b1, w2, b2 = _leaf_table_arrays(self.leaf_kind, self.leaves,
+                                                self.n_leaves)
+            mat, vec = _lk.pack_leaves(w1, b1, w2, b2, self.err_lo,
+                                       self.err_hi)
+            self._packed = (root, mat, vec)
+        return self._packed
+
+
+def _leaf_table_arrays(kind: str, leaves, n_leaves: int):
+    """Uniform (L, H)/(L,) leaf tables for either leaf kind (linear models
+    ride in w1[:, 0] / b2, mirroring the kernel's linear fast path)."""
+    if kind == "linear":
+        w1 = jnp.zeros((n_leaves, models.HIDDEN),
+                       jnp.float32).at[:, 0].set(leaves.a.astype(jnp.float32))
+        zeros = jnp.zeros((n_leaves, models.HIDDEN), jnp.float32)
+        return w1, zeros, zeros, leaves.b
+    return leaves.w1, leaves.b1, leaves.w2, leaves.b2
 
 
 def _root_predict(kind, params, keys):
@@ -319,14 +365,17 @@ def _leaf_predict_all(kind: str, leaves, keys: Array, buckets: Array) -> Array:
 # Lookup: root -> leaf -> bounded branchless binary search.
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("root_kind", "leaf_kind",
-                                             "n_leaves", "n"))
+                                             "n_leaves", "n", "iters"))
 def rmi_lookup(root_kind: str, root, leaf_kind: str, leaves, err_lo, err_hi,
-               keys: Array, queries: Array, n_leaves: int, n: int) -> Array:
+               keys: Array, queries: Array, n_leaves: int, n: int,
+               iters: int | None = None) -> Array:
     """Positions of ``queries`` in ``keys`` (first index with key >= query).
 
     jnp oracle for the Pallas serving kernel (``repro.kernels.lookup``):
     predict, clamp the window to the leaf's error bounds, then a fixed-
-    iteration branchless binary search inside the window.
+    iteration branchless binary search inside the window. ``iters`` clamps
+    the search depth to the index's error window (RMIIndex.search_iters);
+    None falls back to the classic ceil(log2 n) + 1.
     """
     b = root_buckets(root_kind, root, queries, n_leaves, n)
     p = jax.tree.map(lambda a: a[b], leaves)
@@ -337,18 +386,21 @@ def rmi_lookup(root_kind: str, root, leaf_kind: str, leaves, err_lo, err_hi,
         pred = jnp.sum(h * p.w2, -1) + p.b2
     lo = jnp.clip(jnp.floor(pred + err_lo[b]), 0, n - 1).astype(jnp.int32)
     hi = jnp.clip(jnp.ceil(pred + err_hi[b]) + 1, 1, n).astype(jnp.int32)
-    return verified_search(keys, queries, lo, hi)
+    return verified_search(keys, queries, lo, hi, iters=iters)
 
 
-@jax.jit
-def verified_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
+@functools.partial(jax.jit, static_argnames=("iters",))
+def verified_search(keys: Array, queries: Array, lo: Array, hi: Array,
+                    iters: int | None = None) -> Array:
     """Bounded search + seam verification. Error bounds are measured on the
     indexed keys, so *member* lookups always land; a non-member query routed
-    near a leaf boundary can fall outside its leaf's window. Verify the
-    left-boundary invariant and re-search the full array for the (rare)
-    violations — total lookups stay sound for any query distribution."""
+    near a leaf boundary can fall outside its leaf's window (and with a
+    clamped ``iters`` a query in a sentinel full-array window cannot converge
+    in depth). Verify the left-boundary invariant and re-search the full
+    array at full depth for the (rare) violations — total lookups stay sound
+    for any query distribution."""
     n = keys.shape[0]
-    r = bounded_search(keys, queries, lo, hi)
+    r = bounded_search(keys, queries, lo, hi, iters=iters)
     rc = jnp.clip(r, 0, n - 1)
     valid = ((r == 0) | (keys[jnp.clip(r - 1, 0, n - 1)] < queries)) & \
             ((r == n) | (keys[rc] >= queries))
@@ -361,14 +413,17 @@ def verified_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
     return jax.lax.cond(jnp.all(valid), lambda _: r, _fallback, None)
 
 
-@jax.jit
-def bounded_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
+@functools.partial(jax.jit, static_argnames=("iters",))
+def bounded_search(keys: Array, queries: Array, lo: Array, hi: Array,
+                   iters: int | None = None) -> Array:
     """Branchless binary search of each query in keys[lo:hi] (left boundary:
-    first position with keys[p] >= q). Fixed iteration count = ceil(log2 n)
-    so it vectorizes with no data-dependent control flow."""
+    first position with keys[p] >= q). Fixed iteration count so it vectorizes
+    with no data-dependent control flow; ``iters`` defaults to the full
+    ceil(log2 n) + 1 and can be clamped to the caller's window bound."""
     n = keys.shape[0]
-    import math as _math
-    iters = _math.ceil(_math.log2(max(n, 2))) + 1
+    if iters is None:
+        import math as _math
+        iters = _math.ceil(_math.log2(max(n, 2))) + 1
 
     def body(_, lh):
         lo, hi = lh
@@ -383,8 +438,36 @@ def bounded_search(keys: Array, queries: Array, lo: Array, hi: Array) -> Array:
     return lo
 
 
-def lookup(index: RMIIndex, queries: Array) -> Array:
+def lookup(index: RMIIndex, queries: Array, *, use_kernel: bool | None = None,
+           clamp_iters: bool = True) -> Array:
+    """Serving lookup. ``use_kernel`` selects the fused Pallas kernel
+    (default: on TPU backends, and only when the key space is exactly
+    f32-representable — the kernel searches and seam-verifies in f32, so
+    f32-colliding f64 keys would resolve wrongly; the jnp path is the CPU
+    fast path, the kernel's oracle, and the f64 fallback). Note the kernel
+    path's left boundary is defined in f32 key space even for f32-exact
+    keys: a non-member f64 query within one f32 ulp of a key rounds onto it
+    and returns that key's position, where the f64 jnp path returns the
+    position after it. ``clamp_iters`` bounds the search depth by the
+    index's error window instead of log2(n)."""
+    iters = index.search_iters if clamp_iters else None
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
+    elif use_kernel and not index.f32_exact:
+        raise ValueError(
+            "use_kernel=True on a key space that is not f32-exact: the "
+            "kernel's f32 seam verification cannot detect f32 key "
+            "collisions, so wrong positions would be returned silently")
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+        from ..kernels.lookup import full_iters
+        root, mat, vec = index.packed_tables()
+        return kernel_ops.index_lookup(
+            jnp.asarray(queries, jnp.float64), root, mat, vec, index.keys,
+            n_leaves=index.n_leaves, root_kind=index.root_kind,
+            leaf_kind=index.leaf_kind,
+            iters=iters if iters is not None else full_iters(index.n))
     return rmi_lookup(index.root_kind, index.root, index.leaf_kind,
                       index.leaves, index.err_lo, index.err_hi, index.keys,
                       jnp.asarray(queries, jnp.float64), index.n_leaves,
-                      index.n)
+                      index.n, iters=iters)

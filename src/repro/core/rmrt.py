@@ -48,10 +48,19 @@ class RMRTIndex:
     fanout: int
     leaf_cap: int
     depth: int
+    _iters: int | None = None        # cached error-window search depth
 
     @property
     def n(self) -> int:
         return int(self.keys.shape[0])
+
+    @property
+    def search_iters(self) -> int:
+        """Static search depth bounded by the widest live leaf window (§4)."""
+        if self._iters is None:
+            from ..kernels.lookup import search_iters
+            self._iters = search_iters(self.err_lo, self.err_hi, self.n)
+        return self._iters
 
     @property
     def num_nodes(self) -> int:
@@ -203,12 +212,14 @@ def build_rmrt(
 # ---------------------------------------------------------------------------
 # Lookup.
 # ---------------------------------------------------------------------------
-def lookup(index: RMRTIndex, queries: Array) -> Array:
+def lookup(index: RMRTIndex, queries: Array, *,
+           clamp_iters: bool = True) -> Array:
     return _rmrt_lookup(index.kind, index.params, index.is_leaf,
                         index.child_base, index.y_start, index.y_end,
                         index.err_lo, index.err_hi, index.keys,
                         jnp.asarray(queries, jnp.float64), index.fanout,
-                        index.depth)
+                        index.depth,
+                        index.search_iters if clamp_iters else None)
 
 
 def _predict_one(kind, params, node, q):
@@ -222,9 +233,11 @@ def _predict_one(kind, params, node, q):
 import functools
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "fanout", "depth"))
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "fanout", "depth", "iters"))
 def _rmrt_lookup(kind, params, is_leaf, child_base, y_start, y_end,
-                 err_lo, err_hi, keys, queries, fanout: int, depth: int):
+                 err_lo, err_hi, keys, queries, fanout: int, depth: int,
+                 iters: int | None = None):
     """Masked fixed-depth descent (vectorized over queries), then the same
     bounded branchless binary search as RMI."""
     n = keys.shape[0]
@@ -242,4 +255,4 @@ def _rmrt_lookup(kind, params, is_leaf, child_base, y_start, y_end,
     pred = _predict_one(kind, params, node, queries)
     lo = jnp.clip(jnp.floor(pred + err_lo[node]), 0, n - 1).astype(jnp.int32)
     hi = jnp.clip(jnp.ceil(pred + err_hi[node]) + 1, 1, n).astype(jnp.int32)
-    return verified_search(keys, queries, lo, hi)
+    return verified_search(keys, queries, lo, hi, iters=iters)

@@ -1,23 +1,36 @@
 """Pallas TPU kernel: fused learned-index lookup — the serving hot path.
 
-One kernel per query tile fuses the three stages the paper executes per
-query (leaf-model predict -> error-bound window -> bounded binary search):
+One kernel fuses all four stages the paper executes per query
+(root routing -> leaf predict -> error-bound window -> bounded search):
 
-  1. tiny-MLP / linear predict (T-wide vectorized, 4-neuron MXU-free math),
-  2. window clamp from the leaf's error bounds,
-  3. branchless fixed-iteration binary search against the key array resident
-     in VMEM (dynamic vectorized gather within VMEM).
+  1. in-kernel root routing: the root model (linear or tiny MLP) runs on the
+     query tile and buckets each query into its leaf,
+  2. gather-free leaf-param fetch: the compact per-leaf tables — (H, L) model
+     params and (L,) bounds, a few hundred KB even at 16k leaves — stay
+     resident in VMEM and are indexed per query *inside* the kernel. The old
+     path materialized (Q, H)x3 pre-gathered parameter arrays in XLA before
+     the kernel; at serving batch sizes Q >> L that gather traffic dominated,
+  3. window clamp from the leaf's error bounds,
+  4. branchless binary search with a *static iteration count derived from the
+     index's error window* (paper §4: the reuse bound caps the search range),
+     not from log2(n_keys) — 3-6x fewer iterations for tight-epsilon indexes.
 
-Memory layout: the per-device key shard is a single VMEM block (f32; up to
-~3M keys in 12 MiB of a 16 MiB v5e VMEM). Indexes larger than one shard are
-split by the distributed layer (core.distributed) across chips, which is the
-production topology anyway. Leaf-model params arrive pre-gathered per query
-(an XLA gather feeding the kernel), so the kernel itself is gather-free on
-its parameter side.
+Memory layout: queries are tiled TQ at a time (grid dim 0) and the key shard
+is BlockSpec-tiled TILE keys at a time (grid dim 1, innermost), so the VMEM
+working set is TQ + TILE + tables regardless of shard size — shards beyond
+the old ~3M-key single-block cap are servable. Each (i, j) grid step searches
+query tile i's windows restricted to key tile j and min-merges the candidate
+into the revisited output block; left-boundary results compose across tiles
+because positions increase with j. Queries whose window misses tile j
+contribute nothing.
 
-Semantics match core.rmi.bounded_search: left boundary, clamped window; the
-seam-fallback verification stays in the ops wrapper (XLA), keeping the
-kernel single-pass.
+Leaf tables are packed lane-major — (3H, Lp) params, (8, Lp) scalars, leaves
+on the 128-lane axis — so per-query fetch is a VMEM dynamic gather along
+lanes, the same primitive as the key probe.
+
+Semantics match core.rmi.bounded_search on the same window/iters; the seam
+verification (sparse re-check of the rare misses) stays in the ops wrapper,
+keeping the kernel single-pass.
 """
 from __future__ import annotations
 
@@ -26,89 +39,191 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-TQ = 1024      # queries per grid step
-H = 4          # paper's hidden width
+TQ = 1024          # queries per grid step
+TILE_MAX = 1 << 18  # keys per VMEM tile (1 MiB f32)
+H = 4              # paper's hidden width
+ROOT_ROWS = 8      # packed root block: rows [w1, b1, w2, b2|meta] x 128 lanes
 
 
-def _lookup_kernel(q_ref, w1_ref, b1_ref, w2_ref, b2_ref, elo_ref, ehi_ref,
-                   keys_ref, out_ref, *, n_keys: int, iters: int,
-                   linear: bool):
-    q = q_ref[...].reshape(TQ)
-    elo = elo_ref[...].reshape(TQ)
-    ehi = ehi_ref[...].reshape(TQ)
+def search_iters(err_lo, err_hi, n_keys: int) -> int:
+    """Static binary-search depth for an index with the given leaf bounds.
 
-    if linear:
-        a = w1_ref[...].reshape(TQ, H)[:, 0]
-        c = b2_ref[...].reshape(TQ)
-        pred = a * q + c
+    The paper's §4 bound: a lookup only ever searches a window of
+    ceil(err_hi) - floor(err_lo) positions (+3 for the clamp/rounding slack),
+    so the branchless search needs ceil(log2(max window)) + 1 iterations, not
+    ceil(log2(n_keys)) + 1. Sentinel windows (empty leaves carry a sound
+    full-array window) are excluded — queries routed there are caught by the
+    seam verification and re-searched at full depth.
+    """
+    elo = np.asarray(err_lo, np.float64)
+    ehi = np.asarray(err_hi, np.float64)
+    w = np.ceil(ehi) - np.floor(elo) + 3.0
+    live = w < n_keys
+    wmax = float(w[live].max()) if live.any() else float(max(n_keys, 2))
+    wmax = min(max(wmax, 2.0), float(max(n_keys, 2)))
+    return int(math.ceil(math.log2(wmax))) + 1
+
+
+def full_iters(n_keys: int) -> int:
+    """Unclamped depth: the classic ceil(log2(n)) + 1."""
+    return int(math.ceil(math.log2(max(n_keys, 2)))) + 1
+
+
+def pack_root(root_kind: str, params) -> jax.Array:
+    """(ROOT_ROWS, 128) f32 block holding the root model.
+
+    linear: [0,0]=a, [3,0]=b.   mlp: rows 0/1/2 = w1/b1/w2 (H lanes), [3,0]=b2.
+    """
+    blk = jnp.zeros((ROOT_ROWS, 128), jnp.float32)
+    if root_kind == "linear":
+        blk = blk.at[0, 0].set(params.a.astype(jnp.float32))
+        blk = blk.at[3, 0].set(params.b.astype(jnp.float32))
     else:
-        w1 = w1_ref[...].reshape(TQ, H)
-        b1 = b1_ref[...].reshape(TQ, H)
-        w2 = w2_ref[...].reshape(TQ, H)
-        c = b2_ref[...].reshape(TQ)
-        h = jnp.maximum(q[:, None] * w1 + b1, 0.0)
-        pred = jnp.sum(h * w2, axis=1) + c
+        blk = blk.at[0, :H].set(params.w1.astype(jnp.float32))
+        blk = blk.at[1, :H].set(params.b1.astype(jnp.float32))
+        blk = blk.at[2, :H].set(params.w2.astype(jnp.float32))
+        blk = blk.at[3, 0].set(params.b2.astype(jnp.float32))
+    return blk
 
-    lo = jnp.clip(jnp.floor(pred + elo), 0, n_keys - 1).astype(jnp.int32)
-    hi = jnp.clip(jnp.ceil(pred + ehi) + 1.0, 1, n_keys).astype(jnp.int32)
 
-    keys = keys_ref[...].reshape(-1)            # full VMEM-resident shard
+def pack_leaves(w1, b1, w2, b2, err_lo, err_hi):
+    """Lane-major leaf tables: (3H, Lp) params + (8, Lp) scalars, Lp = 128-pad.
+
+    w1/b1/w2: (L, H); b2/err_lo/err_hi: (L,). Padded lanes are never gathered
+    (buckets are clipped to L-1).
+    """
+    L = w1.shape[0]
+    lp = -(-L // 128) * 128
+    padT = lambda a: jnp.pad(a.astype(jnp.float32).T, ((0, 0), (0, lp - L)))
+    mat = jnp.concatenate([padT(w1), padT(b1), padT(w2)], axis=0)  # (3H, Lp)
+    vec = jnp.zeros((8, lp), jnp.float32)
+    for row, a in ((0, b2), (1, err_lo), (2, err_hi)):
+        vec = vec.at[row, :L].set(a.astype(jnp.float32))
+    return mat, vec
+
+
+def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
+                   lo_ref, hi_ref, *,
+                   n_keys: int, n_leaves: int, lp: int, tile: int,
+                   tile_iters: int, root_kind: str, leaf_kind: str):
+    j = pl.program_id(1)
+    q = q_ref[...].reshape(TQ)
+
+    # Stages 1-3 depend only on the query tile: run them once per query tile
+    # (j == 0) and stash the window in VMEM scratch for the key-tile sweep.
+    @pl.when(j == 0)
+    def _():
+        root = root_ref[...].reshape(ROOT_ROWS, 128)
+
+        # ---- stage 1: in-kernel root routing ----------------------------
+        if root_kind == "linear":
+            rpred = root[0, 0] * q + root[3, 0]
+        else:
+            h = jnp.maximum(q[:, None] * root[0, :H] + root[1, :H], 0.0)
+            rpred = jnp.sum(h * root[2, :H], axis=1) + root[3, 0]
+        b = jnp.clip((rpred * (n_leaves / n_keys)).astype(jnp.int32),
+                     0, n_leaves - 1)
+
+        # ---- stage 2: gather-free leaf fetch (VMEM-resident tables) -----
+        mat = mat_ref[...].reshape(3 * H * lp)
+        vec = vec_ref[...].reshape(8 * lp)
+        row = lambda flat, r: jnp.take(flat, b + r * lp)   # (TQ,) per row
+        if leaf_kind == "linear":
+            pred = row(mat, 0) * q + row(vec, 0)
+        else:
+            pred = row(vec, 0)
+            for k in range(H):
+                hk = jnp.maximum(q * row(mat, k) + row(mat, H + k), 0.0)
+                pred = pred + hk * row(mat, 2 * H + k)
+
+        # ---- stage 3: error-bound window --------------------------------
+        lo = jnp.clip(jnp.floor(pred + row(vec, 1)), 0, n_keys - 1
+                      ).astype(jnp.int32)
+        hi = jnp.clip(jnp.ceil(pred + row(vec, 2)) + 1.0, 1, n_keys
+                      ).astype(jnp.int32)
+        lo_ref[...] = lo.reshape(lo_ref.shape)
+        hi_ref[...] = hi.reshape(hi_ref.shape)
+        out_ref[...] = hi.reshape(out_ref.shape)
+
+    lo = lo_ref[...].reshape(TQ)
+    hi = hi_ref[...].reshape(TQ)
+
+    # ---- stage 4: window-clamped search within key tile j ---------------
+    base = j * tile
+    tlo = jnp.clip(lo - base, 0, tile)
+    thi = jnp.clip(hi - base, 0, tile)
+    keys = keys_ref[...].reshape(tile)
 
     def body(_, lh):
-        lo, hi = lh
-        active = hi - lo > 0
-        mid = (lo + hi) // 2
-        kv = jnp.take(keys, jnp.clip(mid, 0, n_keys - 1))
+        l, h2 = lh
+        active = h2 - l > 0
+        mid = (l + h2) // 2
+        kv = jnp.take(keys, jnp.clip(mid, 0, tile - 1))
         below = kv < q
-        nlo = jnp.where(below, mid + 1, lo)
-        nhi = jnp.where(below, hi, mid)
-        return (jnp.where(active, nlo, lo), jnp.where(active, nhi, hi))
+        nl = jnp.where(below, mid + 1, l)
+        nh = jnp.where(below, h2, mid)
+        return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
 
-    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    out_ref[...] = lo.reshape(out_ref.shape)
+    l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
+    cand = jnp.where(l < thi, base + l, n_keys)
+
+    cur = out_ref[...].reshape(TQ)
+    out_ref[...] = jnp.minimum(cur, cand).reshape(out_ref.shape)
 
 
-def lookup_pallas(queries, w1, b1, w2, b2, err_lo, err_hi, keys, *,
-                  linear: bool = False, interpret: bool = True):
-    """Positions (left boundary) of ``queries`` in ``keys``.
+def _pow2ceil(v: int) -> int:
+    return 1 << max(int(v) - 1, 1).bit_length()
 
-    queries/err_lo/err_hi: (Q,) f32, per-query (pre-gathered leaf bounds);
-    w1/b1/w2: (Q, H) f32 (ignored-except-w1 row 0 when linear); b2: (Q,) f32;
-    keys: (S,) f32 sorted.
+
+def lookup_pallas(queries, root, mat, vec, keys, *, n_leaves: int,
+                  root_kind: str = "linear", leaf_kind: str = "linear",
+                  iters: int | None = None, tile: int | None = None,
+                  interpret: bool = True):
+    """Positions (left boundary, window-clamped) of ``queries`` in ``keys``.
+
+    queries: (Q,); root: pack_root block; mat/vec: pack_leaves tables;
+    keys: (S,) sorted. ``iters`` is the static window search depth
+    (see search_iters); ``tile`` the key-tile size (multiple of 128).
     """
     Q = queries.shape[0]
     S = keys.shape[0]
+    lp = mat.shape[1]
     q_pad = -(-Q // TQ) * TQ
-    s_pad = -(-S // 128) * 128
-    iters = math.ceil(math.log2(max(S, 2))) + 1
+    if tile is None:
+        tile = min(TILE_MAX, _pow2ceil(max(S, 128)))
+    assert tile % 128 == 0, "key tile must be a multiple of 128 lanes"
+    s_pad = -(-S // tile) * tile
+    nk = s_pad // tile
+    if iters is None:
+        iters = full_iters(S)
+    tile_iters = min(iters, full_iters(tile))
 
     pad1 = lambda a: jnp.pad(a.astype(jnp.float32), (0, q_pad - Q)) \
         .reshape(-1, 8, TQ // 8)
-    pad2 = lambda a: jnp.pad(a.astype(jnp.float32),
-                             ((0, q_pad - Q), (0, 0))).reshape(-1, TQ, H)
     kp = jnp.pad(keys.astype(jnp.float32), (0, s_pad - S),
-                 constant_values=jnp.inf).reshape(1, 8, s_pad // 8)
+                 constant_values=jnp.inf).reshape(nk, 8, tile // 8)
 
-    kern = functools.partial(_lookup_kernel, n_keys=S, iters=iters,
-                             linear=linear)
+    kern = functools.partial(
+        _lookup_kernel, n_keys=S, n_leaves=n_leaves, lp=lp, tile=tile,
+        tile_iters=tile_iters, root_kind=root_kind, leaf_kind=leaf_kind)
     out = pl.pallas_call(
         kern,
-        grid=(q_pad // TQ,),
+        grid=(q_pad // TQ, nk),
         in_specs=[
-            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # q
-            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # w1
-            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # b1
-            pl.BlockSpec((1, TQ, H), lambda i: (i, 0, 0)),        # w2
-            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # b2
-            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # elo
-            pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),   # ehi
-            pl.BlockSpec((1, 8, s_pad // 8), lambda i: (0, 0, 0)),  # keys
+            pl.BlockSpec((ROOT_ROWS, 128), lambda i, j: (0, 0)),      # root
+            pl.BlockSpec((3 * H, lp), lambda i, j: (0, 0)),           # mat
+            pl.BlockSpec((8, lp), lambda i, j: (0, 0)),               # vec
+            pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),    # q
+            pl.BlockSpec((1, 8, tile // 8), lambda i, j: (j, 0, 0)),  # keys
         ],
-        out_specs=pl.BlockSpec((1, 8, TQ // 8), lambda i: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((8, TQ // 8), jnp.int32),   # lo window
+                        pltpu.VMEM((8, TQ // 8), jnp.int32)],  # hi window
         interpret=interpret,
-    )(pad1(queries), pad2(w1), pad2(b1), pad2(w2), pad1(b2), pad1(err_lo),
-      pad1(err_hi), kp)
+    )(root, mat, vec, pad1(queries), kp)
     return out.reshape(-1)[:Q]

@@ -76,24 +76,71 @@ def segment_linfit(x, y, buckets, n_buckets: int,
     return jnp.stack([a, jnp.where(n > 0, b, 0.0)], 1)
 
 
-@functools.partial(jax.jit, static_argnames=("linear", "interpret"))
-def index_lookup(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
-                 linear: bool = False, interpret: bool | None = None):
-    """Fused serving lookup (predict -> window -> bounded search) with the
-    XLA-side seam verification (rare fallback re-search, see core.rmi)."""
+def index_lookup(queries, root, mat, vec, keys, *, n_leaves: int,
+                 root_kind: str = "linear", leaf_kind: str = "linear",
+                 iters: int | None = None, tile: int | None = None,
+                 interpret: bool | None = None, seam_budget: int = 1024):
+    """Fused serving lookup (route -> predict -> window -> clamped search)
+    with the XLA-side sparse seam verification.
+
+    ``root``/``mat``/``vec`` are the packed tables from
+    lookup.pack_root / lookup.pack_leaves. ``iters`` is the static
+    error-window search depth; when None it is derived host-side from the
+    (concrete) bound rows of ``vec`` via lookup.search_iters.
+    """
     interpret = _default_interpret() if interpret is None else interpret
-    r = _lookup.lookup_pallas(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
-                              linear=linear, interpret=interpret)
-    # seam verification in f32 space (kernel semantics)
+    if iters is None:
+        if isinstance(vec, jax.core.Tracer):
+            # under an outer jit/vmap the bounds aren't concrete; fall back
+            # to the sound full depth (callers wanting the clamped depth
+            # pass iters=index.search_iters, which is static)
+            iters = _lookup.full_iters(keys.shape[0])
+        else:
+            import numpy as np
+            L = min(n_leaves, vec.shape[1])
+            vec_np = np.asarray(vec)          # concrete at call time
+            iters = _lookup.search_iters(vec_np[1, :L], vec_np[2, :L],
+                                         keys.shape[0])
+    return _index_lookup_jit(queries, root, mat, vec, keys,
+                             n_leaves=n_leaves, root_kind=root_kind,
+                             leaf_kind=leaf_kind, iters=iters, tile=tile,
+                             interpret=interpret, seam_budget=seam_budget)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_leaves", "root_kind", "leaf_kind", "iters", "tile", "interpret",
+    "seam_budget"))
+def _index_lookup_jit(queries, root, mat, vec, keys, *, n_leaves, root_kind,
+                      leaf_kind, iters, tile, interpret, seam_budget):
+    r = _lookup.lookup_pallas(queries, root, mat, vec, keys,
+                              n_leaves=n_leaves, root_kind=root_kind,
+                              leaf_kind=leaf_kind, iters=iters, tile=tile,
+                              interpret=interpret)
+    # Seam verification in f32 space (kernel semantics). Misses are rare —
+    # boundary queries outside their leaf's window, or queries routed to a
+    # sentinel (empty-leaf) window deeper than the clamped search depth — so
+    # the fallback re-searches only the invalid positions (compacted to a
+    # static ``seam_budget``); the dense full-Q re-search runs only if the
+    # miss count exceeds the budget.
     kf = keys.astype(jnp.float32)
     qf = queries.astype(jnp.float32)
     n = keys.shape[0]
     rc = jnp.clip(r, 0, n - 1)
     valid = ((r == 0) | (kf[jnp.clip(r - 1, 0, n - 1)] < qf)) & \
             ((r == n) | (kf[rc] >= qf))
+    n_bad = jnp.sum(~valid)
+    budget = min(seam_budget, queries.shape[0])
 
-    def _fb(_):
+    def _sparse(_):
+        idx = jnp.nonzero(~valid, size=budget, fill_value=0)[0]
+        sub = jnp.searchsorted(kf, qf[idx], side="left").astype(r.dtype)
+        return r.at[idx].set(jnp.where(valid[idx], r[idx], sub))
+
+    def _dense(_):
         full = jnp.searchsorted(kf, qf, side="left").astype(r.dtype)
         return jnp.where(valid, r, full)
 
-    return jax.lax.cond(jnp.all(valid), lambda _: r, _fb, None)
+    def _fix(_):
+        return jax.lax.cond(n_bad <= budget, _sparse, _dense, None)
+
+    return jax.lax.cond(n_bad == 0, lambda _: r, _fix, None)

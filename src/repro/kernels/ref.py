@@ -6,8 +6,6 @@ sweeps in interpret mode.
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 
@@ -42,33 +40,66 @@ def linfit_sums_ref(x: jax.Array, y: jax.Array, buckets: jax.Array,
                       seg(x * x)], axis=1)
 
 
-def lookup_ref(queries, w1, b1, w2, b2, err_lo, err_hi, keys,
-               linear: bool = False) -> jax.Array:
-    """Oracle for lookup.lookup_pallas (f32 predict + bounded search)."""
+def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
+               root_kind: str = "linear", leaf_kind: str = "linear",
+               iters: int | None = None, tile: int | None = None) -> jax.Array:
+    """Oracle for lookup.lookup_pallas: same packed-table contract, same f32
+    arithmetic, same per-key-tile clamped search and min-merge — bit-identical
+    in interpret mode (including the deliberate non-convergence of queries
+    whose window exceeds the static depth; the ops wrapper's verification owns
+    those)."""
+    from . import lookup as _lk
+
     q = queries.astype(jnp.float32)
-    keys = keys.astype(jnp.float32)
-    n = keys.shape[0]
-    if linear:
-        pred = w1[:, 0].astype(jnp.float32) * q + b2.astype(jnp.float32)
+    kf = keys.astype(jnp.float32)
+    S = kf.shape[0]
+    lp = mat.shape[1]
+    if tile is None:
+        tile = min(_lk.TILE_MAX, _lk._pow2ceil(max(S, 128)))
+    if iters is None:
+        iters = _lk.full_iters(S)
+    tile_iters = min(iters, _lk.full_iters(tile))
+    nk = -(-S // tile)
+    kp = jnp.pad(kf, (0, nk * tile - S), constant_values=jnp.inf)
+
+    if root_kind == "linear":
+        rpred = root[0, 0] * q + root[3, 0]
     else:
-        h = jnp.maximum(q[:, None] * w1.astype(jnp.float32)
-                        + b1.astype(jnp.float32), 0.0)
-        pred = jnp.sum(h * w2.astype(jnp.float32), 1) + b2.astype(jnp.float32)
-    lo = jnp.clip(jnp.floor(pred + err_lo.astype(jnp.float32)), 0, n - 1
-                  ).astype(jnp.int32)
-    hi = jnp.clip(jnp.ceil(pred + err_hi.astype(jnp.float32)) + 1.0, 1, n
-                  ).astype(jnp.int32)
-    iters = math.ceil(math.log2(max(n, 2))) + 1
+        h = jnp.maximum(q[:, None] * root[0, :_lk.H] + root[1, :_lk.H], 0.0)
+        rpred = jnp.sum(h * root[2, :_lk.H], axis=1) + root[3, 0]
+    b = jnp.clip((rpred * (n_leaves / S)).astype(jnp.int32), 0, n_leaves - 1)
 
-    def body(_, lh):
-        lo, hi = lh
-        active = hi - lo > 0
-        mid = (lo + hi) // 2
-        kv = keys[jnp.clip(mid, 0, n - 1)]
-        below = kv < q
-        nlo = jnp.where(below, mid + 1, lo)
-        nhi = jnp.where(below, hi, mid)
-        return (jnp.where(active, nlo, lo), jnp.where(active, nhi, hi))
+    matf = mat.reshape(-1)
+    vecf = vec.reshape(-1)
+    row = lambda flat, r: jnp.take(flat, b + r * lp)
+    if leaf_kind == "linear":
+        pred = row(matf, 0) * q + row(vecf, 0)
+    else:
+        pred = row(vecf, 0)
+        for k in range(_lk.H):
+            hk = jnp.maximum(q * row(matf, k) + row(matf, _lk.H + k), 0.0)
+            pred = pred + hk * row(matf, 2 * _lk.H + k)
 
-    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return lo
+    lo = jnp.clip(jnp.floor(pred + row(vecf, 1)), 0, S - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + row(vecf, 2)) + 1.0, 1, S).astype(jnp.int32)
+
+    out = hi
+    for j in range(nk):
+        base = j * tile
+        tlo = jnp.clip(lo - base, 0, tile)
+        thi = jnp.clip(hi - base, 0, tile)
+        ktile = jax.lax.dynamic_slice_in_dim(kp, base, tile)
+
+        def body(_, lh, ktile=ktile):
+            l, h2 = lh
+            active = h2 - l > 0
+            mid = (l + h2) // 2
+            kv = jnp.take(ktile, jnp.clip(mid, 0, tile - 1))
+            below = kv < q
+            nl = jnp.where(below, mid + 1, l)
+            nh = jnp.where(below, h2, mid)
+            return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+        l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
+        out = jnp.minimum(out, jnp.where(l < thi, base + l, S))
+    return out

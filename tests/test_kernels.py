@@ -47,36 +47,113 @@ def test_linfit_kernel(n, B):
                                np.asarray(p64.a)[occupied], rtol=5e-3)
 
 
+def _rmi_tables(keys, n_leaves, kind):
+    """Build an RMI over (f32-representable) keys; return its packed kernel
+    tables + static meta."""
+    from repro.core import rmi
+    idx = rmi.build_rmi(jnp.asarray(keys, jnp.float64), n_leaves=n_leaves,
+                        kind=kind, train_steps=60)
+    root, mat, vec = idx.packed_tables()
+    return idx, root, mat, vec
+
+
 @pytest.mark.parametrize("S,Q", [(1_000, 128), (100_000, 5_000)])
-@pytest.mark.parametrize("linear", [True, False])
-def test_lookup_kernel(S, Q, linear):
-    keys = np.sort(RNG.lognormal(0, 1, S)).astype(np.float32)
-    keys = np.unique(keys)
-    S = keys.size
+@pytest.mark.parametrize("kind", ["linear", "mlp"])
+def test_lookup_kernel(S, Q, kind):
+    keys = np.unique(np.sort(RNG.lognormal(0, 1, S)).astype(np.float32))
     q = RNG.choice(keys, Q)
-    A = np.polyfit(keys.astype(np.float64), np.arange(S), 1)
-    resid = np.arange(S) - (A[0] * keys + A[1])
-    w1 = np.zeros((Q, 4), np.float32)
-    w1[:, 0] = A[0]
-    b2 = np.full(Q, A[1], np.float32)
-    elo = np.full(Q, resid.min() - 2, np.float32)
-    ehi = np.full(Q, resid.max() + 2, np.float32)
-    if linear:
-        b1 = w2 = np.zeros((Q, 4), np.float32)
-    else:  # random MLP: verified fallback must still give exact results
-        b1 = RNG.normal(0, 1, (Q, 4)).astype(np.float32)
-        w2 = RNG.normal(0, 1, (Q, 4)).astype(np.float32)
-    got = ops.index_lookup(jnp.asarray(q), jnp.asarray(w1), jnp.asarray(b1),
-                           jnp.asarray(w2), jnp.asarray(b2), jnp.asarray(elo),
-                           jnp.asarray(ehi), jnp.asarray(keys), linear=linear)
+    idx, root, mat, vec = _rmi_tables(keys, 64, kind)
+    got = ops.index_lookup(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                           n_leaves=idx.n_leaves, root_kind=idx.root_kind,
+                           leaf_kind=idx.leaf_kind, iters=idx.search_iters)
     truth = np.searchsorted(keys, q, side="left")
     np.testing.assert_array_equal(np.asarray(got), truth)
-    if linear:  # kernel must agree with its oracle exactly (no fallback path)
-        want = ref.lookup_ref(jnp.asarray(q), jnp.asarray(w1), jnp.asarray(b1),
-                              jnp.asarray(w2), jnp.asarray(b2),
-                              jnp.asarray(elo), jnp.asarray(ehi),
-                              jnp.asarray(keys), linear=True)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # kernel must agree with its oracle exactly (pre-verification parity)
+    from repro.kernels.lookup import lookup_pallas
+    rk = lookup_pallas(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                       n_leaves=idx.n_leaves, root_kind=idx.root_kind,
+                       leaf_kind=idx.leaf_kind, iters=idx.search_iters)
+    want = ref.lookup_ref(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                          n_leaves=idx.n_leaves, root_kind=idx.root_kind,
+                          leaf_kind=idx.leaf_kind, iters=idx.search_iters)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(want))
+
+
+@pytest.mark.parametrize("S,Q,tile", [
+    (5_000, 1_300, 512),      # Q not a multiple of TQ, S not of the tile
+    (4_096, 4_096, 1024),     # exact multiples
+    (70_001, 2_049, 4096),    # S spanning many tiles, ragged Q
+    (300, 63, 128),           # S smaller than one tile
+])
+def test_lookup_kernel_edge_shapes(S, Q, tile):
+    """Tiled kernel parity on ragged shapes, duplicate keys, and queries
+    outside [kmin, kmax]."""
+    base = np.sort(RNG.lognormal(0, 1, S)).astype(np.float32)
+    keys = np.sort(np.concatenate([base, base[:: max(S // 64, 1)]]))  # dups
+    inside = RNG.choice(keys, max(Q - 4, 1))
+    outside = np.asarray([0.0, keys[0] / 2, keys[-1] * 2, 1e30], np.float32)
+    q = np.concatenate([inside, outside])[:Q].astype(np.float32)
+    idx, root, mat, vec = _rmi_tables(keys, 32, "linear")
+    kw = dict(n_leaves=idx.n_leaves, root_kind=idx.root_kind,
+              leaf_kind=idx.leaf_kind, iters=idx.search_iters, tile=tile)
+    got = ops.index_lookup(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                           **kw)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.searchsorted(keys, q, side="left"))
+    from repro.kernels.lookup import lookup_pallas
+    rk = lookup_pallas(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                       **kw)
+    want = ref.lookup_ref(jnp.asarray(q), root, mat, vec, jnp.asarray(keys),
+                          **kw)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(want))
+
+
+def test_lookup_kernel_guard_on_f32_unsafe_keys():
+    """Keys that collide in f32 (kvcache-style packed ints > 2^24) must not
+    auto-select the f32 kernel path; the jnp f64 path stays exact."""
+    from repro.core import rmi
+    keys = jnp.asarray([float((r << 22) | b) for r in range(8)
+                        for b in range(128)], jnp.float64)
+    idx = rmi.build_rmi(keys, n_leaves=16, kind="linear")
+    assert not idx.f32_exact          # (7<<22)|127 etc. don't round-trip
+    got = rmi.lookup(idx, keys)       # auto path: must stay f64-exact
+    np.testing.assert_array_equal(np.asarray(got), np.arange(keys.shape[0]))
+    with pytest.raises(ValueError):   # explicit override is rejected too
+        rmi.lookup(idx, keys, use_kernel=True)
+    # and an f32-clean key space is recognized as kernel-eligible
+    clean = jnp.asarray(np.unique(RNG.random(4_000).astype(np.float32)),
+                        jnp.float64)
+    assert rmi.build_rmi(clean, n_leaves=16, kind="linear").f32_exact
+
+
+def test_lookup_iters_clamped_by_error_window():
+    """The serving search depth is bounded by the index's error window
+    (paper §4), not by log2(n): near-linear data must search far fewer
+    levels, and results stay exact."""
+    from repro.core import rmi
+    from repro.kernels.lookup import full_iters, search_iters
+    n = 1 << 17
+    keys = np.unique((np.arange(n) * 7.3
+                      + RNG.random(n)).astype(np.float32))
+    idx = rmi.build_rmi(jnp.asarray(keys, jnp.float64), n_leaves=512,
+                        kind="linear")
+    it = idx.search_iters
+    assert it < full_iters(idx.n) - 3, (it, full_iters(idx.n))
+    # depth covers the widest live window: 2^(it-1) >= max window
+    elo = np.asarray(idx.err_lo)
+    ehi = np.asarray(idx.err_hi)
+    w = np.ceil(ehi) - np.floor(elo) + 3
+    live = w < idx.n
+    assert 2 ** (it - 1) >= w[live].max()
+    assert it == search_iters(idx.err_lo, idx.err_hi, idx.n)
+    q = RNG.choice(keys, 4_000)
+    got = rmi.lookup(idx, jnp.asarray(q))                      # jnp, clamped
+    np.testing.assert_array_equal(
+        np.asarray(got), np.searchsorted(keys.astype(np.float64),
+                                         q.astype(np.float64), side="left"))
+    got_k = rmi.lookup(idx, jnp.asarray(q), use_kernel=True)   # fused kernel
+    np.testing.assert_array_equal(np.asarray(got_k),
+                                  np.searchsorted(keys, q, side="left"))
 
 
 @pytest.mark.parametrize("B,Sq,H,dh", [(2, 128, 2, 64), (1, 384, 4, 128),
