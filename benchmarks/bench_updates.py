@@ -1,0 +1,182 @@
+"""Update-path microbenchmark — the dynamic-index perf trajectory.
+
+Times ns/op for the §4 update subsystem and writes ``BENCH_updates.json``
+(committed) so subsequent PRs can track the update hot path the way
+``BENCH_lookup.json`` tracks lookups:
+
+  insert        the paper's fig7 bulk-insertion workload (insert ratio 0.5,
+                one batch, warm jit caches)
+                  host-loop-seed   the seed implementation: per-leaf host
+                                   Python buffers (np.sort/np.concatenate
+                                   per touched leaf, one O(n) rebuild scan
+                                   per over-budget leaf)
+                  two-tier         the device-resident delta tier: one
+                                   vectorized route-sort-merge per batch,
+                                   one batched merge + refit per rebuild
+  find-churn    point queries after >=10% inserts + tombstoned deletes
+                  host-loop-seed   per-query Python scan over leaf buffers
+                  two-tier-jnp     the fused jnp oracle path (XLA)
+                  two-tier-pallas  the fused Pallas kernel (interpret mode
+                                   on CPU: correctness-grade timing only)
+  rebuild       an insert storm sized to exhaust Lemma 4.1 budgets —
+                ns per *merged key* including the pool-reuse refits
+
+  PYTHONPATH=src python -m benchmarks.bench_updates [--n 65536]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import repro  # noqa: F401
+
+Q = 8_192
+REPEATS = 3
+
+
+def _median(fn) -> float:
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    return float(np.median(times))
+
+
+def _keys(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    k = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+    return np.unique(k.astype(np.float32)).astype(np.float64)  # f32-exact
+
+
+def bench(n: int = 1 << 17, eps: float = 0.9, n_leaves: int = 8192,
+          with_pool: bool = True) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import reuse, synth
+    from repro.core.updates import DynamicRMI, HostBufferDynamicRMI
+
+    base = _keys(n)
+    extra = _keys(2 * n, seed=9)
+    ins = np.setdiff1d(extra, base)
+    rng = np.random.default_rng(4)
+    pool = reuse.build_pool(synth.generate_pool(eps, limit=300),
+                            kind="linear") if with_pool else None
+    rows: list[dict] = []
+
+    def _row(op, impl, ns, detail):
+        rows.append({"op": op, "impl": impl, "n_keys": int(base.size),
+                     "ns_per_op": round(ns, 1), "detail": detail})
+        print(f"{op:12s} {impl:16s} {ns:12.0f} ns/op  {detail}")
+
+    # ---- batched insert: the paper's fig7 bulk-insertion workload (ratio
+    # 0.5 of the base, one insert_batch call).  The seed rebuilds each
+    # over-budget leaf with its own O(n) scan; the two-tier path batches the
+    # merge + pool-policy refits.  Fresh structure per repeat (builds
+    # untimed); one throwaway warm pass primes the jit caches. -------------
+    bulk = ins[:n // 2]
+
+    def _time_inserts(cls):
+        times, rebuilds = [], 0
+        w = cls.build(jnp.asarray(base), pool=pool, eps=eps,
+                      n_leaves=n_leaves, kind="linear")
+        w.insert_batch(bulk)                # warm (jit trace + capacity)
+        for _ in range(REPEATS):
+            d = cls.build(jnp.asarray(base), pool=pool, eps=eps,
+                          n_leaves=n_leaves, kind="linear")
+            t0 = time.time()
+            d.insert_batch(bulk)
+            times.append(time.time() - t0)
+            rebuilds = d.rebuilds
+        return float(np.median(times)) / bulk.size * 1e9, rebuilds
+
+    ns_legacy, rb = _time_inserts(HostBufferDynamicRMI)
+    _row("insert", "host-loop-seed", ns_legacy,
+         f"bulk={bulk.size} leaves={n_leaves} rebuilds={rb}")
+    ns_two, rb = _time_inserts(DynamicRMI)
+    _row("insert", "two-tier", ns_two,
+         f"bulk={bulk.size} leaves={n_leaves} rebuilds={rb} "
+         f"speedup={ns_legacy / max(ns_two, 1e-9):.1f}x")
+
+    # ---- find under churn (>=10% inserted, some tombstoned) --------------
+    churn = ins[:max(n // 8, 1024)]         # ~12.5% of base
+    dels = rng.choice(churn, churn.size // 10, replace=False)
+
+    legacy = HostBufferDynamicRMI.build(jnp.asarray(base), pool=pool,
+                                        eps=eps, n_leaves=n_leaves,
+                                        kind="linear")
+    legacy.insert_batch(churn)
+    for k in dels[:64]:                     # seed delete is per-key only
+        legacy.delete(k)
+    dyn = DynamicRMI.build(jnp.asarray(base), pool=pool, eps=eps,
+                           n_leaves=n_leaves, kind="linear")
+    dyn.insert_batch(churn)
+    dyn.delete_batch(dels)
+
+    q = jnp.asarray(np.concatenate(
+        [rng.choice(base, Q // 2), rng.choice(churn, Q - Q // 2)]))
+    jax.block_until_ready(legacy.find(q))
+    dt = _median(lambda: jax.block_until_ready(legacy.find(q)))
+    _row("find-churn", "host-loop-seed", dt / Q * 1e9,
+         f"Q={Q} churn={churn.size} tombstones=64")
+
+    jax.block_until_ready(dyn.find(q, use_kernel=False))
+    dt = _median(lambda: jax.block_until_ready(dyn.find(q,
+                                                        use_kernel=False)))
+    _row("find-churn", "two-tier-jnp", dt / Q * 1e9,
+         f"Q={Q} churn={churn.size} tombstones={dels.size} "
+         f"iters={dyn.index.search_iters}")
+
+    jax.block_until_ready(dyn.find(q, use_kernel=True))
+    dt = _median(lambda: jax.block_until_ready(dyn.find(q, use_kernel=True)))
+    _row("find-churn", "two-tier-pallas", dt / Q * 1e9,
+         f"Q={Q} interpret-mode (correctness-grade)")
+
+    # ---- rebuild (budget-exhausting storm; merges + forced Algorithm-1
+    # pool-reuse refits, reuse_on_rebuild=True) ----------------------------
+    storm = ins[:max(n // 4, 2048)]
+    for warm in (True, False):          # first pass primes the jit caches
+        dyn = DynamicRMI.build(jnp.asarray(base), pool=pool, eps=eps,
+                               n_leaves=n_leaves, kind="linear",
+                               reuse_on_rebuild=True if with_pool else None)
+        t0 = time.time()
+        dyn.insert_batch(storm)
+        dt = time.time() - t0
+    _row("rebuild", "two-tier", dt / storm.size * 1e9,
+         f"storm={storm.size} rebuilds={dyn.rebuilds} "
+         f"reuse={float(np.mean(np.asarray(dyn.index.reused_mask))):.2f} "
+         f"live_keys={dyn.base_n + dyn.delta_live}")
+    return rows
+
+
+def quick_rows(n: int = 1 << 15) -> list[dict]:
+    """CSV rows for benchmarks.run (name/us_per_call/derived schema)."""
+    return [{"name": f"updates_{r['op']}_{r['impl']}",
+             "us_per_call": r["ns_per_op"] / 1e3,
+             "derived": r["detail"]} for r in bench(n, with_pool=False)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 17)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
+                                         / "BENCH_updates.json"))
+    args = ap.parse_args()
+    rows = bench(args.n)
+    meta = {"queries": Q, "repeats": REPEATS, "mode": "interpret/CPU",
+            "note": "host-loop-seed rows time the pre-PR2 per-leaf host "
+                    "buffer implementation (kept as "
+                    "updates.HostBufferDynamicRMI); two-tier rows are the "
+                    "device-resident delta-tier subsystem. two-tier-pallas "
+                    "times the Pallas interpreter (correctness-grade)."}
+    Path(args.out).write_text(json.dumps({"meta": meta, "rows": rows},
+                                         indent=1) + "\n")
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

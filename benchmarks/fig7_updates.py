@@ -1,12 +1,19 @@
 """Paper Fig. 7: insertion time vs insertion ratio (a) and vs fanout /
 branching parameter (b). Dynamic indices only (BTree absorbed into the
 gapped-leaf comparison; RMI/RMI-NN/RS are static and excluded, as in the
-paper)."""
+paper).
+
+PR 2: the sweeps now run on the two-tier (base + delta) device-resident
+``DynamicRMI`` — inserts are vectorized route-sort-merges and Lemma 4.1
+rebuilds are batched pool-reuse re-indexes — and each ratio row also times
+find-under-churn through the fused lookup path.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
@@ -29,10 +36,16 @@ def run(n: int = 100_000, eps: float = 0.9):
         t0 = time.time()
         dyn.insert_batch(ins)
         dt = time.time() - t0
+        q = jnp.asarray(rng.choice(ins, 4096))
+        jax.block_until_ready(dyn.find(q, use_kernel=False))   # warm
+        t0 = time.time()
+        jax.block_until_ready(dyn.find(q, use_kernel=False))
+        dtf = time.time() - t0
         rows.append({
             "name": f"fig7a_ratio{ratio}",
             "us_per_call": dt / ins.size * 1e6,
             "derived": f"insert={dt/ins.size*1e9:.0f}ns/i "
+                       f"find={dtf/4096*1e9:.0f}ns/q "
                        f"rebuilds={dyn.rebuilds} buffered={dyn.total_buffered}",
         })
 

@@ -49,7 +49,7 @@ def kernel_rows(n: int = 200_000, q: int = 16_384):
     ]
 
 
-SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "kernels"]
+SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "kernels"]
 
 
 def main() -> None:
@@ -78,6 +78,9 @@ def main() -> None:
     if "fig7" in only:
         from . import fig7_updates
         rows += fig7_updates.run(**({"n": args.n} if args.n else {}))
+    if "updates" in only:
+        from . import bench_updates
+        rows += bench_updates.quick_rows(**({"n": args.n} if args.n else {}))
     if "kernels" in only:
         rows += kernel_rows(**({"n": args.n} if args.n else {}))
 

@@ -39,3 +39,33 @@ def widen_for_inserts(err_lo: Array, err_hi: Array, n_inserts: Array):
     """§4: a sibling leaf whose CDF is untouched by i inserts only needs its
     bounds widened by i (positions after the insertion point shift by <= i)."""
     return err_lo - n_inserts, err_hi + n_inserts
+
+
+# ---------------------------------------------------------------------------
+# Search-window accounting (ROADMAP "Update path x clamped depth"): the
+# serving search depth is a function of per-leaf window *widths*, so the
+# dynamic-update path maintains a host-side width vector and recomputes the
+# depth incrementally on every leaf merge instead of invalidating the cached
+# depth and re-deriving it from the device bound arrays.
+# ---------------------------------------------------------------------------
+def window_widths(err_lo, err_hi):
+    """Per-leaf search-window widths: ceil(err_hi) - floor(err_lo) + 3
+    (the +3 is the clamp/rounding slack of the lookup's window math).
+    Host numpy — this feeds static jit parameters, not traced code."""
+    import numpy as np
+    elo = np.asarray(err_lo, np.float64)
+    ehi = np.asarray(err_hi, np.float64)
+    return np.ceil(ehi) - np.floor(elo) + 3.0
+
+
+def clamped_depth(widths, n_keys: int) -> int:
+    """Static branchless-search depth covering the widest *live* window
+    (sentinel full-array windows on empty leaves are excluded; queries routed
+    there are caught by seam verification and re-searched at full depth)."""
+    import math
+    import numpy as np
+    w = np.asarray(widths, np.float64)
+    live = w < n_keys
+    wmax = float(w[live].max()) if live.any() else float(max(n_keys, 2))
+    wmax = min(max(wmax, 2.0), float(max(n_keys, 2)))
+    return int(math.ceil(math.log2(wmax))) + 1

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from . import models
 from .adapt import DomainSpec, adapt_linear, adapt_mlp
 from .bounds import reuse_err_bounds
-from .reuse import ModelPool, select_from_pool_batch
+from .reuse import ModelPool, PoolSelection, select_from_pool_batch
 
 Array = jax.Array
 
@@ -92,6 +92,115 @@ def segment_residual_bounds(pred: Array, buckets: Array, n_leaves: int):
     lo = jnp.where(cnt > 0, lo, 0.0)
     hi = jnp.where(cnt > 0, hi, 0.0)
     return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# Sorted-bucket fast paths.  XLA's CPU scatters make jax.ops.segment_* cost
+# ~20ms per op at 10^5 keys — far too slow for the dynamic-update rebuild
+# path, which runs these per insert batch.  With a *monotone* (linear) root
+# the bucket array over sorted keys is itself sorted, so every per-leaf
+# reduction has a scatter-free form: boundaries via searchsorted, sums via
+# cumulative-sum differences, min/max via a segmented associative scan.
+# Out-of-range buckets (the dynamic index's +inf capacity padding routes to
+# the dump bucket ``n_leaves``) sort to the tail and drop out naturally.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def leaf_stats_sorted(keys: Array, buckets: Array, n_leaves: int):
+    """:func:`leaf_stats` for non-decreasing ``buckets`` (no scatters)."""
+    n = keys.shape[0]
+    lid = jnp.arange(n_leaves)
+    start = jnp.searchsorted(buckets, lid, side="left")
+    end = jnp.searchsorted(buckets, lid, side="right")
+    count = (end - start).astype(jnp.float64)
+    empty = count == 0
+    s = jnp.clip(start, 0, n - 1)
+    e = jnp.clip(end - 1, 0, n - 1)
+    kmin = jnp.where(empty, 0.0, keys[s])
+    kmax = jnp.where(empty, 1.0, keys[e])
+    pmin = jnp.where(empty, 0.0, start.astype(jnp.float64))
+    pmax = jnp.where(empty, 0.0, e.astype(jnp.float64))
+    return count, kmin, kmax, pmin, pmax
+
+
+def _segsum(v: Array, start: Array, end: Array) -> Array:
+    """Per-leaf sums of ``v`` over contiguous [start, end) ranges via one
+    cumulative sum (exclusive prefix, diff at the boundaries)."""
+    c = jnp.concatenate([jnp.zeros((1,), v.dtype), jnp.cumsum(v)])
+    return c[end] - c[start]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def leaf_histograms_ranges(keys: Array, buckets: Array, rid: Array, m: int,
+                           kmin: Array, kmax: Array) -> Array:
+    """:func:`leaf_histograms` for a compacted subset of leaves (rows
+    ``rid``), non-decreasing ``buckets``: per-leaf bin populations via
+    searchsorted at the bin edges — cost scales with R*m, not n.  Same
+    right-closed binning as the scatter version."""
+    start = jnp.searchsorted(buckets, rid, side="left")
+    end = jnp.searchsorted(buckets, rid, side="right")
+    span = jnp.maximum(kmax - kmin, jnp.finfo(jnp.float64).tiny)
+    frac = jnp.arange(1, m, dtype=jnp.float64) / m
+    edges = kmin[:, None] + span[:, None] * frac[None, :]
+    pos = jnp.searchsorted(keys, edges.reshape(-1), side="right") \
+        .reshape(rid.shape[0], m - 1)
+    pos = jnp.clip(pos, start[:, None], end[:, None])
+    bounds = jnp.concatenate([start[:, None], pos, end[:, None]], 1)
+    counts = (bounds[:, 1:] - bounds[:, :-1]).astype(jnp.float64)
+    tot = jnp.maximum(counts.sum(1, keepdims=True), 1.0)
+    return counts / tot
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def segment_linear_fit_sorted(keys: Array, buckets: Array, n_leaves: int):
+    """:func:`segment_linear_fit` for non-decreasing ``buckets``: two-pass
+    cumsum-diff moments (pass 1 per-leaf means, pass 2 centered products —
+    the same centering the Pallas linfit wrapper uses for stability).
+    Non-finite keys (capacity padding) contribute zero to every moment."""
+    n = keys.shape[0]
+    lid = jnp.arange(n_leaves)
+    start = jnp.searchsorted(buckets, lid, side="left")
+    end = jnp.searchsorted(buckets, lid, side="right")
+    finite = jnp.isfinite(keys)
+    x = jnp.where(finite, keys.astype(jnp.float64), 0.0)
+    y = jnp.arange(n, dtype=jnp.float64)
+    cnt = (end - start).astype(jnp.float64)
+    nn = jnp.maximum(cnt, 1.0)
+    mx = _segsum(x, start, end) / nn
+    # y is consecutive positions: its per-leaf mean is closed-form.
+    my = (start + end - 1).astype(jnp.float64) / 2.0
+    bc = jnp.clip(buckets, 0, n_leaves - 1)
+    xc = jnp.where(finite, x - mx[bc], 0.0)
+    yc = jnp.where(finite, y - my[bc], 0.0)
+    sxy = _segsum(xc * yc, start, end)
+    sxx = _segsum(xc * xc, start, end)
+    a = jnp.where(jnp.abs(sxx) > 1e-30, sxy / sxx, 0.0)
+    b = jnp.where(cnt > 0, my - a * mx, 0.0)
+    return models.LinearParams(a=a, b=b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def segment_residual_bounds_sorted(pred: Array, buckets: Array,
+                                   n_leaves: int):
+    """:func:`segment_residual_bounds` for non-decreasing ``buckets``:
+    segmented min/max via one associative scan each (flag-reset combine),
+    gathered at each leaf's last element."""
+    n = pred.shape[0]
+    r = jnp.arange(n, dtype=jnp.float64) - pred
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), buckets[1:] != buckets[:-1]])
+
+    def combine(a, b):
+        mn = jnp.where(b[2], b[0], jnp.minimum(a[0], b[0]))
+        mx = jnp.where(b[2], b[1], jnp.maximum(a[1], b[1]))
+        return mn, mx, a[2] | b[2]
+
+    run_min, run_max, _ = jax.lax.associative_scan(combine, (r, r, first))
+    lid = jnp.arange(n_leaves)
+    end = jnp.searchsorted(buckets, lid, side="right")
+    empty = jnp.searchsorted(buckets, lid, side="left") == end
+    e = jnp.clip(end - 1, 0, n - 1)
+    return (jnp.where(empty, 0.0, run_min[e]),
+            jnp.where(empty, 0.0, run_max[e]))
 
 
 # ---------------------------------------------------------------------------
@@ -177,6 +286,176 @@ def root_buckets(kind: str, params, keys: Array, n_leaves: int, n: int) -> Array
     return jnp.clip((pred * n_leaves / n).astype(jnp.int32), 0, n_leaves - 1)
 
 
+class LeafFit(NamedTuple):
+    """Batched per-leaf fit result (all leaves; see :func:`fit_leaves`)."""
+    leaves: Any          # stacked params, (L, ...) per field
+    reused: Array        # (L,) bool — Algorithm 1 pool hit
+    err_lo: Array        # (L,) sound bounds (sentinel window on empty leaves)
+    err_hi: Array        # (L,)
+    sim: Array           # (L,) build-time similarity (Lemma 4.1 input)
+    count: Array         # (L,) member counts
+
+
+def fit_leaves(
+    keys: Array,
+    buckets: Array,
+    n_leaves: int,
+    kind: str = "linear",
+    pool: Optional[ModelPool] = None,
+    paper_bounds: bool = False,
+    train_steps: int = 300,
+    seed: int = 0,
+    refit_mask=None,
+    sorted_buckets: bool = False,
+) -> LeafFit:
+    """Fit every leaf of an RMI layer in a handful of batched jit calls:
+    Algorithm-1 pool reuse first (batched selection + affine adaptation),
+    fresh fits on the misses, residual bounds in one batched predict.
+
+    Shared by :func:`build_rmi` (all leaves) and the dynamic-update rebuild
+    path (``core.updates.DynamicRMI._rebuild_leaves``), which passes
+    ``refit_mask`` to restrict *training* cost to the leaves being rebuilt —
+    rows outside the mask are still populated (one cheap segment fit) but
+    callers keep their existing models for them. A ``pool`` whose kind does
+    not match ``kind`` is ignored (cross-kind params cannot be merged).
+    ``sorted_buckets`` (sound only for a monotone root, i.e. linear) selects
+    the scatter-free segment reductions above.
+    """
+    stats = leaf_stats_sorted if sorted_buckets else leaf_stats
+    count, kmin, kmax, pmin, pmax = stats(keys, buckets, n_leaves)
+    if pool is not None and pool.kind != kind:
+        pool = None
+    if pool is not None:
+        if pool.sel_a is None:
+            pool._refresh_tables()
+        if refit_mask is not None and sorted_buckets:
+            # Rebuild path: Algorithm-1 selection only for the leaves being
+            # re-indexed — histograms via per-range searchsorted and a
+            # compacted (pow2-padded) selection batch, scattered back.
+            import numpy as np
+            rid = np.flatnonzero(np.asarray(refit_mask))
+            rp = 1 << max(int(rid.size) - 1, 0).bit_length()
+            rid_p = jnp.asarray(np.concatenate(
+                [rid, np.full(rp - rid.size, rid[0] if rid.size else 0)])
+                .astype(np.int32))
+            sel = _select_compact_jit(keys, buckets, rid_p, kmin, kmax,
+                                      pool.sel_a, pool.sel_ps,
+                                      jnp.float32(pool.eps), m=pool.m,
+                                      n_leaves=n_leaves)
+        else:
+            hists = leaf_histograms(keys, buckets, n_leaves, pool.m, kmin,
+                                    kmax)
+            sel = select_from_pool_batch(pool.sel_a, pool.sel_ps, hists,
+                                         jnp.float32(pool.eps))
+        found = sel.found & (count > 1)
+        if refit_mask is not None:
+            found = found & refit_mask
+    else:
+        found = jnp.zeros((n_leaves,), bool)
+
+    # ---- fresh fits for missing leaves (batched over all leaves) ---------
+    if kind == "linear":
+        fit_fn = segment_linear_fit_sorted if sorted_buckets \
+            else segment_linear_fit
+        fresh = fit_fn(keys, buckets, n_leaves)
+    else:
+        skip = None
+        if pool is not None or refit_mask is not None:
+            skip = found if refit_mask is None else found | ~refit_mask
+        fresh = _batched_leaf_mlp(keys, buckets, n_leaves, count, kmin, kmax,
+                                  pmin, train_steps, seed, skip_mask=skip)
+
+    # ---- merge reused + fresh, derive bounds (one fused jit) --------------
+    if pool is not None:
+        leaves, err_lo, err_hi, sim = _pool_merge_measure_jit(
+            keys, buckets, fresh, found, sel.index, sel.dist, pool.params,
+            pool.domains, pool.err_lo, pool.err_hi, count, kmin, kmax, pmin,
+            pmax, kind=kind, n_leaves=n_leaves, paper_bounds=paper_bounds,
+            sorted_buckets=sorted_buckets)
+    else:
+        leaves = fresh
+        err_lo, err_hi = _measure_bounds_jit(
+            keys, buckets, fresh, count, kind=kind, n_leaves=n_leaves,
+            sorted_buckets=sorted_buckets)
+        sim = jnp.ones((n_leaves,), jnp.float64)
+    return LeafFit(leaves=leaves, reused=found, err_lo=err_lo, err_hi=err_hi,
+                   sim=sim, count=count)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n_leaves"))
+def _select_compact_jit(keys, buckets, rid_p, kmin, kmax, sel_a, sel_ps,
+                        eps, *, m: int, n_leaves: int):
+    """Compacted Algorithm-1 selection (rebuild path): range histograms +
+    fused selection for the padded leaf-row batch, scattered back to full
+    (L,) selection arrays — one dispatch.  Padding rows repeat a real leaf
+    id, so they scatter an identical value onto that row (harmless) and the
+    true row count never enters the jit cache key."""
+    hist_c = leaf_histograms_ranges(keys, buckets, rid_p, m,
+                                    kmin[rid_p], kmax[rid_p])
+    sel_c = select_from_pool_batch(sel_a, sel_ps, hist_c, eps)
+    return PoolSelection(
+        found=jnp.zeros((n_leaves,), bool).at[rid_p].set(sel_c.found),
+        index=jnp.zeros((n_leaves,), jnp.int32).at[rid_p].set(sel_c.index),
+        dist=jnp.zeros((n_leaves,), jnp.float64).at[rid_p].set(sel_c.dist))
+
+
+def _sentinel_bounds(err_lo, err_hi, count, n: int):
+    """Empty leaves are reachable by out-of-distribution queries: give them
+    a sound full-array window (plain binary search fallback)."""
+    return (jnp.where(count > 0, err_lo, -float(n)),
+            jnp.where(count > 0, err_hi, float(n)))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "n_leaves",
+                                             "sorted_buckets"))
+def _measure_bounds_jit(keys, buckets, leaves, count, *, kind: str,
+                        n_leaves: int, sorted_buckets: bool):
+    pred = _leaf_predict_all(kind, leaves, keys, buckets)
+    bounds_fn = segment_residual_bounds_sorted if sorted_buckets \
+        else segment_residual_bounds
+    meas_lo, meas_hi = bounds_fn(pred, buckets, n_leaves)
+    return _sentinel_bounds(meas_lo, meas_hi, count, keys.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "n_leaves",
+                                             "paper_bounds",
+                                             "sorted_buckets"))
+def _pool_merge_measure_jit(keys, buckets, fresh, found, sel_index, sel_dist,
+                            p_params, p_domains, p_errlo, p_errhi, count,
+                            kmin, kmax, pmin, pmax, *, kind: str,
+                            n_leaves: int, paper_bounds: bool,
+                            sorted_buckets: bool):
+    """Adapt the selected pool models (Lemma 3.2 folds), merge with the
+    fresh fits, measure residual bounds — the whole tail of fit_leaves in
+    one jit (it used to be ~100 eager dispatches on the rebuild path)."""
+    src = jax.tree.map(lambda a: a[sel_index], p_domains)
+    tgt = DomainSpec(x_start=kmin, x_end=jnp.where(kmax > kmin, kmax, kmin + 1.0),
+                     y_start=pmin, y_end=jnp.maximum(pmax, pmin + 1.0))
+    pool_params = jax.tree.map(lambda a: a[sel_index], p_params)
+    adapt = adapt_linear if kind == "linear" else adapt_mlp
+    adapted = jax.vmap(adapt)(pool_params, src, tgt)
+    merge = lambda a, f: jnp.where(
+        jnp.expand_dims(found, tuple(range(1, a.ndim))), a, f)
+    leaves = jax.tree.map(merge, adapted, fresh)
+
+    pred = _leaf_predict_all(kind, leaves, keys, buckets)
+    bounds_fn = segment_residual_bounds_sorted if sorted_buckets \
+        else segment_residual_bounds
+    meas_lo, meas_hi = bounds_fn(pred, buckets, n_leaves)
+    if paper_bounds:
+        s_dy = (tgt.y_end - tgt.y_start) / (src.y_end - src.y_start)
+        thm_lo, thm_hi = reuse_err_bounds(p_errlo[sel_index],
+                                          p_errhi[sel_index],
+                                          sel_dist, count, s_dy)
+        err_lo = jnp.where(found, thm_lo, meas_lo)
+        err_hi = jnp.where(found, thm_hi, meas_hi)
+    else:
+        err_lo, err_hi = meas_lo, meas_hi
+    err_lo, err_hi = _sentinel_bounds(err_lo, err_hi, count, keys.shape[0])
+    sim = jnp.where(found, 1.0 - sel_dist, 1.0)
+    return leaves, err_lo, err_hi, sim
+
+
 def build_rmi(
     keys: Array,
     n_leaves: int = 1024,
@@ -213,63 +492,13 @@ def build_rmi(
                                 w2=p.w2, b2=p.b2)
     buckets = root_buckets(root_kind, root, keys, n_leaves, n)
 
-    # ---- per-leaf stats + reuse selection --------------------------------
-    count, kmin, kmax, pmin, pmax = leaf_stats(keys, buckets, n_leaves)
-    if pool is not None:
-        if pool.sel_a is None:
-            pool._refresh_tables()
-        hists = leaf_histograms(keys, buckets, n_leaves, pool.m, kmin, kmax)
-        sel = select_from_pool_batch(pool.sel_a, pool.sel_ps, hists,
-                                     jnp.float32(pool.eps))
-        found = sel.found & (count > 1)
-        src = jax.tree.map(lambda a: a[sel.index], pool.domains)
-        tgt = DomainSpec(x_start=kmin, x_end=jnp.where(kmax > kmin, kmax, kmin + 1.0),
-                         y_start=pmin, y_end=jnp.maximum(pmax, pmin + 1.0))
-        pool_params = jax.tree.map(lambda a: a[sel.index], pool.params)
-        adapt = adapt_linear if pool.kind == "linear" else adapt_mlp
-        adapted = jax.vmap(adapt)(pool_params, src, tgt)
-        s_dy = (tgt.y_end - tgt.y_start) / (src.y_end - src.y_start)
-        thm_lo, thm_hi = reuse_err_bounds(pool.err_lo[sel.index],
-                                          pool.err_hi[sel.index],
-                                          sel.dist, count, s_dy)
-    else:
-        found = jnp.zeros((n_leaves,), bool)
-
-    # ---- fresh fits for missing leaves (batched over all leaves) ---------
-    if kind == "linear":
-        fresh = segment_linear_fit(keys, buckets, n_leaves)
-    else:
-        fresh = _batched_leaf_mlp(keys, buckets, n_leaves, count, kmin, kmax,
-                                  pmin, train_steps, seed,
-                                  skip_mask=found if pool is not None else None)
-
-    # ---- merge reused + fresh, derive bounds ------------------------------
-    if pool is not None and pool.kind == kind:
-        merge = lambda a, f: jnp.where(
-            jnp.expand_dims(found, tuple(range(1, a.ndim))), a, f)
-        leaves = jax.tree.map(merge, adapted, fresh)
-    else:
-        leaves = fresh
-        found = jnp.zeros((n_leaves,), bool)
-
-    pred = _leaf_predict_all(kind, leaves, keys, buckets)
-    meas_lo, meas_hi = segment_residual_bounds(pred, buckets, n_leaves)
-    if pool is not None and paper_bounds:
-        err_lo = jnp.where(found, thm_lo, meas_lo)
-        err_hi = jnp.where(found, thm_hi, meas_hi)
-    else:
-        err_lo, err_hi = meas_lo, meas_hi
-    # Empty leaves are reachable by out-of-distribution queries: give them a
-    # sound full-array window (plain binary search fallback).
-    err_lo = jnp.where(count > 0, err_lo, -float(n))
-    err_hi = jnp.where(count > 0, err_hi, float(n))
-
-    leaf_sim = jnp.where(found, 1.0 - sel.dist, 1.0) if pool is not None \
-        else jnp.ones((n_leaves,), jnp.float64)
-
+    fit = fit_leaves(keys, buckets, n_leaves, kind=kind, pool=pool,
+                     paper_bounds=paper_bounds, train_steps=train_steps,
+                     seed=seed, sorted_buckets=root_kind == "linear")
     return RMIIndex(keys=keys, root_kind=root_kind, root=root, leaf_kind=kind,
-                    leaves=leaves, err_lo=err_lo, err_hi=err_hi,
-                    n_leaves=n_leaves, reused_mask=found, leaf_sim=leaf_sim)
+                    leaves=fit.leaves, err_lo=fit.err_lo, err_hi=fit.err_hi,
+                    n_leaves=n_leaves, reused_mask=fit.reused,
+                    leaf_sim=fit.sim)
 
 
 def _batched_leaf_mlp(keys, buckets, n_leaves, count, kmin, kmax, pmin,

@@ -1,44 +1,649 @@
-"""Update handling (paper §4): insertions with the Lemma 4.1 rebuild budget,
-deletions as tombstones.
+"""Update handling (paper §4), two-tier and device-resident.
 
-Design (adapted — see DESIGN.md §5.3): JAX arrays are immutable and TPU
-serving wants bounded-latency updates, so instead of the paper's in-place
-array inserts we keep the *base* key array immutable and give every leaf a
-small sorted overflow buffer (gapped-leaf style). Lemma 4.1 still governs
-when a leaf's model must be rebuilt; untouched leaves only widen their error
-bounds by the number of inserts that landed left of them (§4: "simply add 1
-to its model error bounds").
+Architecture (PR 2; replaces the per-leaf host Python buffers of the seed):
+the *base* tier is the immutable sorted key array served by the RMI, and all
+inserts live in a single sorted device-resident *delta* tier with a routed-
+leaf table, so the update path rides the same vectorized/jit machinery as
+the lookup path:
 
-Lookup semantics: ``find(q)`` returns (found, global_rank) where global_rank
-counts live base keys + buffered inserts < q. The structure is benchmarked in
-benchmarks/fig7_updates.py against the paper's insert-ratio/fanout sweeps.
+  insert_batch   one route-sort-merge on device: root-route the batch
+                 (vectorized), merge it into the sorted delta tier (argsort
+                 gather, tombstoned entries purged in the same pass), bump
+                 per-leaf Lemma 4.1 counters with one bincount.
+  delete_batch   tombstones as *bitmaps* aligned to each tier (plus exclusive
+                 prefix sums for rank arithmetic), marked by one vectorized
+                 scatter — a delete of a key still sitting in the delta tier
+                 marks the buffered entry itself (the seed's query-value
+                 tombstone set left it live forever).
+  find           (found, rank) in one fused pass: base window search + delta
+                 probe + tombstone mask.  ``rank`` counts *live* keys < q
+                 across BOTH tiers (the seed composed base_pos with only the
+                 routed leaf's buffer, dropping buffered inserts in earlier
+                 leaves).  On TPU (or ``use_kernel=True``) the whole pass is
+                 one Pallas kernel call (``kernels.ops.dynamic_index_lookup``);
+                 the jnp path here is its f64 oracle and the CPU fast path.
+  rebuild        Lemma 4.1 budget exhaustion triggers a *batched* leaf
+                 rebuild: the affected leaves' delta entries merge into the
+                 base in one sorted merge, and the leaves are re-indexed via
+                 pool selection (Algorithm 1 reuse first, refit on miss —
+                 ``rmi.fit_leaves``).  Untouched leaves are position-shifted
+                 exactly (monotone linear root) or bound-widened (MLP root),
+                 and the clamped search depth is recomputed *incrementally*
+                 from a maintained per-leaf window-width vector (ROADMAP
+                 "Update path x clamped depth") instead of being invalidated.
+
+Routing is frozen at build time (``route_n``): the root model plus the
+build-time key count define a pure key->leaf hash, so base merges never
+remap existing keys between leaves and insert-time routing always matches
+find-time routing.
+
+Semantics notes: duplicate keys across tiers are counted as a multiset by
+``rank``; ``delete`` removes one (the leftmost live) occurrence of a key.
+The delta tier is stored at power-of-two capacity with +inf padding so its
+shape — and therefore the jit cache — only changes on capacity doubling.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import functools
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import models
 from . import rmi as rmi_mod
-from .bounds import insertion_budget
+from .bounds import clamped_depth, insertion_budget, window_widths
 from .reuse import ModelPool
 
 Array = jax.Array
 
+_MIN_CAP = 128      # delta-tier floor: one kernel lane tile
 
+
+def _pow2ceil(v: int) -> int:
+    return 1 << max(int(v) - 1, 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Jitted tier primitives (module-level so tests can count dispatches).
+# ---------------------------------------------------------------------------
+def _compact_sorted(keys: Array, keep: Array, payloads: tuple,
+                    fills: tuple) -> tuple:
+    """Drop ``~keep`` entries from a sorted array, backfilling +inf /
+    ``fills``: target slot of a kept entry is its index minus the dropped
+    count before it (one cumsum + scatter — order, hence sortedness, is
+    preserved with no sort)."""
+    cap = keys.shape[0]
+    tgt = jnp.arange(cap) - jnp.cumsum(~keep) + (~keep)   # exclusive cumsum
+    tgt = jnp.where(keep, tgt, cap)
+    ck = jnp.full((cap,), jnp.inf, keys.dtype).at[tgt].set(keys, mode="drop")
+    cp = tuple(jnp.full((cap,), f, p.dtype).at[tgt].set(p, mode="drop")
+               for p, f in zip(payloads, fills))
+    return ck, cp
+
+
+def _merge_sorted(ak: Array, bk: Array, cap_out: int, a_payloads: tuple,
+                  b_payloads: tuple, fills: tuple) -> tuple:
+    """Gather-merge of two sorted, +inf-padded arrays (with payloads).
+
+    XLA's CPU sort and scatters are far too slow for the update hot path;
+    since both inputs are sorted, the merged position of every ``bk`` entry
+    is one searchsorted (ties: ``ak``'s equal run first), and each *output*
+    slot then resolves to a pure gather: slot i holds ``bk[bl]`` if the i-th
+    merged element is from ``bk`` (bl = #b-positions < i, membership via a
+    second searchsorted over the sorted position list), else ``ak[i - bl]``.
+    Output re-padded/truncated to ``cap_out`` (callers guarantee every
+    finite entry fits).
+    """
+    na, nb = ak.shape[0], bk.shape[0]
+    if nb == 0:                      # drop-only call: resize ak alone
+        pad = max(cap_out - na, 0)
+        ext = lambda x, f: jnp.concatenate(
+            [x, jnp.full((pad,), f, x.dtype)])[:cap_out]
+        return ext(ak, jnp.inf), tuple(
+            ext(pa, f) for pa, f in zip(a_payloads, fills))
+    # One small-side searchsorted (nb queries; XLA's searchsorted costs
+    # ~O(queries), so keep the big side out of the query slot), then the
+    # per-slot source map comes from a bincount + cumsum over the output:
+    # ind[i] = 1 iff slot i holds a b element, bl[i] = #b slots before i.
+    posb = jnp.arange(nb) + jnp.searchsorted(ak, bk, side="right")  # sorted
+    i = jnp.arange(cap_out)
+    ind = jnp.bincount(posb, length=cap_out)          # oob posb drop (trunc)
+    cum = jnp.cumsum(ind)
+    from_b = ind > 0
+    bl = cum - ind                                    # exclusive
+    ai = jnp.clip(i - bl, 0, na - 1)
+    bi = jnp.clip(bl, 0, nb - 1)
+    in_range = i < na + nb
+    out = jnp.where(in_range & from_b, bk[bi],
+                    jnp.where(in_range, ak[ai], jnp.inf))
+    outp = tuple(
+        jnp.where(in_range & from_b, pb[bi],
+                  jnp.where(in_range, pa[ai], f))
+        for pa, pb, f in zip(a_payloads, b_payloads, fills))
+    return out, outp
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out",))
+def _merge_delta_jit(dk: Array, dleaf: Array, ddead: Array,
+                     new_k: Array, new_leaf: Array, cap_out: int):
+    """Sorted merge of a routed (pre-sorted) batch into the delta tier.
+
+    Tombstoned entries are purged by the compaction pass, so the returned
+    tier is all-live: callers reset the dead bitmap/prefix sum to zeros.
+    Sort-free: one cumsum compaction + one searchsorted gather-merge.
+    """
+    ck, (cl,) = _compact_sorted(dk, jnp.isfinite(dk) & ~ddead, (dleaf,),
+                                (jnp.int32(-1),))
+    allk, (alll,) = _merge_sorted(
+        ck, new_k.astype(jnp.float64), cap_out, (cl,),
+        (new_leaf.astype(jnp.int32),), (jnp.int32(-1),))
+    return allk, alll
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out",))
+def _merge_delta_clean_jit(dk: Array, dleaf: Array, new_k: Array,
+                           new_leaf: Array, cap_out: int):
+    """:func:`_merge_delta_jit` fast path for a tier with no tombstones
+    (the common case, tracked host-side): skips the compaction scatter."""
+    allk, (alll,) = _merge_sorted(
+        dk, new_k.astype(jnp.float64), cap_out, (dleaf,),
+        (new_leaf.astype(jnp.int32),), (jnp.int32(-1),))
+    return allk, alll
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out",))
+def _fill_delta_jit(new_k: Array, new_leaf: Array, cap_out: int):
+    """Insert into an *empty* delta tier: the sorted batch plus padding."""
+    pad = cap_out - new_k.shape[0]
+    return (jnp.concatenate([new_k.astype(jnp.float64),
+                             jnp.full((pad,), jnp.inf, jnp.float64)]),
+            jnp.concatenate([new_leaf.astype(jnp.int32),
+                             jnp.full((pad,), -1, jnp.int32)]))
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def _batch_counts_sorted(lv: Array, n_leaves: int) -> Array:
+    """Per-leaf counts of a routed batch under a monotone root (``lv`` is
+    non-decreasing): searchsorted run lengths, no bincount scatter."""
+    lid = jnp.arange(n_leaves)
+    return jnp.searchsorted(lv, lid, side="right") - \
+        jnp.searchsorted(lv, lid, side="left")
+
+
+@jax.jit
+def _moved_counts_sorted(dleaf: Array, rmask: Array) -> Array:
+    """Per-leaf live delta counts restricted to ``rmask`` leaves, for a
+    tombstone-free tier under a *monotone* root (leaf ids non-decreasing
+    over the sorted keys): searchsorted run lengths, no bincount scatter."""
+    L = rmask.shape[0]
+    arr = jnp.where(dleaf >= 0, dleaf, L)
+    lid = jnp.arange(L)
+    cnt = jnp.searchsorted(arr, lid, side="right") - \
+        jnp.searchsorted(arr, lid, side="left")
+    return jnp.where(rmask, cnt, 0)
+
+
+@jax.jit
+def _psum(dead: Array) -> Array:
+    """Exclusive prefix sum of a tombstone bitmap, length n + 1 (so a gather
+    at position n yields the total dead count)."""
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(dead.astype(jnp.int32))])
+
+
+@jax.jit
+def _delete_jit(base_keys: Array, base_dead: Array, dk: Array, ddead: Array,
+                q: Array):
+    """Mark one live occurrence of each query dead: delta tier first (the
+    most recent insert), base on a delta miss.  Absent keys are no-ops.
+
+    Duplicates: within an equal-key run tombstones always form a *prefix*
+    (this function only ever kills the first live slot, and the order-
+    preserving merges keep runs intact), so the first live slot of a run is
+    ``run_lo + #dead-in-run`` — repeated deletes of a duplicated key retire
+    one copy each.  Duplicate keys within a single batch collapse to one
+    removal (same target slot); the returned per-tier counts are exact
+    (bitmap population deltas, not per-query hit sums).
+    """
+    def mark(keys, dead, skip):
+        n = keys.shape[0]
+        psum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(dead.astype(jnp.int32))])
+        lo = jnp.searchsorted(keys, q, side="left")
+        hi = jnp.searchsorted(keys, q, side="right")
+        tgt = lo + (psum[hi] - psum[lo])
+        hit = (tgt < hi) & ~skip
+        return dead.at[jnp.where(hit, tgt, n)].set(True, mode="drop"), hit
+
+    new_ddead, dhit = mark(dk, ddead, jnp.zeros(q.shape, bool))
+    new_bdead, _ = mark(base_keys, base_dead, dhit)
+    nb = jnp.sum(new_bdead) - jnp.sum(base_dead)
+    ndel = jnp.sum(new_ddead) - jnp.sum(ddead)
+    return new_bdead, new_ddead, nb, ndel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "root_kind", "leaf_kind", "n_leaves", "route_n", "iters"))
+def _find_jit(root, leaves, err_lo, err_hi, base_keys, base_dead, base_psum,
+              dk, ddead, dpsum, q, *, root_kind: str, leaf_kind: str,
+              n_leaves: int, route_n: int, iters: int):
+    """f64 oracle of the fused dynamic kernel: base window search + delta
+    probe + tombstone mask, one jit. Returns (found, rank, base_pos)."""
+    n = base_keys.shape[0]
+    b = rmi_mod.root_buckets(root_kind, root, q, n_leaves, route_n)
+    p = jax.tree.map(lambda a: a[b], leaves)
+    if leaf_kind == "linear":
+        pred = models.linear_predict(p, q)
+    else:
+        h = jax.nn.relu(q[:, None] * p.w1 + p.b1)
+        pred = jnp.sum(h * p.w2, -1) + p.b2
+    lo = jnp.clip(jnp.floor(pred + err_lo[b]), 0, n - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + err_hi[b]) + 1, 1, n).astype(jnp.int32)
+    pos = rmi_mod.verified_search(base_keys, q, lo, hi, iters=iters)
+    # A hit is any *live* entry in the equal-key run [pos, right): count
+    # live slots via the tombstone prefix sums (robust to partially
+    # tombstoned duplicate runs).
+    bhi = jnp.searchsorted(base_keys, q, side="right").astype(jnp.int32)
+    base_hit = (bhi - pos) > (base_psum[bhi] - base_psum[pos])
+    dpos = jnp.searchsorted(dk, q, side="left").astype(jnp.int32)
+    dhi = jnp.searchsorted(dk, q, side="right").astype(jnp.int32)
+    delta_hit = (dhi - dpos) > (dpsum[dhi] - dpsum[dpos])
+    rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
+    return base_hit | delta_hit, rank, pos
+
+
+@functools.partial(jax.jit, static_argnames=("root_kind", "n_leaves",
+                                             "route_n"))
+def _routed_buckets(root_kind: str, root, keys: Array, n_leaves: int,
+                    route_n: int) -> Array:
+    """Frozen-scale routing that sends +inf capacity padding to the dump
+    bucket ``n_leaves`` (segment ops drop it; an unmasked inf saturates to
+    INT32_MAX and would clip into the last live leaf)."""
+    b = rmi_mod.root_buckets(root_kind, root, keys, n_leaves, route_n)
+    return jnp.where(jnp.isfinite(keys), b, n_leaves)
+
+
+@jax.jit
+def _gather_moved(dk: Array, dleaf: Array, ddead: Array, rmask: Array):
+    """Live delta entries routed to rebuilt leaves: (sorted keys with +inf
+    backfill — a cumsum compaction of the already-sorted tier, no sort —
+    membership mask, per-leaf moved counts)."""
+    L = rmask.shape[0]
+    move = (dleaf >= 0) & ~ddead & rmask[jnp.clip(dleaf, 0, L - 1)]
+    mk, _ = _compact_sorted(dk, move, (), ())
+    mcnt = jnp.bincount(jnp.where(move, dleaf, L), length=L + 1)[:L]
+    return mk, move, mcnt
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_kind",))
+def _compose_rebuild_jit(old_leaves, old_lo, old_hi, old_reused, old_sim,
+                         new_leaves, new_lo, new_hi, new_reused, new_sim,
+                         new_count, rmask, shift, widen, eps,
+                         *, leaf_kind: str):
+    """Assemble the post-rebuild leaf state in one jit: exact intercept
+    shift (or widen) for untouched leaves, row-select of the refit results,
+    and the full Lemma 4.1 budget vector."""
+    if leaf_kind == "linear":
+        shifted = old_leaves._replace(b=old_leaves.b + shift)
+    else:
+        shifted = old_leaves._replace(b2=old_leaves.b2 + shift)
+    sel = lambda a, o: jnp.where(
+        jnp.expand_dims(rmask, tuple(range(1, a.ndim))), a, o)
+    leaves = jax.tree.map(sel, new_leaves, shifted)
+    err_lo = jnp.where(rmask, new_lo, old_lo - widen)
+    err_hi = jnp.where(rmask, new_hi, old_hi + widen)
+    reused = jnp.where(rmask, new_reused, old_reused)
+    sim = jnp.where(rmask, new_sim, old_sim)
+    budget = insertion_budget(new_sim, eps, new_count)
+    return leaves, err_lo, err_hi, reused, sim, budget
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out", "has_dead"))
+def _merge_base_jit(base_keys: Array, base_dead: Array, moved: Array,
+                    cap_out: int, has_dead: bool = True):
+    """One sorted gather-merge of the moved delta entries into the base
+    tier.  Both inputs carry +inf capacity padding which sorts past every
+    live key; the output is re-padded to ``cap_out`` (the quantized base
+    capacity), so base-tier shapes — and every jit specialization over them
+    — only change on capacity crossings, not on every merge.  Tombstone
+    flags ride the same gather map (skipped when the tier has no tombstones
+    yet, ``has_dead=False``).
+    """
+    if not has_dead:
+        allk, _ = _merge_sorted(base_keys, moved, cap_out, (), (), ())
+        return allk, jnp.zeros((cap_out,), bool)
+    allk, (dead,) = _merge_sorted(
+        base_keys, moved, cap_out, (base_dead,),
+        (jnp.zeros(moved.shape, bool),), (False,))
+    return allk, dead
+
+
+# ---------------------------------------------------------------------------
+# The dynamic index.
+# ---------------------------------------------------------------------------
 @dataclass
 class DynamicRMI:
-    """RMI + per-leaf insert buffers + Lemma 4.1 rebuild policy.
+    """RMI base tier + sorted device delta tier + Lemma 4.1 rebuild policy.
 
-    The mutable side (buffers, counters) is small and host-resident; the hot
-    lookup path stays jitted over the immutable base arrays.
+    All hot-path state (both tiers, tombstone bitmaps, prefix sums) is
+    device-resident; the host keeps only per-leaf counters (numpy) and the
+    incremental search-depth bookkeeping.
     """
     index: rmi_mod.RMIIndex
     pool: ModelPool | None
     eps: float
-    buffers: list[np.ndarray] = field(default_factory=list)     # per leaf, sorted
+    route_n: int = 0                    # frozen key->leaf routing scale
+    # delta tier (pow2 capacity, +inf padded, sorted ascending)
+    delta_keys: Array = None            # (cap,) f64
+    delta_leaf: Array = None            # (cap,) i32 routed leaf, -1 pads
+    delta_dead: Array = None            # (cap,) bool
+    delta_psum: Array = None            # (cap+1,) i32 exclusive dead psum
+    delta_live: int = 0                 # live (finite & not dead) entries
+    delta_dead_count: int = 0           # tombstoned delta entries (gates
+                                        # the compaction-free merge path)
+    # base tier bookkeeping (keys live inside ``index``, +inf padded to
+    # pow2 capacity so rebuild merges don't retrace every jit consumer)
+    base_n: int = 0                     # finite base keys (incl tombstoned)
+    base_dead: Array = None             # (cap,) bool
+    base_psum: Array = None             # (cap+1,) i32
+    base_dead_count: int = 0            # tombstoned base entries
+    # Lemma 4.1 accounting (host)
+    n_inserts: np.ndarray = None        # per leaf, since last rebuild
+    budget: np.ndarray = None
+    rebuilds: int = 0
+    deleted: int = 0
+    # Rebuild re-indexing policy: None (auto) runs Algorithm-1 pool
+    # selection only when a leaf refit requires *training* (MLP leaves) —
+    # for linear leaves the closed-form segment refit is free, optimal, and
+    # earns the maximal Lemma 4.1 budget (sim = 1), so reuse could only
+    # lose.  True forces pool selection (the paper's Algorithm 1 verbatim);
+    # False disables it.
+    reuse_on_rebuild: bool | None = None
+    build_kwargs: dict = field(default_factory=dict)
+    _win: np.ndarray = None             # per-leaf window widths (depth calc)
+    _delta_f32: bool | None = None
+
+    @classmethod
+    def build(cls, keys, pool=None, eps: float = 0.9,
+              reuse_on_rebuild: bool | None = None, **rmi_kwargs):
+        idx = rmi_mod.build_rmi(keys, pool=pool, **rmi_kwargs)
+        n = idx.n
+        counts = np.bincount(
+            np.asarray(rmi_mod.root_buckets(idx.root_kind, idx.root, idx.keys,
+                                            idx.n_leaves, n)),
+            minlength=idx.n_leaves)
+        budget = np.array(insertion_budget(
+            jnp.asarray(idx.leaf_sim), jnp.float64(eps),
+            jnp.asarray(counts, jnp.float64)), copy=True)
+        # Quantize the base tier to pow2 capacity with +inf padding: pads
+        # sort past every live key and route to the dump bucket, so rebuild
+        # merges change shapes (and retrace jits) only on capacity doubling.
+        cap = max(_pow2ceil(n), _MIN_CAP)
+        padded = jnp.concatenate(
+            [idx.keys, jnp.full((cap - n,), jnp.inf, idx.keys.dtype)])
+        idx = replace(idx, keys=padded, _f32_exact=None, _packed=None)
+        d = cls(index=idx, pool=pool, eps=eps, route_n=n, base_n=n,
+                reuse_on_rebuild=reuse_on_rebuild,
+                delta_keys=jnp.full((_MIN_CAP,), jnp.inf, jnp.float64),
+                delta_leaf=jnp.full((_MIN_CAP,), -1, jnp.int32),
+                delta_dead=jnp.zeros((_MIN_CAP,), bool),
+                delta_psum=jnp.zeros((_MIN_CAP + 1,), jnp.int32),
+                base_dead=jnp.zeros((cap,), bool),
+                base_psum=jnp.zeros((cap + 1,), jnp.int32),
+                n_inserts=np.zeros(idx.n_leaves, np.int64),
+                budget=budget, build_kwargs=rmi_kwargs)
+        d._win = window_widths(idx.err_lo, idx.err_hi)
+        idx._iters = clamped_depth(d._win, cap)
+        return d
+
+    # -- mutation ----------------------------------------------------------
+    def insert(self, key: float) -> None:
+        self.insert_batch(np.asarray([key], np.float64))
+
+    def insert_batch(self, keys: np.ndarray) -> None:
+        """Bulk insert: one vectorized route-sort-merge on device, one host
+        sync for the Lemma 4.1 counters, batched rebuild of any leaves whose
+        budget is exhausted."""
+        keys = np.asarray(keys, np.float64).ravel()
+        if keys.size == 0:
+            return
+        idx = self.index
+        k = jnp.asarray(np.sort(keys))        # host sort: batches are host-
+        lv = rmi_mod.root_buckets(idx.root_kind, idx.root, k, idx.n_leaves,
+                                  self.route_n)  # born, np.sort >> XLA sort
+        cap = max(self.delta_keys.shape[0],
+                  _pow2ceil(max(self.delta_live + keys.size, _MIN_CAP)))
+        if self.delta_live == 0 and self.delta_dead_count == 0:
+            self.delta_keys, self.delta_leaf = _fill_delta_jit(
+                k, lv, cap_out=cap)
+        elif self.delta_dead_count == 0:
+            self.delta_keys, self.delta_leaf = _merge_delta_clean_jit(
+                self.delta_keys, self.delta_leaf, k, lv, cap_out=cap)
+        else:
+            self.delta_keys, self.delta_leaf = _merge_delta_jit(
+                self.delta_keys, self.delta_leaf, self.delta_dead, k, lv,
+                cap_out=cap)
+            self.delta_dead_count = 0
+        self.delta_dead = jnp.zeros((cap,), bool)
+        self.delta_psum = jnp.zeros((cap + 1,), jnp.int32)
+        self.delta_live += keys.size
+        self._delta_f32 = None
+        cnt = np.asarray(_batch_counts_sorted(lv, idx.n_leaves)
+                         if idx.root_kind == "linear"
+                         else jnp.bincount(lv, length=idx.n_leaves))
+        self.n_inserts += cnt
+        over = np.flatnonzero(self.n_inserts > self.budget)
+        if over.size:
+            self._rebuild_leaves(over)
+
+    def delete(self, key: float) -> None:
+        self.delete_batch(np.asarray([key], np.float64))
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        """§4 deletions as tombstone *bitmaps*: one vectorized scatter marks
+        the leftmost live occurrence in the delta tier (buffered inserts die
+        here — the seed left them live), else in the base tier.
+
+        Duplicate keys *within one batch* collapse to a single removal
+        (they resolve to the same tombstone slot); to retire several copies
+        of the same key, issue sequential delete calls/batches."""
+        q = jnp.asarray(np.asarray(keys, np.float64).ravel())
+        if q.shape[0] == 0:
+            return
+        self.base_dead, self.delta_dead, nb, ndel = _delete_jit(
+            self.index.keys, self.base_dead, self.delta_keys,
+            self.delta_dead, q)
+        self.base_psum = _psum(self.base_dead)
+        self.delta_psum = _psum(self.delta_dead)
+        self.delta_live -= int(ndel)
+        self.delta_dead_count += int(ndel)
+        self.base_dead_count += int(nb)
+        self.deleted += int(nb) + int(ndel)
+
+    # -- rebuild -----------------------------------------------------------
+    def _rebuild_leaves(self, leaf_ids: np.ndarray) -> None:
+        """Batched Lemma 4.1 rebuild: merge the leaves' delta entries into
+        the base tier (one sorted merge) and re-index them via pool
+        selection — Algorithm 1 reuse first, refit on miss (``fit_leaves``)
+        — with measured post-merge error bounds.  Untouched leaves get an
+        exact intercept shift (monotone linear root) or a sound ±m widen
+        (MLP root); depth and budgets update incrementally."""
+        idx = self.index
+        L = idx.n_leaves
+        leaf_ids = np.asarray(leaf_ids, np.int64).ravel()
+        self.rebuilds += int(leaf_ids.size)
+        rmask_np = np.zeros(L, bool)
+        rmask_np[leaf_ids] = True
+        rmask = jnp.asarray(rmask_np)
+
+        cap = self.delta_keys.shape[0]
+        clean = self.delta_dead_count == 0
+        if clean and idx.root_kind == "linear":
+            # Monotone routing + no tombstones: per-leaf counts are run
+            # lengths of the (sorted) routed-leaf table — no scatters.
+            mcnt = np.asarray(_moved_counts_sorted(self.delta_leaf, rmask))
+            m = int(mcnt.sum())
+            if m == self.delta_live:
+                # Whole-tier merge (the bulk regime): the sorted tier IS the
+                # moved array; just reset the delta afterwards.
+                mk = self.delta_keys
+                self.delta_keys = jnp.full((cap,), jnp.inf, jnp.float64)
+                self.delta_leaf = jnp.full((cap,), -1, jnp.int32)
+            else:
+                mk, move, _ = _gather_moved(self.delta_keys, self.delta_leaf,
+                                            self.delta_dead, rmask)
+                self.delta_keys, self.delta_leaf = _merge_delta_jit(
+                    self.delta_keys, self.delta_leaf, move,
+                    jnp.zeros((0,), jnp.float64), jnp.zeros((0,), jnp.int32),
+                    cap_out=cap)
+        else:
+            mk, move, mcnt_d = _gather_moved(self.delta_keys,
+                                             self.delta_leaf,
+                                             self.delta_dead, rmask)
+            mcnt = np.asarray(mcnt_d)
+            m = int(mcnt.sum())
+            self.delta_keys, self.delta_leaf = _merge_delta_jit(
+                self.delta_keys, self.delta_leaf, self.delta_dead | move,
+                jnp.zeros((0,), jnp.float64), jnp.zeros((0,), jnp.int32),
+                cap_out=cap)
+            self.delta_dead_count = 0
+        self.delta_dead = jnp.zeros((cap,), bool)
+        self.delta_psum = jnp.zeros((cap + 1,), jnp.int32)
+        self.delta_live -= m
+
+        self.base_n += m
+        cap_new = max(idx.n, _pow2ceil(self.base_n))
+        # Trim the moved array to its finite prefix (pow2-stepped so shapes
+        # stay cache-friendly) before the base merge.
+        mp = min(max(_pow2ceil(max(m, 1)), _MIN_CAP), mk.shape[0])
+        new_base, new_bdead = _merge_base_jit(
+            idx.keys, self.base_dead, mk[:mp], cap_out=cap_new,
+            has_dead=self.base_dead_count > 0)
+
+        # Re-index the rebuilt leaves over the merged base (capacity pads
+        # route to the dump bucket and drop out of every segment op).  The
+        # fit only sees the finite prefix — sliced at a quantized boundary
+        # so the O(n) fit passes skip the capacity padding without
+        # multiplying jit cache entries.
+        buckets = _routed_buckets(idx.root_kind, idx.root, new_base, L,
+                                  self.route_n)
+        sl = min(cap_new, -(-self.base_n // 8192) * 8192)
+        want_reuse = self.reuse_on_rebuild if self.reuse_on_rebuild \
+            is not None else idx.leaf_kind != "linear"
+        fit = rmi_mod.fit_leaves(
+            new_base[:sl], buckets[:sl], L, kind=idx.leaf_kind,
+            pool=self.pool if want_reuse else None, paper_bounds=False,
+            train_steps=self.build_kwargs.get("train_steps", 300),
+            refit_mask=rmask, sorted_buckets=idx.root_kind == "linear")
+
+        # Position accounting for untouched leaves: with a monotone (linear)
+        # root every base key right of a rebuilt leaf shifts by exactly the
+        # number of keys merged left of it — fold the shift into the model
+        # intercepts, bounds stay tight.  A non-monotone (MLP) root only
+        # bounds the shift by m, so widen instead (paper §4's "+1 per
+        # insert", batched).
+        shift = jnp.asarray(np.concatenate([[0.0], np.cumsum(mcnt)[:-1]]))
+        widen = 0.0 if idx.root_kind == "linear" else float(m)
+        leaves, err_lo, err_hi, reused, sim, budget = _compose_rebuild_jit(
+            idx.leaves, idx.err_lo, idx.err_hi, idx.reused_mask,
+            idx.leaf_sim, fit.leaves, fit.err_lo, fit.err_hi, fit.reused,
+            fit.sim, fit.count, rmask, shift, jnp.float64(widen),
+            jnp.float64(self.eps), leaf_kind=idx.leaf_kind)
+        self.index = replace(
+            idx, keys=new_base, leaves=leaves, err_lo=err_lo, err_hi=err_hi,
+            reused_mask=reused, leaf_sim=sim,
+            _iters=None, _packed=None, _f32_exact=None)
+
+        # Incremental clamped depth: update only the touched width rows.
+        if widen:
+            self._win[~rmask_np] += 2.0 * widen
+        err_np = np.asarray(jnp.stack([fit.err_lo, fit.err_hi]))
+        self._win[leaf_ids] = window_widths(
+            err_np[0, leaf_ids], err_np[1, leaf_ids])
+        self.index._iters = clamped_depth(self._win, cap_new)
+
+        self.base_dead = new_bdead
+        self.base_psum = jnp.zeros((cap_new + 1,), jnp.int32) \
+            if self.base_dead_count == 0 else _psum(new_bdead)
+
+        # Lemma 4.1: fresh budgets for the rebuilt leaves (sim = 1 - dist on
+        # a pool hit, 1 on a fresh fit).
+        self.budget[leaf_ids] = np.asarray(budget)[leaf_ids]
+        self.n_inserts[leaf_ids] = 0
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def f32_exact(self) -> bool:
+        """Both tiers round-trip through f32 (kernel-path precondition)."""
+        if self._delta_f32 is None:
+            d32 = self.delta_keys.astype(jnp.float32).astype(jnp.float64)
+            self._delta_f32 = bool(jnp.all(d32 == self.delta_keys))
+        return self.index.f32_exact and self._delta_f32
+
+    def find(self, queries: Array, *, use_kernel: bool | None = None
+             ) -> tuple[Array, Array]:
+        """(found, rank) per query. ``found`` is True iff a live (non-
+        tombstoned) copy of the key exists in either tier; ``rank`` counts
+        live keys < q across both tiers.  Default path selection mirrors
+        ``rmi.lookup``: the fused Pallas kernel on TPU backends with
+        f32-exact tiers, the jitted f64 oracle otherwise."""
+        idx = self.index
+        q = jnp.asarray(queries, jnp.float64)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
+        elif use_kernel and not self.f32_exact:
+            raise ValueError(
+                "use_kernel=True on a key space that is not f32-exact: the "
+                "kernel's f32 search cannot distinguish f32-colliding keys")
+        if use_kernel:
+            from ..kernels import ops as kernel_ops
+            root, mat, vec = idx.packed_tables()
+            found, rank, _, _ = kernel_ops.dynamic_index_lookup(
+                q, root, mat, vec, idx.keys, self.base_dead, self.base_psum,
+                self.delta_keys, self.delta_dead, self.delta_psum,
+                n_leaves=idx.n_leaves, route_n=self.route_n,
+                root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
+                iters=idx.search_iters)
+            return found, rank
+        found, rank, _ = _find_jit(
+            idx.root, idx.leaves, idx.err_lo, idx.err_hi, idx.keys,
+            self.base_dead, self.base_psum, self.delta_keys, self.delta_dead,
+            self.delta_psum, q, root_kind=idx.root_kind,
+            leaf_kind=idx.leaf_kind, n_leaves=idx.n_leaves,
+            route_n=self.route_n, iters=idx.search_iters)
+        return found, rank
+
+    def live_keys(self) -> np.ndarray:
+        """Sorted live keys across both tiers (host numpy; ``find``'s rank
+        indexes into exactly this array)."""
+        bk = np.asarray(self.index.keys)
+        bk = bk[np.isfinite(bk) & ~np.asarray(self.base_dead)]
+        dk = np.asarray(self.delta_keys)
+        dk = dk[np.isfinite(dk) & ~np.asarray(self.delta_dead)]
+        return np.sort(np.concatenate([bk, dk]))
+
+    @property
+    def total_buffered(self) -> int:
+        return int(self.delta_live)
+
+
+# ---------------------------------------------------------------------------
+# The seed implementation (host per-leaf Python buffers), kept verbatim as
+# the benchmark baseline for BENCH_updates.json before/after rows and as a
+# throughput reference.  Known semantic defects (fixed above, retained here
+# for fidelity to the measured baseline): find's rank only counts the routed
+# leaf's buffer; delete never clears buffered entries; _rebuild_leaf resets
+# counters without refitting the leaf model.
+# ---------------------------------------------------------------------------
+@dataclass
+class HostBufferDynamicRMI:
+    """Seed DynamicRMI: per-leaf host insert buffers + tombstone set."""
+    index: rmi_mod.RMIIndex
+    pool: ModelPool | None
+    eps: float
+    buffers: list[np.ndarray] = field(default_factory=list)     # per leaf
     n_inserts: np.ndarray = None                                # per leaf
     budget: np.ndarray = None                                   # Lemma 4.1
     tombstones: set = field(default_factory=set)
@@ -60,7 +665,6 @@ class DynamicRMI:
                    n_inserts=np.zeros(idx.n_leaves, np.int64),
                    budget=budget, build_kwargs=rmi_kwargs)
 
-    # -- mutation ----------------------------------------------------------
     def insert(self, key: float) -> None:
         idx = self.index
         leaf = int(rmi_mod.root_buckets(idx.root_kind, idx.root,
@@ -73,8 +677,6 @@ class DynamicRMI:
             self._rebuild_leaf(leaf)
 
     def insert_batch(self, keys: np.ndarray) -> None:
-        """Bulk insert: route all keys, extend buffers, rebuild leaves whose
-        Lemma 4.1 budget is exhausted (one pass)."""
         idx = self.index
         leaves = np.asarray(rmi_mod.root_buckets(
             idx.root_kind, idx.root, jnp.asarray(keys, jnp.float64),
@@ -88,24 +690,9 @@ class DynamicRMI:
                 self._rebuild_leaf(leaf)
 
     def delete(self, key: float) -> None:
-        """§4: deletions are tombstones resolved by a point query."""
         self.tombstones.add(float(key))
 
     def _rebuild_leaf(self, leaf: int) -> None:
-        """Merge the leaf's buffer into the base array and refit/reuse ONLY
-        that leaf's model (paper: "we only rebuild the model indexing the
-        inserted data point").
-
-        The merged base array shifts global positions right of the leaf;
-        rather than refitting every model (the paper keeps per-model local
-        positions), we rebuild lazily: merge + full refit only when total
-        buffered inserts exceed ``0.5 * n`` (log-structured fallback), else
-        keep the buffer merged into the leaf's *buffer* tier with a fresh
-        leaf-local model. Here — matching the paper's accounting — we refit
-        the single leaf model over (base members + buffer) and absorb the
-        buffer into an enlarged window, resetting the budget from Lemma 4.1
-        with sim = 1 (freshly fitted).
-        """
         self.rebuilds += 1
         self.n_inserts[leaf] = 0
         idx = self.index
@@ -116,16 +703,14 @@ class DynamicRMI:
         self.budget[leaf] = float(insertion_budget(
             jnp.float64(1.0), jnp.float64(self.eps), jnp.float64(n_leaf)))
 
-    # -- queries -----------------------------------------------------------
     def find(self, queries: Array) -> tuple[Array, Array]:
-        """(found, rank) per query, accounting for buffers + tombstones."""
         idx = self.index
         q = jnp.asarray(queries, jnp.float64)
         base_pos = rmi_mod.lookup(idx, q)
         leaves = rmi_mod.root_buckets(idx.root_kind, idx.root, q,
                                       idx.n_leaves, idx.n)
-        base_hit = (base_pos < idx.n) & (idx.keys[jnp.clip(base_pos, 0, idx.n - 1)] == q)
-        # buffer side (host; buffers are tiny by construction)
+        base_hit = (base_pos < idx.n) & \
+            (idx.keys[jnp.clip(base_pos, 0, idx.n - 1)] == q)
         qn = np.asarray(q)
         buf_hit = np.zeros(qn.shape, bool)
         buf_rank = np.zeros(qn.shape, np.int64)

@@ -25,9 +25,13 @@ from repro.core.updates import DynamicRMI
 @dataclass
 class ShardInfo:
     shard_id: int
-    keys: np.ndarray              # sorted sample keys
-    index: object                 # RMIIndex
+    keys: np.ndarray              # sorted *live* sample keys
+    dyn: DynamicRMI               # two-tier dynamic index over the shard
     reuse_fraction: float
+
+    @property
+    def index(self):              # the underlying RMIIndex (base tier)
+        return self.dyn.index
 
 
 @dataclass
@@ -48,27 +52,61 @@ class IndexedDataset:
 
     # -- ingest ------------------------------------------------------------
     def add_shard(self, keys: np.ndarray) -> ShardInfo:
-        """Index a new shard via agile model reuse (the paper's build path)."""
+        """Index a new shard via agile model reuse (the paper's build path);
+        the shard is served by a DynamicRMI so later appends/deletes ride
+        the batched §4 update path instead of re-indexing."""
         keys = np.sort(np.asarray(keys, np.float64))
-        idx = rmi_mod.build_rmi(jnp.asarray(keys), n_leaves=self.n_leaves,
-                                kind=self.pool.kind, pool=self.pool)
-        info = ShardInfo(shard_id=len(self.shards), keys=keys, index=idx,
-                         reuse_fraction=idx.reuse_fraction)
+        dyn = DynamicRMI.build(jnp.asarray(keys), pool=self.pool,
+                               eps=self.eps, n_leaves=self.n_leaves,
+                               kind=self.pool.kind)
+        info = ShardInfo(shard_id=len(self.shards), keys=keys, dyn=dyn,
+                         reuse_fraction=dyn.index.reuse_fraction)
         self.shards.append(info)
         self.boundaries.append(keys[-1])
         return info
 
+    def append_to_shard(self, shard_id: int, keys: np.ndarray) -> None:
+        """Streaming ingest into an existing shard: one batched insert
+        (vectorized route-sort-merge; Lemma 4.1 decides which leaf models
+        rebuild) — the paper's in-place ingestion path.  Appended keys must
+        stay below the next shard's boundary: shard routing is a
+        searchsorted over the (sorted) boundary list, so an overreaching
+        append would silently misroute every later query."""
+        keys = np.asarray(keys, np.float64)
+        if shard_id + 1 < len(self.boundaries) and keys.size and \
+                keys.max() >= self.boundaries[shard_id + 1]:
+            raise ValueError(
+                f"append_to_shard({shard_id}): keys reach into shard "
+                f"{shard_id + 1}'s range (>= {self.boundaries[shard_id + 1]})")
+        info = self.shards[shard_id]
+        info.dyn.insert_batch(keys)
+        info.keys = info.dyn.live_keys()
+        if info.keys.size:
+            self.boundaries[shard_id] = info.keys[-1]
+
+    def delete_samples(self, shard_id: int, keys: np.ndarray) -> None:
+        """Batched tombstone delete of sample keys from a shard.  A fully
+        drained shard keeps its old routing boundary (it simply answers
+        found=False)."""
+        info = self.shards[shard_id]
+        info.dyn.delete_batch(np.asarray(keys, np.float64))
+        info.keys = info.dyn.live_keys()
+        if info.keys.size:
+            self.boundaries[shard_id] = info.keys[-1]
+
     # -- resolve -------------------------------------------------------------
     def locate(self, sample_keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(shard_id, offset) per key — the pipeline's address resolution."""
+        """(shard_id, offset) per key — the pipeline's address resolution.
+        Offsets come from the dynamic find's two-tier live rank, so they
+        stay exact under appended (delta-tier) and tombstoned samples."""
         q = np.asarray(sample_keys, np.float64)
         shard_of = np.searchsorted(np.asarray(self.boundaries), q, side="left")
         shard_of = np.clip(shard_of, 0, len(self.shards) - 1)
         offsets = np.empty(q.shape, np.int64)
         for sid in np.unique(shard_of):
             mask = shard_of == sid
-            offsets[mask] = np.asarray(
-                rmi_mod.lookup(self.shards[sid].index, jnp.asarray(q[mask])))
+            _, rank = self.shards[sid].dyn.find(jnp.asarray(q[mask]))
+            offsets[mask] = np.asarray(rank)
         return shard_of, offsets
 
     @property

@@ -59,13 +59,8 @@ def search_iters(err_lo, err_hi, n_keys: int) -> int:
     full-array window) are excluded — queries routed there are caught by the
     seam verification and re-searched at full depth.
     """
-    elo = np.asarray(err_lo, np.float64)
-    ehi = np.asarray(err_hi, np.float64)
-    w = np.ceil(ehi) - np.floor(elo) + 3.0
-    live = w < n_keys
-    wmax = float(w[live].max()) if live.any() else float(max(n_keys, 2))
-    wmax = min(max(wmax, 2.0), float(max(n_keys, 2)))
-    return int(math.ceil(math.log2(wmax))) + 1
+    from ..core.bounds import clamped_depth, window_widths
+    return clamped_depth(window_widths(err_lo, err_hi), n_keys)
 
 
 def full_iters(n_keys: int) -> int:
@@ -106,6 +101,40 @@ def pack_leaves(w1, b1, w2, b2, err_lo, err_hi):
     return mat, vec
 
 
+def _route_window(root, mat, vec, q, *, n_keys: int, n_leaves: int, lp: int,
+                  route_n: int, root_kind: str, leaf_kind: str):
+    """Stages 1-3 on a query tile (pure jnp on values — shared by the static
+    and dynamic kernel bodies): in-kernel root routing (scaled by
+    ``route_n``, the build-time key count the routing is frozen at),
+    gather-free leaf fetch from the VMEM-resident tables, error-bound
+    window clamped to the *current* key count ``n_keys``."""
+    # ---- stage 1: in-kernel root routing --------------------------------
+    if root_kind == "linear":
+        rpred = root[0, 0] * q + root[3, 0]
+    else:
+        h = jnp.maximum(q[:, None] * root[0, :H] + root[1, :H], 0.0)
+        rpred = jnp.sum(h * root[2, :H], axis=1) + root[3, 0]
+    b = jnp.clip((rpred * (n_leaves / route_n)).astype(jnp.int32),
+                 0, n_leaves - 1)
+
+    # ---- stage 2: gather-free leaf fetch (VMEM-resident tables) ---------
+    row = lambda flat, r: jnp.take(flat, b + r * lp)       # (TQ,) per row
+    if leaf_kind == "linear":
+        pred = row(mat, 0) * q + row(vec, 0)
+    else:
+        pred = row(vec, 0)
+        for k in range(H):
+            hk = jnp.maximum(q * row(mat, k) + row(mat, H + k), 0.0)
+            pred = pred + hk * row(mat, 2 * H + k)
+
+    # ---- stage 3: error-bound window ------------------------------------
+    lo = jnp.clip(jnp.floor(pred + row(vec, 1)), 0, n_keys - 1
+                  ).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + row(vec, 2)) + 1.0, 1, n_keys
+                  ).astype(jnp.int32)
+    return lo, hi
+
+
 def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
                    lo_ref, hi_ref, *,
                    n_keys: int, n_leaves: int, lp: int, tile: int,
@@ -117,34 +146,11 @@ def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
     # (j == 0) and stash the window in VMEM scratch for the key-tile sweep.
     @pl.when(j == 0)
     def _():
-        root = root_ref[...].reshape(ROOT_ROWS, 128)
-
-        # ---- stage 1: in-kernel root routing ----------------------------
-        if root_kind == "linear":
-            rpred = root[0, 0] * q + root[3, 0]
-        else:
-            h = jnp.maximum(q[:, None] * root[0, :H] + root[1, :H], 0.0)
-            rpred = jnp.sum(h * root[2, :H], axis=1) + root[3, 0]
-        b = jnp.clip((rpred * (n_leaves / n_keys)).astype(jnp.int32),
-                     0, n_leaves - 1)
-
-        # ---- stage 2: gather-free leaf fetch (VMEM-resident tables) -----
-        mat = mat_ref[...].reshape(3 * H * lp)
-        vec = vec_ref[...].reshape(8 * lp)
-        row = lambda flat, r: jnp.take(flat, b + r * lp)   # (TQ,) per row
-        if leaf_kind == "linear":
-            pred = row(mat, 0) * q + row(vec, 0)
-        else:
-            pred = row(vec, 0)
-            for k in range(H):
-                hk = jnp.maximum(q * row(mat, k) + row(mat, H + k), 0.0)
-                pred = pred + hk * row(mat, 2 * H + k)
-
-        # ---- stage 3: error-bound window --------------------------------
-        lo = jnp.clip(jnp.floor(pred + row(vec, 1)), 0, n_keys - 1
-                      ).astype(jnp.int32)
-        hi = jnp.clip(jnp.ceil(pred + row(vec, 2)) + 1.0, 1, n_keys
-                      ).astype(jnp.int32)
+        lo, hi = _route_window(
+            root_ref[...].reshape(ROOT_ROWS, 128),
+            mat_ref[...].reshape(3 * H * lp), vec_ref[...].reshape(8 * lp),
+            q, n_keys=n_keys, n_leaves=n_leaves, lp=lp, route_n=n_keys,
+            root_kind=root_kind, leaf_kind=leaf_kind)
         lo_ref[...] = lo.reshape(lo_ref.shape)
         hi_ref[...] = hi.reshape(hi_ref.shape)
         out_ref[...] = hi.reshape(out_ref.shape)
@@ -227,3 +233,153 @@ def lookup_pallas(queries, root, mat, vec, keys, *, n_leaves: int,
         interpret=interpret,
     )(root, mat, vec, pad1(queries), kp)
     return out.reshape(-1)[:Q]
+
+
+# ---------------------------------------------------------------------------
+# Two-tier (base + delta) dynamic lookup: the update subsystem's serving
+# kernel.  One kernel fuses the static kernel's four stages over the base
+# tier with a full-depth probe of the sorted delta tier (the device-resident
+# insert buffer, VMEM-sized by the Lemma 4.1 rebuild policy), so a find
+# under churn is a single kernel call.  The tombstone mask and two-tier rank
+# arithmetic are O(Q) gathers in the jitted ops wrapper
+# (``ops.dynamic_index_lookup``) — the kernel owns everything logarithmic.
+# ---------------------------------------------------------------------------
+def _dynamic_lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, dkeys_ref,
+                           keys_ref, out_ref, dout_ref, lo_ref, hi_ref, *,
+                           n_keys: int, n_leaves: int, lp: int, tile: int,
+                           tile_iters: int, nd: int, d_iters: int,
+                           route_n: int, root_kind: str, leaf_kind: str):
+    j = pl.program_id(1)
+    q = q_ref[...].reshape(TQ)
+
+    @pl.when(j == 0)
+    def _():
+        lo, hi = _route_window(
+            root_ref[...].reshape(ROOT_ROWS, 128),
+            mat_ref[...].reshape(3 * H * lp), vec_ref[...].reshape(8 * lp),
+            q, n_keys=n_keys, n_leaves=n_leaves, lp=lp, route_n=route_n,
+            root_kind=root_kind, leaf_kind=leaf_kind)
+        lo_ref[...] = lo.reshape(lo_ref.shape)
+        hi_ref[...] = hi.reshape(hi_ref.shape)
+        out_ref[...] = hi.reshape(out_ref.shape)
+
+        # ---- delta probe: full-depth search of the VMEM-resident tier ---
+        # (sorted ascending, +inf padded, so the left boundary of a finite
+        # query is always within the live prefix).
+        dk = dkeys_ref[...].reshape(nd)
+        dl = jnp.zeros((TQ,), jnp.int32)
+        dh = jnp.full((TQ,), nd, jnp.int32)
+
+        def dbody(_, lh):
+            l, h2 = lh
+            active = h2 - l > 0
+            mid = (l + h2) // 2
+            kv = jnp.take(dk, jnp.clip(mid, 0, nd - 1))
+            below = kv < q
+            nl = jnp.where(below, mid + 1, l)
+            nh = jnp.where(below, h2, mid)
+            return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+        dl, _ = jax.lax.fori_loop(0, d_iters, dbody, (dl, dh))
+        dout_ref[...] = dl.reshape(dout_ref.shape)
+
+    lo = lo_ref[...].reshape(TQ)
+    hi = hi_ref[...].reshape(TQ)
+
+    # ---- base tier: window-clamped search within key tile j -------------
+    base = j * tile
+    tlo = jnp.clip(lo - base, 0, tile)
+    thi = jnp.clip(hi - base, 0, tile)
+    keys = keys_ref[...].reshape(tile)
+
+    def body(_, lh):
+        l, h2 = lh
+        active = h2 - l > 0
+        mid = (l + h2) // 2
+        kv = jnp.take(keys, jnp.clip(mid, 0, tile - 1))
+        below = kv < q
+        nl = jnp.where(below, mid + 1, l)
+        nh = jnp.where(below, h2, mid)
+        return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+    l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
+    cand = jnp.where(l < thi, base + l, n_keys)
+
+    cur = out_ref[...].reshape(TQ)
+    out_ref[...] = jnp.minimum(cur, cand).reshape(out_ref.shape)
+
+
+def pad_delta(delta_keys, dtype=jnp.float32):
+    """+inf-pad the delta tier to a 128-lane multiple (floor 128)."""
+    nd = delta_keys.shape[0]
+    ndp = max(-(-max(nd, 1) // 128) * 128, 128)
+    return jnp.pad(delta_keys.astype(dtype), (0, ndp - nd),
+                   constant_values=jnp.inf)
+
+
+def dynamic_lookup_pallas(queries, root, mat, vec, keys, delta_keys, *,
+                          n_leaves: int, route_n: int | None = None,
+                          root_kind: str = "linear",
+                          leaf_kind: str = "linear",
+                          iters: int | None = None, tile: int | None = None,
+                          interpret: bool = True):
+    """(base_pos, delta_pos) of ``queries`` against the two tiers.
+
+    base_pos is the window-clamped left boundary in ``keys`` (identical
+    semantics to :func:`lookup_pallas`); delta_pos is the full-depth left
+    boundary in the sorted, +inf-padded ``delta_keys``.  ``route_n`` is the
+    frozen routing scale of the dynamic index (defaults to the current key
+    count, i.e. static-index behaviour).
+    """
+    Q = queries.shape[0]
+    S = keys.shape[0]
+    lp = mat.shape[1]
+    q_pad = -(-Q // TQ) * TQ
+    if route_n is None:
+        route_n = S
+    if tile is None:
+        tile = min(TILE_MAX, _pow2ceil(max(S, 128)))
+    assert tile % 128 == 0, "key tile must be a multiple of 128 lanes"
+    s_pad = -(-S // tile) * tile
+    nk = s_pad // tile
+    if iters is None:
+        iters = full_iters(S)
+    tile_iters = min(iters, full_iters(tile))
+
+    dkp = pad_delta(delta_keys)
+    nd = dkp.shape[0]
+    d_iters = full_iters(nd)
+
+    pad1 = lambda a: jnp.pad(a.astype(jnp.float32), (0, q_pad - Q)) \
+        .reshape(-1, 8, TQ // 8)
+    kp = jnp.pad(keys.astype(jnp.float32), (0, s_pad - S),
+                 constant_values=jnp.inf).reshape(nk, 8, tile // 8)
+
+    kern = functools.partial(
+        _dynamic_lookup_kernel, n_keys=S, n_leaves=n_leaves, lp=lp, tile=tile,
+        tile_iters=tile_iters, nd=nd, d_iters=d_iters, route_n=route_n,
+        root_kind=root_kind, leaf_kind=leaf_kind)
+    out, dout = pl.pallas_call(
+        kern,
+        grid=(q_pad // TQ, nk),
+        in_specs=[
+            pl.BlockSpec((ROOT_ROWS, 128), lambda i, j: (0, 0)),      # root
+            pl.BlockSpec((3 * H, lp), lambda i, j: (0, 0)),           # mat
+            pl.BlockSpec((8, lp), lambda i, j: (0, 0)),               # vec
+            pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),    # q
+            pl.BlockSpec((1, 8, nd // 8), lambda i, j: (0, 0, 0)),    # delta
+            pl.BlockSpec((1, 8, tile // 8), lambda i, j: (j, 0, 0)),  # keys
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32),
+            jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((8, TQ // 8), jnp.int32),   # lo window
+                        pltpu.VMEM((8, TQ // 8), jnp.int32)],  # hi window
+        interpret=interpret,
+    )(root, mat, vec, pad1(queries), dkp.reshape(1, 8, nd // 8), kp)
+    return out.reshape(-1)[:Q], dout.reshape(-1)[:Q]

@@ -107,29 +107,19 @@ def index_lookup(queries, root, mat, vec, keys, *, n_leaves: int,
                              interpret=interpret, seam_budget=seam_budget)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "n_leaves", "root_kind", "leaf_kind", "iters", "tile", "interpret",
-    "seam_budget"))
-def _index_lookup_jit(queries, root, mat, vec, keys, *, n_leaves, root_kind,
-                      leaf_kind, iters, tile, interpret, seam_budget):
-    r = _lookup.lookup_pallas(queries, root, mat, vec, keys,
-                              n_leaves=n_leaves, root_kind=root_kind,
-                              leaf_kind=leaf_kind, iters=iters, tile=tile,
-                              interpret=interpret)
-    # Seam verification in f32 space (kernel semantics). Misses are rare —
-    # boundary queries outside their leaf's window, or queries routed to a
-    # sentinel (empty-leaf) window deeper than the clamped search depth — so
-    # the fallback re-searches only the invalid positions (compacted to a
-    # static ``seam_budget``); the dense full-Q re-search runs only if the
-    # miss count exceeds the budget.
-    kf = keys.astype(jnp.float32)
-    qf = queries.astype(jnp.float32)
-    n = keys.shape[0]
+def _seam_fix(r, kf, qf, seam_budget: int):
+    """Seam verification in f32 space (kernel semantics). Misses are rare —
+    boundary queries outside their leaf's window, or queries routed to a
+    sentinel (empty-leaf) window deeper than the clamped search depth — so
+    the fallback re-searches only the invalid positions (compacted to a
+    static ``seam_budget``); the dense full-Q re-search runs only if the
+    miss count exceeds the budget."""
+    n = kf.shape[0]
     rc = jnp.clip(r, 0, n - 1)
     valid = ((r == 0) | (kf[jnp.clip(r - 1, 0, n - 1)] < qf)) & \
             ((r == n) | (kf[rc] >= qf))
     n_bad = jnp.sum(~valid)
-    budget = min(seam_budget, queries.shape[0])
+    budget = min(seam_budget, qf.shape[0])
 
     def _sparse(_):
         idx = jnp.nonzero(~valid, size=budget, fill_value=0)[0]
@@ -144,3 +134,86 @@ def _index_lookup_jit(queries, root, mat, vec, keys, *, n_leaves, root_kind,
         return jax.lax.cond(n_bad <= budget, _sparse, _dense, None)
 
     return jax.lax.cond(n_bad == 0, lambda _: r, _fix, None)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_leaves", "root_kind", "leaf_kind", "iters", "tile", "interpret",
+    "seam_budget"))
+def _index_lookup_jit(queries, root, mat, vec, keys, *, n_leaves, root_kind,
+                      leaf_kind, iters, tile, interpret, seam_budget):
+    r = _lookup.lookup_pallas(queries, root, mat, vec, keys,
+                              n_leaves=n_leaves, root_kind=root_kind,
+                              leaf_kind=leaf_kind, iters=iters, tile=tile,
+                              interpret=interpret)
+    return _seam_fix(r, keys.astype(jnp.float32),
+                     queries.astype(jnp.float32), seam_budget)
+
+
+def dynamic_index_lookup(queries, root, mat, vec, keys, base_dead, base_psum,
+                         delta_keys, delta_dead, delta_psum, *, n_leaves: int,
+                         route_n: int, root_kind: str = "linear",
+                         leaf_kind: str = "linear", iters: int | None = None,
+                         tile: int | None = None,
+                         interpret: bool | None = None,
+                         seam_budget: int = 1024):
+    """Fused two-tier serving find for the dynamic index: one Pallas kernel
+    (base window search + delta probe), then O(Q) jitted gathers for the
+    tombstone mask and the two-tier live rank.  Zero per-query host Python.
+
+    ``keys``/``delta_keys`` are the sorted base/delta tiers (delta +inf
+    padded to its storage capacity); ``*_dead`` the tombstone bitmaps and
+    ``*_psum`` their exclusive prefix sums (length n+1).  ``route_n`` is the
+    frozen routing scale of ``core.updates.DynamicRMI``.  Returns
+    (found, rank, base_pos, delta_pos): ``found`` is True iff a live copy of
+    the query exists in either tier; ``rank`` counts live keys < q across
+    both tiers.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if iters is None:
+        if isinstance(vec, jax.core.Tracer):
+            iters = _lookup.full_iters(keys.shape[0])
+        else:
+            import numpy as np
+            L = min(n_leaves, vec.shape[1])
+            vec_np = np.asarray(vec)
+            iters = _lookup.search_iters(vec_np[1, :L], vec_np[2, :L],
+                                         keys.shape[0])
+    return _dynamic_lookup_jit(queries, root, mat, vec, keys, base_dead,
+                               base_psum, delta_keys, delta_dead, delta_psum,
+                               n_leaves=n_leaves, route_n=route_n,
+                               root_kind=root_kind, leaf_kind=leaf_kind,
+                               iters=iters, tile=tile, interpret=interpret,
+                               seam_budget=seam_budget)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_leaves", "route_n", "root_kind", "leaf_kind", "iters", "tile",
+    "interpret", "seam_budget"))
+def _dynamic_lookup_jit(queries, root, mat, vec, keys, base_dead, base_psum,
+                        delta_keys, delta_dead, delta_psum, *, n_leaves,
+                        route_n, root_kind, leaf_kind, iters, tile, interpret,
+                        seam_budget):
+    pos, dpos = _lookup.dynamic_lookup_pallas(
+        queries, root, mat, vec, keys, delta_keys, n_leaves=n_leaves,
+        route_n=route_n, root_kind=root_kind, leaf_kind=leaf_kind,
+        iters=iters, tile=tile, interpret=interpret)
+    kf = keys.astype(jnp.float32)
+    qf = queries.astype(jnp.float32)
+    # Base tier: seam-verify the window-clamped positions, then tombstone
+    # mask.  The delta probe ran at full depth over the whole (VMEM-sized)
+    # tier, so its boundary is already exact — no seam pass.  A hit is any
+    # *live* entry in the equal-key run [left, right): count live slots via
+    # the tombstone prefix sums (robust to partially tombstoned duplicate
+    # runs); the right boundaries are one O(Q log n) searchsorted each.
+    pos = _seam_fix(pos, kf, qf, seam_budget)
+    bhi = jnp.searchsorted(kf, qf, side="right").astype(pos.dtype)
+    base_hit = (bhi - pos) > (base_psum[bhi] - base_psum[pos])
+    df = _lookup.pad_delta(delta_keys)
+    nd = df.shape[0]
+    dhi = jnp.searchsorted(df, qf, side="right").astype(dpos.dtype)
+    dpsum = jnp.pad(delta_psum, (0, nd + 1 - delta_psum.shape[0]),
+                    mode="edge")
+    delta_hit = (dhi - dpos) > (dpsum[dhi] - dpsum[dpos])
+    # Live rank across both tiers: positions minus tombstones left of them.
+    rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
+    return base_hit | delta_hit, rank, pos, dpos

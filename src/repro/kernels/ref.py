@@ -42,18 +42,22 @@ def linfit_sums_ref(x: jax.Array, y: jax.Array, buckets: jax.Array,
 
 def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
                root_kind: str = "linear", leaf_kind: str = "linear",
-               iters: int | None = None, tile: int | None = None) -> jax.Array:
+               iters: int | None = None, tile: int | None = None,
+               route_n: int | None = None) -> jax.Array:
     """Oracle for lookup.lookup_pallas: same packed-table contract, same f32
     arithmetic, same per-key-tile clamped search and min-merge — bit-identical
     in interpret mode (including the deliberate non-convergence of queries
     whose window exceeds the static depth; the ops wrapper's verification owns
-    those)."""
+    those).  ``route_n`` is the frozen routing scale of the dynamic kernel
+    (defaults to the key count — static-index behaviour)."""
     from . import lookup as _lk
 
     q = queries.astype(jnp.float32)
     kf = keys.astype(jnp.float32)
     S = kf.shape[0]
     lp = mat.shape[1]
+    if route_n is None:
+        route_n = S
     if tile is None:
         tile = min(_lk.TILE_MAX, _lk._pow2ceil(max(S, 128)))
     if iters is None:
@@ -67,7 +71,8 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
     else:
         h = jnp.maximum(q[:, None] * root[0, :_lk.H] + root[1, :_lk.H], 0.0)
         rpred = jnp.sum(h * root[2, :_lk.H], axis=1) + root[3, 0]
-    b = jnp.clip((rpred * (n_leaves / S)).astype(jnp.int32), 0, n_leaves - 1)
+    b = jnp.clip((rpred * (n_leaves / route_n)).astype(jnp.int32),
+                 0, n_leaves - 1)
 
     matf = mat.reshape(-1)
     vecf = vec.reshape(-1)
@@ -103,3 +108,39 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
         l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
         out = jnp.minimum(out, jnp.where(l < thi, base + l, S))
     return out
+
+
+def dynamic_lookup_ref(queries, root, mat, vec, keys, delta_keys, *,
+                       n_leaves: int, route_n: int | None = None,
+                       root_kind: str = "linear", leaf_kind: str = "linear",
+                       iters: int | None = None,
+                       tile: int | None = None) -> tuple:
+    """Oracle for lookup.dynamic_lookup_pallas: (base_pos, delta_pos).
+    The base tier is exactly :func:`lookup_ref` with the frozen ``route_n``
+    routing scale (one oracle — no drift between the static and dynamic
+    base-search semantics); the delta probe mirrors the kernel's full-depth
+    search of the +inf-padded tier.  Bit-identical in interpret mode."""
+    from . import lookup as _lk
+
+    out = lookup_ref(queries, root, mat, vec, keys, n_leaves=n_leaves,
+                     root_kind=root_kind, leaf_kind=leaf_kind, iters=iters,
+                     tile=tile, route_n=route_n)
+
+    q = queries.astype(jnp.float32)
+    dk = _lk.pad_delta(delta_keys)
+    nd = dk.shape[0]
+    dl = jnp.zeros(q.shape, jnp.int32)
+    dh = jnp.full(q.shape, nd, jnp.int32)
+
+    def dbody(_, lh):
+        l, h2 = lh
+        active = h2 - l > 0
+        mid = (l + h2) // 2
+        kv = jnp.take(dk, jnp.clip(mid, 0, nd - 1))
+        below = kv < q
+        nl = jnp.where(below, mid + 1, l)
+        nh = jnp.where(below, h2, mid)
+        return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+    dl, _ = jax.lax.fori_loop(0, _lk.full_iters(nd), dbody, (dl, dh))
+    return out, dl

@@ -47,6 +47,20 @@ class PagedKVCache:
         self.table[(req, logical_block)] = page
         return page
 
+    def allocate_batch(self, req: int, logical_blocks) -> np.ndarray:
+        """Batched allocation (the serving hot path allocates a request's
+        prefill blocks at once): pops len(blocks) pages in one slice so a
+        learned table mirror sees one insert batch, not per-block calls."""
+        blocks = list(logical_blocks)
+        if not blocks:
+            return np.empty((0,), np.int32)
+        if len(self.free) < len(blocks):
+            raise MemoryError("KV page pool exhausted")
+        pages = self.free[-len(blocks):][::-1]
+        del self.free[-len(blocks):]
+        self.table.update(((req, b), p) for b, p in zip(blocks, pages))
+        return np.asarray(pages, np.int32)
+
     def release(self, req: int) -> None:
         for key in [k for k in self.table if k[0] == req]:
             self.free.append(self.table.pop(key))
@@ -97,3 +111,77 @@ def learned_page_table(table: dict, *, use_kernel: bool | None = None):
         return pages[jnp.clip(pos, 0, pages.shape[0] - 1)]
 
     return lookup, keys, pages
+
+
+_BLOCK_BITS = 22
+
+
+def _pack_keys(req: int, blocks) -> np.ndarray:
+    return np.asarray([(req << _BLOCK_BITS) | int(b) for b in blocks],
+                      np.float64)
+
+
+@dataclass
+class DynamicPageTable:
+    """Learned page table served by the two-tier dynamic index: block
+    allocation/release mutate the index through the *batched* insert/delete
+    API of ``core.updates.DynamicRMI`` instead of rebuilding a static RMI,
+    so the serving control plane exercises the paper's §4 update path.
+
+    The aligned ``_pages`` array is ordered by live key, which is exactly
+    what ``DynamicRMI.find``'s rank indexes — a page lookup is one fused
+    find (base window search + delta probe + tombstone mask) plus a gather.
+    """
+    cache: PagedKVCache
+    dyn: object = None                   # core.updates.DynamicRMI
+    _keys: np.ndarray = None             # sorted live block keys
+    _pages: np.ndarray = None            # aligned physical page ids
+
+    @classmethod
+    def build(cls, cache: PagedKVCache, **rmi_kwargs):
+        """Bootstrap over the cache's current (non-empty) table; subsequent
+        allocations ride the delta tier until Lemma 4.1 triggers merges."""
+        from repro.core.updates import DynamicRMI
+        items = sorted(cache.table.items())
+        if not items:
+            raise ValueError("DynamicPageTable.build needs a primed cache")
+        keys = np.asarray([float((r << _BLOCK_BITS) | b)
+                           for (r, b), _ in items])
+        pages = np.asarray([p for _, p in items], np.int32)
+        rmi_kwargs.setdefault("n_leaves", max(len(items) // 64, 1))
+        dyn = DynamicRMI.build(jnp.asarray(keys), **rmi_kwargs)
+        return cls(cache=cache, dyn=dyn, _keys=keys, _pages=pages)
+
+    def allocate(self, req: int, logical_blocks) -> np.ndarray:
+        """Allocate pages for a request's blocks: one pool pop, one batched
+        index insert, one vectorized merge of the page mapping."""
+        pages = self.cache.allocate_batch(req, logical_blocks)
+        kn = _pack_keys(req, logical_blocks)
+        order = np.argsort(kn)
+        kn, pages_sorted = kn[order], pages[order]
+        self.dyn.insert_batch(kn)
+        pos = np.searchsorted(self._keys, kn)
+        self._keys = np.insert(self._keys, pos, kn)
+        self._pages = np.insert(self._pages, pos, pages_sorted)
+        return pages
+
+    def release(self, req: int) -> None:
+        """Release a request: one batched tombstone delete over its keys."""
+        blocks = [b for (r, b) in self.cache.table if r == req]
+        self.cache.release(req)
+        if not blocks:
+            return
+        kn = _pack_keys(req, sorted(blocks))
+        self.dyn.delete_batch(kn)
+        live = (self._keys.astype(np.int64) >> _BLOCK_BITS) != req
+        self._keys = self._keys[live]
+        self._pages = self._pages[live]
+
+    def lookup(self, query_keys) -> tuple[np.ndarray, np.ndarray]:
+        """(found, page) per flat block key via the fused dynamic find."""
+        found, rank = self.dyn.find(jnp.asarray(query_keys, jnp.float64))
+        found = np.asarray(found)
+        if self._pages.size == 0:       # everything released
+            return found, np.zeros(found.shape, np.int32)
+        rank = np.clip(np.asarray(rank), 0, self._pages.size - 1)
+        return found, self._pages[rank]
