@@ -22,6 +22,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -100,6 +103,10 @@ def bench(sizes: list[int], eps: float = 0.9) -> list[dict]:
                     "jnp-window-clamped": (
                         lambda qq, i=idx: rmrt.lookup(i, qq),
                         idx.search_iters),
+                    "pallas-interpret": (
+                        lambda qq, i=idx: rmrt.lookup(i, qq,
+                                                      use_kernel=True),
+                        idx.search_iters),
                 }
             else:
                 look = {"BTree": btree.lookup, "PGM": pgm.lookup,
@@ -117,17 +124,79 @@ def bench(sizes: list[int], eps: float = 0.9) -> list[dict]:
     return rows
 
 
+def bench_distributed(n: int, n_shards: int) -> list[dict]:
+    """Sharded-service rows on an ``n_shards``-device CPU mesh (kernel vs
+    jnp per-shard path).  Must run in a process whose XLA host-device count
+    is already >= n_shards (see --distributed-worker below)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distributed
+
+    rng = np.random.default_rng(7)
+    keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+    keys = np.unique(keys.astype(np.float32)).astype(np.float64)
+    q = jnp.asarray(rng.choice(keys, Q))
+    mesh = jax.make_mesh((n_shards,), ("data",))
+    idx = distributed.build_sharded(jnp.asarray(keys), mesh, axis="data",
+                                    n_leaves=256)
+    rows = []
+    for path, use_kernel in (("shard-jnp-clamped", False),
+                             ("shard-pallas-interpret", True)):
+        fn = distributed.make_lookup_fn(idx, use_kernel=use_kernel)
+        ns = _time(fn, q)
+        rows.append({"variant": f"Distributed-{n_shards}shard",
+                     "n_keys": int(keys.shape[0]), "path": path,
+                     "ns_per_query": round(ns, 1),
+                     "iters": idx.search_iters})
+        print(f"Distributed-{n_shards}shard n={keys.shape[0]:>8d} "
+              f"{path:20s} {ns:10.0f} ns/q  iters={idx.search_iters}")
+    return rows
+
+
+def _distributed_rows(n_shards: int, n: int) -> list[dict]:
+    """Collect the distributed rows from a subprocess (the host-device
+    count locks at first jax init, so the mesh needs a fresh process)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_shards}")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_lookup",
+         "--distributed-worker", str(n_shards), "--sizes", str(n)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        print(f"distributed bench failed:\n{proc.stderr[-2000:]}",
+              file=sys.stderr)
+        return []
+    try:
+        return json.loads(proc.stdout.splitlines()[-1])
+    except (json.JSONDecodeError, IndexError):
+        print(f"distributed worker emitted no parseable rows:\n"
+              f"{proc.stdout[-2000:]}", file=sys.stderr)
+        return []
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
                     default=[1 << 16, 1 << 18])
+    ap.add_argument("--shards", type=int, default=4,
+                    help="mesh width for the distributed rows (0 disables)")
+    ap.add_argument("--distributed-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: emit rows as JSON
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_lookup.json"))
     args = ap.parse_args()
+    if args.distributed_worker:
+        rows = bench_distributed(max(args.sizes), args.distributed_worker)
+        print(json.dumps(rows))
+        return
     rows = bench(args.sizes)
+    if args.shards:
+        rows += _distributed_rows(args.shards, max(args.sizes))
     meta = {"queries": Q, "repeats": REPEATS, "mode": "interpret/CPU",
             "note": "pallas-interpret rows time the Pallas interpreter "
-                    "(correctness-grade); jnp rows are the XLA serving path."}
+                    "(correctness-grade); jnp rows are the XLA serving "
+                    "path. Distributed rows run the sharded service on a "
+                    "forced-host-device CPU mesh."}
     Path(args.out).write_text(json.dumps({"meta": meta, "rows": rows},
                                          indent=1) + "\n")
     print(f"wrote {args.out} ({len(rows)} rows)")

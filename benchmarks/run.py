@@ -49,7 +49,39 @@ def kernel_rows(n: int = 200_000, q: int = 16_384):
     ]
 
 
-SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "kernels"]
+def rmrt_rows(n: int = 200_000, q: int = 16_384):
+    """RMRT serving paths: fused Pallas kernel (in-kernel fixed-depth
+    descent + clamped search, interpret mode on CPU) vs the clamped jnp
+    masked-descent path."""
+    import time as _time
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    import repro  # noqa: F401
+    from repro.core import rmrt
+
+    rng = np.random.default_rng(0)
+    keys = np.unique(np.sort(rng.lognormal(0, 1, n))
+                     .astype(np.float32)).astype(np.float64)
+    qs = jnp.asarray(rng.choice(keys, q))
+    idx = rmrt.build_rmrt(jnp.asarray(keys), leaf_cap=4096, fanout=64,
+                          kind="linear")
+    rows = []
+    for path, kw in (("kernel_rmrt_fused", dict(use_kernel=True)),
+                     ("rmrt_jnp_clamped", dict())):
+        jax.block_until_ready(rmrt.lookup(idx, qs, **kw))
+        t0 = _time.time()
+        jax.block_until_ready(rmrt.lookup(idx, qs, **kw))
+        dt = _time.time() - t0
+        rows.append({"name": path, "us_per_call": dt / q * 1e6,
+                     "derived": f"{dt/q*1e9:.0f}ns/q n={n} "
+                                f"depth={idx.depth} "
+                                f"iters={idx.search_iters}"})
+    return rows
+
+
+SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "kernels",
+          "rmrt"]
 
 
 def main() -> None:
@@ -83,6 +115,8 @@ def main() -> None:
         rows += bench_updates.quick_rows(**({"n": args.n} if args.n else {}))
     if "kernels" in only:
         rows += kernel_rows(**({"n": args.n} if args.n else {}))
+    if "rmrt" in only:
+        rows += rmrt_rows(**({"n": args.n} if args.n else {}))
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -47,10 +47,50 @@ class ShardedIndex:
     err_hi: Array
     n_leaves: int
     search_iters: int | None = None   # error-window depth across all shards
+    # Stacked packed kernel tables (lookup.pack_root / pack_leaves per
+    # shard) so the per-shard answer can dispatch through the fused Pallas
+    # kernel under shard_map.  Packed lazily on the first kernel-path
+    # make_lookup_fn — jnp-path consumers (CPU meshes, the 256-device
+    # dry-run) never pay for them.
+    kroot: Array = None      # (n_shards, ROOT_ROWS, 128)
+    kmat: Array = None       # (n_shards, 3H, Lp)
+    kvec: Array = None       # (n_shards, 8, Lp)
+    _f32_exact: bool | None = None
 
     @property
     def n_shards(self) -> int:
         return int(self.keys.shape[0])
+
+    @property
+    def f32_exact(self) -> bool:
+        """Every shard's keys round-trip through f32 (kernel-path
+        precondition; the +inf shard padding round-trips trivially).
+        Lazily computed — one reduction over the stacked shards."""
+        if self._f32_exact is None:
+            k32 = self.keys.astype(jnp.float32).astype(jnp.float64)
+            self._f32_exact = bool(jnp.all(k32 == self.keys))
+        return self._f32_exact
+
+    def packed_tables(self) -> tuple:
+        """(kroot, kmat, kvec) stacked per-shard kernel tables, packed on
+        first use and cached on the dataclass."""
+        if self.kroot is None:
+            from ..kernels import lookup as _lk
+            kr, km, kv = [], [], []
+            for s in range(self.n_shards):
+                root_s = jax.tree.map(lambda a: a[s], self.root)
+                leaves_s = jax.tree.map(lambda a: a[s], self.leaves)
+                kr.append(_lk.pack_root("linear", root_s))
+                w1, b1, w2, b2 = rmi_mod._leaf_table_arrays(
+                    "linear", leaves_s, self.n_leaves)
+                m, v = _lk.pack_leaves(w1, b1, w2, b2, self.err_lo[s],
+                                       self.err_hi[s])
+                km.append(m)
+                kv.append(v)
+            self.kroot = jnp.stack(kr)
+            self.kmat = jnp.stack(km)
+            self.kvec = jnp.stack(kv)
+        return self.kroot, self.kmat, self.kvec
 
 
 def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
@@ -60,7 +100,7 @@ def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
     keys = jnp.asarray(keys, jnp.float64)
     n = keys.shape[0]
     cap = -(-n // n_shards)
-    splits = keys[jnp.arange(1, n_shards) * cap - 1]
+    splits = keys[jnp.minimum(jnp.arange(1, n_shards) * cap, n) - 1]
     shards, valid = [], []
     roots, leaves, elos, ehis = [], [], [], []
     for s in range(n_shards):
@@ -86,7 +126,10 @@ def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
         search_iters=search_iters(err_lo_all, err_hi_all, cap))
 
 
-def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None):
+def make_lookup_fn(index: ShardedIndex, *,
+                   capacity_factor: float | None = None,
+                   use_kernel: bool | None = None,
+                   interpret: bool | None = None):
     """Returns a jitted distributed lookup: (q_local sharded on axis) ->
     global ranks, same sharding.
 
@@ -95,7 +138,16 @@ def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None)
     (paper-faithful, never drops; all_to_all payload ~ n_shards x B).
     A factor like 2.0 shrinks the exchange by n_shards/2 at the cost of
     dropping queries beyond the budget (returned rank -1, retried by the
-    caller) — EXPERIMENTS.md §Perf index-service iteration."""
+    caller) — EXPERIMENTS.md §Perf index-service iteration.
+
+    ``use_kernel`` routes the per-shard answer through the fused Pallas
+    kernel (``kernels.ops.index_lookup``: in-kernel routing + clamped tiled
+    search + sparse seam verification) instead of the clamped jnp path —
+    the same path-selection contract as ``rmi.lookup``: default on TPU
+    backends when every shard's keys are f32-exact, explicit True on a
+    non-f32-exact index raises (the kernel's f32 seam verification cannot
+    detect f32 key collisions).  ``interpret`` forwards to the kernel
+    (None = auto: interpreter off-TPU)."""
     mesh, axis = index.mesh, index.axis
     n_shards = index.n_shards
     n_leaves = index.n_leaves
@@ -103,15 +155,40 @@ def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None)
 
     iters = index.search_iters      # static across shards; closure-captured
 
-    def local_lookup(keys, root, leaves, elo, ehi, q):
-        b = rmi_mod.root_buckets("linear", root, q, n_leaves, cap)
-        p = jax.tree.map(lambda a: a[b], leaves)
-        pred = rmi_mod.models.linear_predict(p, q)
-        lo = jnp.clip(jnp.floor(pred + elo[b]), 0, cap - 1).astype(jnp.int32)
-        hi = jnp.clip(jnp.ceil(pred + ehi[b]) + 1, 1, cap).astype(jnp.int32)
-        return rmi_mod.verified_search(keys, q, lo, hi, iters=iters)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
+    elif use_kernel and not index.f32_exact:
+        raise ValueError(
+            "use_kernel=True on a sharded key space that is not f32-exact: "
+            "the kernel's f32 seam verification cannot detect f32 key "
+            "collisions, so wrong positions would be returned silently")
 
-    def shard_fn(splits, keys, valid, root, leaves, elo, ehi, q_local):
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+
+        def local_lookup(tables, keys, q):
+            kroot, kmat, kvec = tables
+            return kernel_ops.index_lookup(
+                q, kroot, kmat, kvec, keys, n_leaves=n_leaves,
+                root_kind="linear", leaf_kind="linear", iters=iters,
+                interpret=interpret)
+
+        tables = index.packed_tables()
+    else:
+        def local_lookup(tables, keys, q):
+            root, leaves, elo, ehi = tables
+            b = rmi_mod.root_buckets("linear", root, q, n_leaves, cap)
+            p = jax.tree.map(lambda a: a[b], leaves)
+            pred = rmi_mod.models.linear_predict(p, q)
+            lo = jnp.clip(jnp.floor(pred + elo[b]), 0,
+                          cap - 1).astype(jnp.int32)
+            hi = jnp.clip(jnp.ceil(pred + ehi[b]) + 1, 1,
+                          cap).astype(jnp.int32)
+            return rmi_mod.verified_search(keys, q, lo, hi, iters=iters)
+
+        tables = (index.root, index.leaves, index.err_lo, index.err_hi)
+
+    def shard_fn(splits, keys, valid, tables, q_local):
         """Runs per shard. q_local: (B_local,). All index args are the
         *local* shard's slice (shard_map strips the leading shard dim)."""
         B = q_local.shape[0]
@@ -131,11 +208,18 @@ def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None)
         # exchange: row d of `send` goes to shard d
         recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
         rpos = jax.lax.all_to_all(origin_pos, axis, 0, 0, tiled=False)
-        # answer locally (padded inf queries return `valid` = rank past end)
+        # answer locally.  +inf exchange-padding slots are masked to a
+        # member query first and answered `valid` (= rank past end)
+        # directly: on an inf-padded (ragged) shard an inf query always
+        # fails the left-boundary seam check, and a batch of them would
+        # blow the sparse seam budget and demote every lookup to the dense
+        # re-search fallback (both the kernel's _seam_fix and the jnp
+        # path's verified_search).
         rq = recv.reshape(-1)
-        ranks = local_lookup(keys[0], jax.tree.map(lambda a: a[0], root),
-                             jax.tree.map(lambda a: a[0], leaves),
-                             elo[0], ehi[0], rq)
+        live = rq < jnp.inf                  # excludes +inf pads and NaN
+        ranks = local_lookup(jax.tree.map(lambda a: a[0], tables), keys[0],
+                             jnp.where(live, rq, keys[0][0]))
+        ranks = jnp.where(live, ranks, valid[0])
         ranks = jnp.minimum(ranks, valid[0]) + me * cap   # globalize
         ranks = ranks.reshape(n_shards, C)
         # return to origin
@@ -151,21 +235,14 @@ def make_lookup_fn(index: ShardedIndex, *, capacity_factor: float | None = None)
         return fill.at[
             jnp.where(flat_pos >= 0, flat_pos, B)].set(flat_val, mode="drop")
 
-    specs = dict(
-        splits=P(), keys=P(axis), valid=P(axis), root=P(axis),
-        leaves=P(axis), elo=P(axis), ehi=P(axis), q=P(axis))
-
     fn = jax.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(specs["splits"], specs["keys"], specs["valid"],
-                  specs["root"], specs["leaves"], specs["elo"], specs["ehi"],
-                  specs["q"]),
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis), check_vma=True)
 
     @jax.jit
     def lookup(q_global: Array) -> Array:
-        return fn(index.splits, index.keys, index.valid, index.root,
-                  index.leaves, index.err_lo, index.err_hi, q_global)
+        return fn(index.splits, index.keys, index.valid, tables, q_global)
 
     return lookup
 

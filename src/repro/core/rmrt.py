@@ -49,6 +49,8 @@ class RMRTIndex:
     leaf_cap: int
     depth: int
     _iters: int | None = None        # cached error-window search depth
+    _packed: tuple | None = None     # (mat, vec) kernel node tables
+    _f32_exact: bool | None = None   # keys round-trip through f32
 
     @property
     def n(self) -> int:
@@ -69,6 +71,24 @@ class RMRTIndex:
     @property
     def reuse_fraction(self) -> float:
         return float(jnp.mean(self.reused_mask.astype(jnp.float64)))
+
+    @property
+    def f32_exact(self) -> bool:
+        """True when every key round-trips through f32 — the precondition
+        for the Pallas kernel path (same guard as RMIIndex.f32_exact)."""
+        if self._f32_exact is None:
+            k32 = self.keys.astype(jnp.float32).astype(jnp.float64)
+            self._f32_exact = bool(jnp.all(k32 == self.keys))
+        return self._f32_exact
+
+    def packed_tables(self) -> tuple:
+        """(mat, vec) VMEM-layout node tables for the fused RMRT kernel."""
+        if self._packed is None:
+            from ..kernels import lookup as _lk
+            self._packed = _lk.pack_rmrt(
+                self.kind, self.params, self.is_leaf, self.child_base,
+                self.y_start, self.y_end, self.err_lo, self.err_hi)
+        return self._packed
 
 
 def _fit_level(keys, slots, n_slots, kind, pool, train_steps, seed,
@@ -212,8 +232,29 @@ def build_rmrt(
 # ---------------------------------------------------------------------------
 # Lookup.
 # ---------------------------------------------------------------------------
-def lookup(index: RMRTIndex, queries: Array, *,
+def lookup(index: RMRTIndex, queries: Array, *, use_kernel: bool | None = None,
            clamp_iters: bool = True) -> Array:
+    """Serving lookup.  ``use_kernel`` selects the fused Pallas kernel —
+    descent AND clamped search in one kernel (default: on TPU backends, and
+    only for f32-exact key spaces; the masked-descent jnp path below is the
+    CPU fast path, the kernel's f64 reference, and the f64 fallback).  Same
+    path-selection semantics as ``rmi.lookup``."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
+    elif use_kernel and not index.f32_exact:
+        raise ValueError(
+            "use_kernel=True on a key space that is not f32-exact: the "
+            "kernel's f32 seam verification cannot detect f32 key "
+            "collisions, so wrong positions would be returned silently")
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+        from ..kernels.lookup import full_iters
+        iters = index.search_iters if clamp_iters else full_iters(index.n)
+        mat, vec = index.packed_tables()
+        return kernel_ops.rmrt_lookup(
+            jnp.asarray(queries, jnp.float64), mat, vec, index.keys,
+            fanout=index.fanout, depth=index.depth, kind=index.kind,
+            iters=iters)
     return _rmrt_lookup(index.kind, index.params, index.is_leaf,
                         index.child_base, index.y_start, index.y_end,
                         index.err_lo, index.err_hi, index.keys,

@@ -59,6 +59,7 @@ from .reuse import ModelPool
 Array = jax.Array
 
 _MIN_CAP = 128      # delta-tier floor: one kernel lane tile
+_COMPACT_RATIO = 0.25   # default delta-tier dead fraction before compaction
 
 
 def _pow2ceil(v: int) -> int:
@@ -343,6 +344,14 @@ class DynamicRMI:
     delta_live: int = 0                 # live (finite & not dead) entries
     delta_dead_count: int = 0           # tombstoned delta entries (gates
                                         # the compaction-free merge path)
+    # Dead-ratio-triggered delta compaction (ROADMAP "delta-tier churn
+    # under sustained deletes"): tombstones are purged opportunistically by
+    # the next insert/rebuild merge, but a delete-only workload has no such
+    # merge — when the dead fraction of the tier exceeds this ratio,
+    # delete_batch compacts the tier in place (one cumsum compaction).
+    # None disables the trigger.
+    compact_dead_ratio: float | None = _COMPACT_RATIO
+    delta_compactions: int = 0          # compaction passes run
     # base tier bookkeeping (keys live inside ``index``, +inf padded to
     # pow2 capacity so rebuild merges don't retrace every jit consumer)
     base_n: int = 0                     # finite base keys (incl tombstoned)
@@ -367,7 +376,9 @@ class DynamicRMI:
 
     @classmethod
     def build(cls, keys, pool=None, eps: float = 0.9,
-              reuse_on_rebuild: bool | None = None, **rmi_kwargs):
+              reuse_on_rebuild: bool | None = None,
+              compact_dead_ratio: float | None = _COMPACT_RATIO,
+              **rmi_kwargs):
         idx = rmi_mod.build_rmi(keys, pool=pool, **rmi_kwargs)
         n = idx.n
         counts = np.bincount(
@@ -386,6 +397,7 @@ class DynamicRMI:
         idx = replace(idx, keys=padded, _f32_exact=None, _packed=None)
         d = cls(index=idx, pool=pool, eps=eps, route_n=n, base_n=n,
                 reuse_on_rebuild=reuse_on_rebuild,
+                compact_dead_ratio=compact_dead_ratio,
                 delta_keys=jnp.full((_MIN_CAP,), jnp.inf, jnp.float64),
                 delta_leaf=jnp.full((_MIN_CAP,), -1, jnp.int32),
                 delta_dead=jnp.zeros((_MIN_CAP,), bool),
@@ -456,11 +468,32 @@ class DynamicRMI:
             self.index.keys, self.base_dead, self.delta_keys,
             self.delta_dead, q)
         self.base_psum = _psum(self.base_dead)
-        self.delta_psum = _psum(self.delta_dead)
         self.delta_live -= int(ndel)
         self.delta_dead_count += int(ndel)
         self.base_dead_count += int(nb)
         self.deleted += int(nb) + int(ndel)
+        if (self.compact_dead_ratio is not None and self.delta_dead_count
+                and self.delta_dead_count >= self.compact_dead_ratio
+                * (self.delta_live + self.delta_dead_count)):
+            self._compact_delta()       # resets the delta psum to zeros
+        else:
+            self.delta_psum = _psum(self.delta_dead)
+
+    def _compact_delta(self) -> None:
+        """Purge tombstoned delta entries in place (one cumsum compaction +
+        re-pad — the same pass insert/rebuild merges run, without merging
+        anything).  Live entries, their order, and both tiers' live ranks
+        are unchanged; only the dead fraction drops to zero."""
+        cap = self.delta_keys.shape[0]
+        self.delta_keys, self.delta_leaf = _merge_delta_jit(
+            self.delta_keys, self.delta_leaf, self.delta_dead,
+            jnp.zeros((0,), jnp.float64), jnp.zeros((0,), jnp.int32),
+            cap_out=cap)
+        self.delta_dead = jnp.zeros((cap,), bool)
+        self.delta_psum = jnp.zeros((cap + 1,), jnp.int32)
+        self.delta_dead_count = 0
+        self.delta_compactions += 1
+        self._delta_f32 = None          # tier contents changed
 
     # -- rebuild -----------------------------------------------------------
     def _rebuild_leaves(self, leaf_ids: np.ndarray) -> None:

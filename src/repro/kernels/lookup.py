@@ -28,6 +28,25 @@ Leaf tables are packed lane-major — (3H, Lp) params, (8, Lp) scalars, leaves
 on the 128-lane axis — so per-query fetch is a VMEM dynamic gather along
 lanes, the same primitive as the key probe.
 
+RMRT node-table packing (``pack_rmrt``): the flat level-synchronous node
+arrays of ``core.rmrt.RMRTIndex`` pack into the same lane-major layout,
+nodes on the 128-lane axis padded to Np = 128-multiple:
+
+  mat (3H, Np) f32   rows [0, H)   w1 (linear models ride in w1[:, 0])
+                     rows [H, 2H)  b1
+                     rows [2H, 3H) w2
+  vec (8, Np)  f32   row 0 b2 / b          row 4 y_end
+                     row 1 err_lo          row 5 child_base (int, f32-exact:
+                     row 2 err_hi                 node count << 2^24)
+                     row 3 y_start         row 6 is_leaf (0.0 / 1.0)
+
+so the fixed-depth masked descent (``_rmrt_route_window``) is a per-level
+VMEM lane gather + predict + re-bucket, entirely in-kernel — no XLA
+pre-routing pass.  Internal nodes carry err rows of 0 and leaves carry
+child_base -1; neither is ever consumed on the other branch of the
+``is_leaf`` select.  Padded lanes are unreachable (descent starts at node 0
+and child ids stay < num_nodes).
+
 Semantics match core.rmi.bounded_search on the same window/iters; the seam
 verification (sparse re-check of the rare misses) stays in the ops wrapper,
 keeping the kernel single-pass.
@@ -135,30 +154,14 @@ def _route_window(root, mat, vec, q, *, n_keys: int, n_leaves: int, lp: int,
     return lo, hi
 
 
-def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
-                   lo_ref, hi_ref, *,
-                   n_keys: int, n_leaves: int, lp: int, tile: int,
-                   tile_iters: int, root_kind: str, leaf_kind: str):
-    j = pl.program_id(1)
-    q = q_ref[...].reshape(TQ)
-
-    # Stages 1-3 depend only on the query tile: run them once per query tile
-    # (j == 0) and stash the window in VMEM scratch for the key-tile sweep.
-    @pl.when(j == 0)
-    def _():
-        lo, hi = _route_window(
-            root_ref[...].reshape(ROOT_ROWS, 128),
-            mat_ref[...].reshape(3 * H * lp), vec_ref[...].reshape(8 * lp),
-            q, n_keys=n_keys, n_leaves=n_leaves, lp=lp, route_n=n_keys,
-            root_kind=root_kind, leaf_kind=leaf_kind)
-        lo_ref[...] = lo.reshape(lo_ref.shape)
-        hi_ref[...] = hi.reshape(hi_ref.shape)
-        out_ref[...] = hi.reshape(out_ref.shape)
-
+def _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j, *,
+                       n_keys: int, tile: int, tile_iters: int):
+    """Stage 4, shared by every lookup kernel: window-clamped branchless
+    search of query tile ``q`` restricted to key tile ``j``, min-merged into
+    the revisited output block (left boundaries compose across tiles because
+    positions increase with j)."""
     lo = lo_ref[...].reshape(TQ)
     hi = hi_ref[...].reshape(TQ)
-
-    # ---- stage 4: window-clamped search within key tile j ---------------
     base = j * tile
     tlo = jnp.clip(lo - base, 0, tile)
     thi = jnp.clip(hi - base, 0, tile)
@@ -179,6 +182,30 @@ def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
 
     cur = out_ref[...].reshape(TQ)
     out_ref[...] = jnp.minimum(cur, cand).reshape(out_ref.shape)
+
+
+def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
+                   lo_ref, hi_ref, *,
+                   n_keys: int, n_leaves: int, lp: int, tile: int,
+                   tile_iters: int, root_kind: str, leaf_kind: str):
+    j = pl.program_id(1)
+    q = q_ref[...].reshape(TQ)
+
+    # Stages 1-3 depend only on the query tile: run them once per query tile
+    # (j == 0) and stash the window in VMEM scratch for the key-tile sweep.
+    @pl.when(j == 0)
+    def _():
+        lo, hi = _route_window(
+            root_ref[...].reshape(ROOT_ROWS, 128),
+            mat_ref[...].reshape(3 * H * lp), vec_ref[...].reshape(8 * lp),
+            q, n_keys=n_keys, n_leaves=n_leaves, lp=lp, route_n=n_keys,
+            root_kind=root_kind, leaf_kind=leaf_kind)
+        lo_ref[...] = lo.reshape(lo_ref.shape)
+        hi_ref[...] = hi.reshape(hi_ref.shape)
+        out_ref[...] = hi.reshape(out_ref.shape)
+
+    _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j,
+                       n_keys=n_keys, tile=tile, tile_iters=tile_iters)
 
 
 def _pow2ceil(v: int) -> int:
@@ -283,30 +310,9 @@ def _dynamic_lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, dkeys_ref,
         dl, _ = jax.lax.fori_loop(0, d_iters, dbody, (dl, dh))
         dout_ref[...] = dl.reshape(dout_ref.shape)
 
-    lo = lo_ref[...].reshape(TQ)
-    hi = hi_ref[...].reshape(TQ)
-
     # ---- base tier: window-clamped search within key tile j -------------
-    base = j * tile
-    tlo = jnp.clip(lo - base, 0, tile)
-    thi = jnp.clip(hi - base, 0, tile)
-    keys = keys_ref[...].reshape(tile)
-
-    def body(_, lh):
-        l, h2 = lh
-        active = h2 - l > 0
-        mid = (l + h2) // 2
-        kv = jnp.take(keys, jnp.clip(mid, 0, tile - 1))
-        below = kv < q
-        nl = jnp.where(below, mid + 1, l)
-        nh = jnp.where(below, h2, mid)
-        return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
-
-    l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
-    cand = jnp.where(l < thi, base + l, n_keys)
-
-    cur = out_ref[...].reshape(TQ)
-    out_ref[...] = jnp.minimum(cur, cand).reshape(out_ref.shape)
+    _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j,
+                       n_keys=n_keys, tile=tile, tile_iters=tile_iters)
 
 
 def pad_delta(delta_keys, dtype=jnp.float32):
@@ -383,3 +389,146 @@ def dynamic_lookup_pallas(queries, root, mat, vec, keys, delta_keys, *,
         interpret=interpret,
     )(root, mat, vec, pad1(queries), dkp.reshape(1, 8, nd // 8), kp)
     return out.reshape(-1)[:Q], dout.reshape(-1)[:Q]
+
+
+# ---------------------------------------------------------------------------
+# RMRT: in-kernel fixed-depth masked descent over the flat node tables (see
+# the module docstring for the pack_rmrt layout), then the same clamped
+# tiled search as the static kernel.  Replaces the XLA masked-descent loop
+# that used to pre-route queries before the kernel.
+# ---------------------------------------------------------------------------
+def pack_rmrt(kind: str, params, is_leaf, child_base, y_start, y_end,
+              err_lo, err_hi):
+    """Lane-major RMRT node tables: (3H, Np) params + (8, Np) scalars.
+
+    ``params`` are the stacked per-node models (LinearParams or MLPParams,
+    leading dim = num_nodes); linear models ride in w1[:, 0] / b2 exactly
+    like the RMI leaf tables.  Row layout documented in the module
+    docstring.  ``child_base`` must stay f32-exact (node count << 2^24).
+    """
+    N = int(is_leaf.shape[0])
+    if N >= 1 << 24:        # raise (not assert): must survive python -O
+        raise ValueError(
+            f"RMRT node count {N} exceeds f32 integer resolution (2^24): "
+            "child_base pointers in the packed f32 tables would be rounded "
+            "silently — raise leaf_cap or shard the tree")
+    if kind == "linear":
+        w1 = jnp.zeros((N, H), jnp.float32).at[:, 0].set(
+            params.a.astype(jnp.float32))
+        zeros = jnp.zeros((N, H), jnp.float32)
+        b1, w2, b2 = zeros, zeros, params.b
+    else:
+        w1, b1, w2, b2 = params.w1, params.b1, params.w2, params.b2
+    npad = -(-N // 128) * 128
+    padT = lambda a: jnp.pad(a.astype(jnp.float32).T, ((0, 0), (0, npad - N)))
+    mat = jnp.concatenate([padT(w1), padT(b1), padT(w2)], axis=0)
+    vec = jnp.zeros((8, npad), jnp.float32)
+    for r, a in ((0, b2), (1, err_lo), (2, err_hi), (3, y_start),
+                 (4, y_end), (5, child_base), (6, is_leaf)):
+        vec = vec.at[r, :N].set(a.astype(jnp.float32))
+    return mat, vec
+
+
+def _rmrt_route_window(mat, vec, q, *, n_keys: int, npad: int, fanout: int,
+                       depth: int, kind: str):
+    """Stages 1-3 of the RMRT lookup (pure jnp on values — shared by the
+    kernel body; the oracle in ``kernels.ref`` reimplements it): depth-D
+    masked descent over the VMEM-resident node tables, then the leaf's
+    error-bound window clamped to ``n_keys``."""
+    row = lambda flat, r, idx: jnp.take(flat, idx + r * npad)
+
+    def predict(node):
+        if kind == "linear":
+            return row(mat, 0, node) * q + row(vec, 0, node)
+        pred = row(vec, 0, node)
+        for k in range(H):
+            hk = jnp.maximum(q * row(mat, k, node) + row(mat, H + k, node),
+                             0.0)
+            pred = pred + hk * row(mat, 2 * H + k, node)
+        return pred
+
+    def body(_, node):
+        pred = predict(node)
+        ys = row(vec, 3, node)
+        span = row(vec, 4, node) - ys
+        child = jnp.clip(((pred - ys) * fanout / span).astype(jnp.int32),
+                         0, fanout - 1)
+        nxt = row(vec, 5, node).astype(jnp.int32) + child
+        return jnp.where(row(vec, 6, node) > 0.5, node, nxt)
+
+    node = jax.lax.fori_loop(0, depth, body,
+                             jnp.zeros(q.shape, jnp.int32))
+    pred = predict(node)
+    lo = jnp.clip(jnp.floor(pred + row(vec, 1, node)), 0, n_keys - 1
+                  ).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + row(vec, 2, node)) + 1.0, 1, n_keys
+                  ).astype(jnp.int32)
+    return lo, hi
+
+
+def _rmrt_lookup_kernel(mat_ref, vec_ref, q_ref, keys_ref, out_ref,
+                        lo_ref, hi_ref, *,
+                        n_keys: int, npad: int, fanout: int, depth: int,
+                        tile: int, tile_iters: int, kind: str):
+    j = pl.program_id(1)
+    q = q_ref[...].reshape(TQ)
+
+    @pl.when(j == 0)
+    def _():
+        lo, hi = _rmrt_route_window(
+            mat_ref[...].reshape(3 * H * npad), vec_ref[...].reshape(8 * npad),
+            q, n_keys=n_keys, npad=npad, fanout=fanout, depth=depth,
+            kind=kind)
+        lo_ref[...] = lo.reshape(lo_ref.shape)
+        hi_ref[...] = hi.reshape(hi_ref.shape)
+        out_ref[...] = hi.reshape(out_ref.shape)
+
+    _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j,
+                       n_keys=n_keys, tile=tile, tile_iters=tile_iters)
+
+
+def rmrt_lookup_pallas(queries, mat, vec, keys, *, fanout: int, depth: int,
+                       kind: str = "linear", iters: int | None = None,
+                       tile: int | None = None, interpret: bool = True):
+    """Positions (left boundary, window-clamped) of ``queries`` in ``keys``
+    under the RMRT: the whole depth-``depth`` descent runs in-kernel over
+    the packed node tables (``pack_rmrt``), then the error-window-clamped
+    tiled search — one kernel, no XLA pre-routing.
+    """
+    Q = queries.shape[0]
+    S = keys.shape[0]
+    npad = mat.shape[1]
+    q_pad = -(-Q // TQ) * TQ
+    if tile is None:
+        tile = min(TILE_MAX, _pow2ceil(max(S, 128)))
+    assert tile % 128 == 0, "key tile must be a multiple of 128 lanes"
+    s_pad = -(-S // tile) * tile
+    nk = s_pad // tile
+    if iters is None:
+        iters = full_iters(S)
+    tile_iters = min(iters, full_iters(tile))
+
+    pad1 = lambda a: jnp.pad(a.astype(jnp.float32), (0, q_pad - Q)) \
+        .reshape(-1, 8, TQ // 8)
+    kp = jnp.pad(keys.astype(jnp.float32), (0, s_pad - S),
+                 constant_values=jnp.inf).reshape(nk, 8, tile // 8)
+
+    kern = functools.partial(
+        _rmrt_lookup_kernel, n_keys=S, npad=npad, fanout=fanout, depth=depth,
+        tile=tile, tile_iters=tile_iters, kind=kind)
+    out = pl.pallas_call(
+        kern,
+        grid=(q_pad // TQ, nk),
+        in_specs=[
+            pl.BlockSpec((3 * H, npad), lambda i, j: (0, 0)),         # mat
+            pl.BlockSpec((8, npad), lambda i, j: (0, 0)),             # vec
+            pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),    # q
+            pl.BlockSpec((1, 8, tile // 8), lambda i, j: (j, 0, 0)),  # keys
+        ],
+        out_specs=pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((8, TQ // 8), jnp.int32),   # lo window
+                        pltpu.VMEM((8, TQ // 8), jnp.int32)],  # hi window
+        interpret=interpret,
+    )(mat, vec, pad1(queries), kp)
+    return out.reshape(-1)[:Q]

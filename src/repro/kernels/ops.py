@@ -149,6 +149,45 @@ def _index_lookup_jit(queries, root, mat, vec, keys, *, n_leaves, root_kind,
                      queries.astype(jnp.float32), seam_budget)
 
 
+def rmrt_lookup(queries, mat, vec, keys, *, fanout: int, depth: int,
+                kind: str = "linear", iters: int | None = None,
+                tile: int | None = None, interpret: bool | None = None,
+                seam_budget: int = 1024):
+    """Fused RMRT serving lookup: in-kernel fixed-depth descent over the
+    packed node tables (lookup.pack_rmrt) + error-window-clamped tiled
+    search, with the same XLA-side sparse seam verification as
+    :func:`index_lookup`.
+
+    ``iters`` is the static error-window search depth; when None it is
+    derived host-side from the (concrete) bound rows of ``vec`` — internal
+    nodes carry zero-width rows and sentinel (empty-leaf) windows are
+    excluded by the live mask, exactly like the RMI path.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if iters is None:
+        if isinstance(vec, jax.core.Tracer):
+            iters = _lookup.full_iters(keys.shape[0])
+        else:
+            import numpy as np
+            vec_np = np.asarray(vec)
+            iters = _lookup.search_iters(vec_np[1], vec_np[2],
+                                         keys.shape[0])
+    return _rmrt_lookup_jit(queries, mat, vec, keys, fanout=fanout,
+                            depth=depth, kind=kind, iters=iters, tile=tile,
+                            interpret=interpret, seam_budget=seam_budget)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fanout", "depth", "kind", "iters", "tile", "interpret", "seam_budget"))
+def _rmrt_lookup_jit(queries, mat, vec, keys, *, fanout, depth, kind, iters,
+                     tile, interpret, seam_budget):
+    r = _lookup.rmrt_lookup_pallas(queries, mat, vec, keys, fanout=fanout,
+                                   depth=depth, kind=kind, iters=iters,
+                                   tile=tile, interpret=interpret)
+    return _seam_fix(r, keys.astype(jnp.float32),
+                     queries.astype(jnp.float32), seam_budget)
+
+
 def dynamic_index_lookup(queries, root, mat, vec, keys, base_dead, base_psum,
                          delta_keys, delta_dead, delta_psum, *, n_leaves: int,
                          route_n: int, root_kind: str = "linear",

@@ -87,7 +87,16 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
 
     lo = jnp.clip(jnp.floor(pred + row(vecf, 1)), 0, S - 1).astype(jnp.int32)
     hi = jnp.clip(jnp.ceil(pred + row(vecf, 2)) + 1.0, 1, S).astype(jnp.int32)
+    return _tiled_window_search(q, kp, lo, hi, S=S, tile=tile,
+                                tile_iters=tile_iters)
 
+
+def _tiled_window_search(q, kp, lo, hi, *, S: int, tile: int,
+                         tile_iters: int):
+    """The kernels' stage 4, mirrored: per-key-tile clamped branchless
+    search with min-merge across tiles.  ``kp`` is the +inf-padded f32 key
+    array (length a ``tile`` multiple)."""
+    nk = kp.shape[0] // tile
     out = hi
     for j in range(nk):
         base = j * tile
@@ -108,6 +117,61 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
         l, _ = jax.lax.fori_loop(0, tile_iters, body, (tlo, thi))
         out = jnp.minimum(out, jnp.where(l < thi, base + l, S))
     return out
+
+
+def rmrt_lookup_ref(queries, mat, vec, keys, *, fanout: int, depth: int,
+                    kind: str = "linear", iters: int | None = None,
+                    tile: int | None = None) -> jax.Array:
+    """Oracle for lookup.rmrt_lookup_pallas: same packed node-table contract
+    (pack_rmrt layout), same f32 arithmetic — the depth-D masked descent is
+    reimplemented here (independent of the kernel body) with identical op
+    ordering, then the shared tiled clamped search.  Bit-identical in
+    interpret mode."""
+    from . import lookup as _lk
+
+    q = queries.astype(jnp.float32)
+    kf = keys.astype(jnp.float32)
+    S = kf.shape[0]
+    npad = mat.shape[1]
+    if tile is None:
+        tile = min(_lk.TILE_MAX, _lk._pow2ceil(max(S, 128)))
+    if iters is None:
+        iters = _lk.full_iters(S)
+    tile_iters = min(iters, _lk.full_iters(tile))
+    nk = -(-S // tile)
+    kp = jnp.pad(kf, (0, nk * tile - S), constant_values=jnp.inf)
+
+    matf = mat.reshape(-1)
+    vecf = vec.reshape(-1)
+    row = lambda flat, r, idx: jnp.take(flat, idx + r * npad)
+
+    def predict(node):
+        if kind == "linear":
+            return row(matf, 0, node) * q + row(vecf, 0, node)
+        pred = row(vecf, 0, node)
+        for k in range(_lk.H):
+            hk = jnp.maximum(q * row(matf, k, node)
+                             + row(matf, _lk.H + k, node), 0.0)
+            pred = pred + hk * row(matf, 2 * _lk.H + k, node)
+        return pred
+
+    node = jnp.zeros(q.shape, jnp.int32)
+    for _ in range(depth):
+        pred = predict(node)
+        ys = row(vecf, 3, node)
+        span = row(vecf, 4, node) - ys
+        child = jnp.clip(((pred - ys) * fanout / span).astype(jnp.int32),
+                         0, fanout - 1)
+        nxt = row(vecf, 5, node).astype(jnp.int32) + child
+        node = jnp.where(row(vecf, 6, node) > 0.5, node, nxt)
+
+    pred = predict(node)
+    lo = jnp.clip(jnp.floor(pred + row(vecf, 1, node)), 0, S - 1
+                  ).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + row(vecf, 2, node)) + 1.0, 1, S
+                  ).astype(jnp.int32)
+    return _tiled_window_search(q, kp, lo, hi, S=S, tile=tile,
+                                tile_iters=tile_iters)
 
 
 def dynamic_lookup_ref(queries, root, mat, vec, keys, delta_keys, *,

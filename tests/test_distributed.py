@@ -1,0 +1,96 @@
+"""Distributed index service: Pallas-kernel vs jnp per-shard path parity
+on 1/2/4/8-device CPU meshes, with ragged shard sizes and out-of-range /
+shard-seam queries.
+
+Each mesh size runs in a subprocess (device count locks at first jax
+init, like tests/test_multidevice.py).  The kernel path runs the fused
+lookup (in-kernel routing + clamped tiled search + sparse seam fix) per
+shard inside ``shard_map``; the jnp path is the clamped ``verified_search``
+— both must return identical global ranks, and those ranks must match the
+brute-force searchsorted truth on the concatenated live keys.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.kernel
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+ndev = %(ndev)d
+rng = np.random.default_rng(11 + ndev)
+# ragged: not a multiple of any tested mesh size (every shard non-empty)
+n = 30_000 + 13
+keys = np.unique(np.sort(rng.lognormal(0, 0.9, n) * 1e3)
+                 .astype(np.float32)).astype(np.float64)
+mesh = jax.make_mesh((ndev,), ("data",))
+idx = distributed.build_sharded(jnp.asarray(keys), mesh, axis="data",
+                                n_leaves=128)
+assert idx.f32_exact
+cap = idx.keys.shape[1]
+valid = np.asarray(idx.valid)
+assert (valid > 0).all() and valid.sum() == keys.size
+
+Q = 2048
+splits = np.asarray(idx.splits)
+inside = rng.choice(keys, Q - 2 * splits.size - 8)
+# seams: the split boundaries themselves and their f32 neighbours (the
+# owning shard changes exactly here), plus out-of-range extremes
+seam = np.concatenate([splits, np.nextafter(splits.astype(np.float32),
+                                            np.float32(np.inf))
+                       .astype(np.float64)]) if splits.size else np.zeros(0)
+oor = np.asarray([0.0, -1e9, keys[0] / 2, keys[-1] * 2, 1e30,
+                  keys[0], keys[-1], keys[-1] * 16], np.float32)
+q = np.concatenate([inside, seam, oor.astype(np.float64)])[:Q]
+q = rng.permutation(q)
+qj = jnp.asarray(q)
+
+fn_jnp = distributed.make_lookup_fn(idx, use_kernel=False)
+fn_krn = distributed.make_lookup_fn(idx, use_kernel=True)
+r_jnp = np.asarray(fn_jnp(qj))
+r_krn = np.asarray(fn_krn(qj))
+np.testing.assert_array_equal(r_jnp, r_krn)      # kernel == jnp, all meshes
+
+# globalized shard ranks decode to the exact brute-force positions
+shard, local = r_jnp // cap, r_jnp %% cap
+glob = np.concatenate([[0], np.cumsum(valid)])[shard] + local
+np.testing.assert_array_equal(glob, np.searchsorted(keys, q, side="left"))
+
+# capacity-bucketed variant: answered slots must agree across paths
+fk = distributed.make_lookup_fn(idx, capacity_factor=2.0, use_kernel=True)
+fj = distributed.make_lookup_fn(idx, capacity_factor=2.0, use_kernel=False)
+a, b = np.asarray(fk(qj)), np.asarray(fj(qj))
+np.testing.assert_array_equal(a, b)
+answered = a >= 0
+assert answered.mean() > 0.5
+np.testing.assert_array_equal(a[answered], r_jnp[answered])
+print("DIST_OK ndev=%(ndev)d")
+"""
+
+
+def _run(ndev: int, timeout: int = 900):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT % {"ndev": ndev}],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert f"DIST_OK ndev={ndev}" in proc.stdout, proc.stdout[-2000:]
+
+
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_distributed_kernel_parity_small_mesh(ndev):
+    _run(ndev)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [4, 8])
+def test_distributed_kernel_parity_large_mesh(ndev):
+    _run(ndev)

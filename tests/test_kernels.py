@@ -9,6 +9,8 @@ import repro  # noqa: F401  (x64 on)
 from repro.kernels import ops, ref
 from repro.core.reuse import pool_prefix_tables
 
+pytestmark = pytest.mark.kernel
+
 RNG = np.random.default_rng(1234)
 
 

@@ -131,6 +131,59 @@ def test_delete_clears_buffered_insert():
     _assert_find_exact(d, np.concatenate([ins, base[:100]]))
 
 
+def test_delete_only_workload_triggers_compaction():
+    """ROADMAP churn item: a delete-only workload must not grow the delta
+    tier's dead fraction without bound — compaction fires at the configured
+    dead ratio, purges every tombstone, and leaves all live ranks (and the
+    kernel path) invariant."""
+    base = _f32_keys(8_192, seed=21)
+    d = DynamicRMI.build(jnp.asarray(base), eps=0.5, n_leaves=16,
+                         kind="linear", compact_dead_ratio=0.25)
+    ins = np.setdiff1d(_f32_keys(3_000, seed=22, lo=0.1, hi=0.9), base)
+    d.insert_batch(ins)
+    assert d.delta_live == ins.size and d.delta_dead_count == 0
+
+    probe = np.concatenate([ins, base[::64]])
+    victims = ins[::3]                   # delete-only from here on
+    survivors = np.setdiff1d(ins, victims)
+    fired = 0
+    for chunk in np.array_split(victims, 10):
+        before = {}
+        if fired == 0 and d.delta_dead_count > 0:
+            # capture state right below the threshold to check invariance
+            # across the *next* compaction
+            f0, r0 = d.find(jnp.asarray(probe))
+            before = {"f": np.asarray(f0), "r": np.asarray(r0),
+                      "live": d.live_keys()}
+        d.delete_batch(chunk)
+        if d.delta_compactions > fired:
+            fired = d.delta_compactions
+            assert d.delta_dead_count == 0          # tombstones purged
+            if before:
+                # live keys and every rank unchanged by the compaction
+                # (modulo the chunk that was just deleted)
+                live = d.live_keys()
+                np.testing.assert_array_equal(
+                    live, np.setdiff1d(before["live"], chunk))
+    assert d.delta_compactions >= 1      # the trigger actually fired
+    # dead fraction stays bounded by the ratio after every batch
+    tot = d.delta_live + d.delta_dead_count
+    assert tot == 0 or d.delta_dead_count < 0.25 * tot + len(victims) // 10
+    assert d.delta_live == survivors.size
+    _assert_find_exact(d, probe)
+    _assert_find_exact(d, probe, use_kernel=True)
+
+    # disabling the trigger preserves the old behaviour (dead fraction
+    # grows until the next insert/rebuild merge)
+    d2 = DynamicRMI.build(jnp.asarray(base), eps=0.5, n_leaves=16,
+                          kind="linear", compact_dead_ratio=None)
+    d2.insert_batch(ins)
+    d2.delete_batch(victims)
+    assert d2.delta_compactions == 0
+    assert d2.delta_dead_count == victims.size
+    _assert_find_exact(d2, probe)
+
+
 def test_delete_duplicate_runs():
     """Partially tombstoned duplicate runs: each delete retires one copy
     (tombstones form a prefix of the run), find stays True while any copy
@@ -173,6 +226,7 @@ def _kernel_parity(d, q):
     _assert_find_exact(d, q, use_kernel=False)
 
 
+@pytest.mark.kernel
 def test_dynamic_kernel_parity_empty_delta():
     base = _f32_keys(8_192, seed=8)
     d = DynamicRMI.build(jnp.asarray(base), eps=0.9, n_leaves=32,
@@ -181,6 +235,7 @@ def test_dynamic_kernel_parity_empty_delta():
     _kernel_parity(d, q)
 
 
+@pytest.mark.kernel
 def test_dynamic_kernel_parity_delta_only_leaves():
     """Leaves with no base members but live delta entries (base has a hole
     in the key range; inserts land in it)."""
@@ -198,6 +253,7 @@ def test_dynamic_kernel_parity_delta_only_leaves():
     _kernel_parity(d, q)
 
 
+@pytest.mark.kernel
 def test_dynamic_kernel_parity_duplicates_across_tiers():
     base = _f32_keys(8_192, seed=14)
     d = DynamicRMI.build(jnp.asarray(base), eps=0.5, n_leaves=32,
@@ -210,6 +266,7 @@ def test_dynamic_kernel_parity_duplicates_across_tiers():
     _kernel_parity(d, q)
 
 
+@pytest.mark.kernel
 def test_dynamic_kernel_parity_tombstoned_hits(lin_pool):
     base = _f32_keys(16_384, seed=15)
     d = DynamicRMI.build(jnp.asarray(base), pool=lin_pool, eps=0.9,
