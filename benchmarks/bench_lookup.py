@@ -22,9 +22,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
-import subprocess
-import sys
 import time
 from pathlib import Path
 
@@ -154,24 +151,12 @@ def bench_distributed(n: int, n_shards: int) -> list[dict]:
 
 
 def _distributed_rows(n_shards: int, n: int) -> list[dict]:
-    """Collect the distributed rows from a subprocess (the host-device
-    count locks at first jax init, so the mesh needs a fresh process)."""
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_shards}")
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_lookup",
-         "--distributed-worker", str(n_shards), "--sizes", str(n)],
-        env=env, capture_output=True, text=True, timeout=1800)
-    if proc.returncode != 0:
-        print(f"distributed bench failed:\n{proc.stderr[-2000:]}",
-              file=sys.stderr)
-        return []
-    try:
-        return json.loads(proc.stdout.splitlines()[-1])
-    except (json.JSONDecodeError, IndexError):
-        print(f"distributed worker emitted no parseable rows:\n"
-              f"{proc.stdout[-2000:]}", file=sys.stderr)
-        return []
+    """Collect the distributed rows from a forced-device-count subprocess
+    (harness.worker_rows — the host-device count locks at first jax
+    init)."""
+    return harness.worker_rows("benchmarks.bench_lookup",
+                               "--distributed-worker", n_shards,
+                               ["--sizes", n], timeout=1800)
 
 
 def main() -> None:
@@ -192,14 +177,15 @@ def main() -> None:
     rows = bench(args.sizes)
     if args.shards:
         rows += _distributed_rows(args.shards, max(args.sizes))
-    meta = {"queries": Q, "repeats": REPEATS, "mode": "interpret/CPU",
-            "note": "pallas-interpret rows time the Pallas interpreter "
-                    "(correctness-grade); jnp rows are the XLA serving "
-                    "path. Distributed rows run the sharded service on a "
-                    "forced-host-device CPU mesh."}
-    Path(args.out).write_text(json.dumps({"meta": meta, "rows": rows},
-                                         indent=1) + "\n")
-    print(f"wrote {args.out} ({len(rows)} rows)")
+    # Per-PR trajectory: append keyed by (git sha, suite) — the committed
+    # baseline meta/rows from the seeding run stay untouched so every PR's
+    # numbers remain comparable against them.
+    harness.append_bench(
+        args.out, "lookup", rows,
+        note="pallas-interpret rows time the Pallas interpreter "
+             "(correctness-grade); jnp rows are the XLA serving path. "
+             "Distributed rows run the sharded service on a "
+             "forced-host-device CPU mesh.")
 
 
 if __name__ == "__main__":

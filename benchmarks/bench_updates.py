@@ -20,8 +20,15 @@ Times ns/op for the §4 update subsystem and writes ``BENCH_updates.json``
                                    on CPU: correctness-grade timing only)
   rebuild       an insert storm sized to exhaust Lemma 4.1 budgets —
                 ns per *merged key* including the pool-reuse refits
+  sharded       ShardedDynamicIndex insert/delete/find churn on a forced
+                n-host-device CPU mesh vs single-device DynamicRMI at equal
+                total keys (per-shard cost trajectory; runs in a worker
+                subprocess because the device count locks at first jax init)
 
-  PYTHONPATH=src python -m benchmarks.bench_updates [--n 65536]
+Rows *append* to ``BENCH_updates.json`` under ``trajectory``, keyed by
+(git sha, suite) — the committed baseline rows stay untouched.
+
+  PYTHONPATH=src python -m benchmarks.bench_updates [--n 65536] [--shards 4]
 """
 from __future__ import annotations
 
@@ -153,6 +160,106 @@ def bench(n: int = 1 << 17, eps: float = 0.9, n_leaves: int = 8192,
     return rows
 
 
+def bench_sharded(n: int = 1 << 16, n_shards: int = 4,
+                  eps: float = 0.7) -> list[dict]:
+    """Sharded insert/delete/find churn vs a single-device ``DynamicRMI``
+    at equal total keys — the per-shard cost trajectory.  Must run in a
+    process whose XLA host-device count is already >= n_shards (see
+    --sharded-worker below); the single-device rows are measured in the
+    same process so the comparison shares one XLA config."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distributed
+    from repro.core.updates import DynamicRMI
+
+    base = _keys(n)
+    extra = _keys(2 * n, seed=9)
+    ins = np.setdiff1d(extra, base)
+    rng = np.random.default_rng(4)
+    n_leaves = max(n // 64, 16)
+    mesh = jax.make_mesh((n_shards,), ("data",))
+    rows: list[dict] = []
+
+    def _row(op, impl, ns, detail):
+        rows.append({"op": op, "impl": impl, "n_keys": int(base.size),
+                     "ns_per_op": round(ns, 1), "detail": detail})
+        print(f"{op:12s} {impl:24s} {ns:12.0f} ns/op  {detail}")
+
+    bulk = ins[:n // 2]
+    churn = ins[n // 2:n // 2 + max(n // 8, 1024)]
+    dels = rng.choice(churn, churn.size // 10, replace=False)
+    q = jnp.asarray(np.concatenate(
+        [rng.choice(base, Q // 2), rng.choice(churn, Q - Q // 2)]))
+
+    # ---- single-device reference at equal total keys ---------------------
+    def _build_single():
+        return DynamicRMI.build(jnp.asarray(base), eps=eps,
+                                n_leaves=n_leaves, kind="linear")
+
+    def _time_mutation(build_fn, op):
+        """Median over REPEATS of op(fresh structure) — builds untimed, one
+        throwaway warm pass primes the jit caches (the protocol of
+        :func:`bench`'s _time_inserts)."""
+        op(build_fn())                      # warm
+        times, last = [], None
+        for _ in range(REPEATS):
+            d = build_fn()
+            t0 = time.time()
+            op(d)
+            times.append(time.time() - t0)
+            last = d
+        return float(np.median(times)), last
+
+    dt, _ = _time_mutation(_build_single, lambda d: d.insert_batch(bulk))
+    _row("insert", "single-device", dt / bulk.size * 1e9,
+         f"bulk={bulk.size} leaves={n_leaves}")
+    d = _build_single()
+    d.insert_batch(churn)
+    d.delete_batch(dels)
+    jax.block_until_ready(d.find(q, use_kernel=False))
+    dt = _median(lambda: jax.block_until_ready(d.find(q, use_kernel=False)))
+    _row("find-churn", "single-device-jnp", dt / Q * 1e9,
+         f"Q={Q} churn={churn.size} tombstones={dels.size}")
+
+    # ---- sharded ---------------------------------------------------------
+    def _build_sharded():
+        return distributed.ShardedDynamicIndex.build(
+            jnp.asarray(base), mesh, n_leaves=n_leaves, eps=eps)
+
+    dt, s2 = _time_mutation(_build_sharded, lambda s: s.insert_batch(bulk))
+    per_shard = bulk.size / n_shards
+    _row("insert", f"sharded-{n_shards}", dt / bulk.size * 1e9,
+         f"bulk={bulk.size} per_shard={per_shard:.0f} "
+         f"rebalances={s2.rebalances}")
+
+    def _churned():
+        s = _build_sharded()
+        s.insert_batch(churn)
+        return s
+
+    dt, s = _time_mutation(_churned, lambda s: s.delete_batch(dels))
+    _row("delete", f"sharded-{n_shards}", dt / max(dels.size, 1) * 1e9,
+         f"dels={dels.size} churn={churn.size}")
+    for impl, uk in ((f"sharded-{n_shards}-jnp", False),
+                     (f"sharded-{n_shards}-pallas", True)):
+        jax.block_until_ready(s.find(q, use_kernel=uk))
+        dt = _median(lambda: jax.block_until_ready(s.find(q, use_kernel=uk)))
+        _row("find-churn", impl, dt / Q * 1e9,
+             f"Q={Q} churn={churn.size} tombstones={dels.size} "
+             f"live={s.total_live}"
+             + (" interpret-mode (correctness-grade)" if uk else ""))
+    return rows
+
+
+def _sharded_rows(n_shards: int, n: int) -> list[dict]:
+    """Collect the sharded rows from a forced-device-count subprocess
+    (harness.worker_rows — the host-device count locks at first jax
+    init)."""
+    from . import harness
+    return harness.worker_rows("benchmarks.bench_updates",
+                               "--sharded-worker", n_shards, ["--n", n])
+
+
 def quick_rows(n: int = 1 << 15) -> list[dict]:
     """CSV rows for benchmarks.run (name/us_per_call/derived schema)."""
     return [{"name": f"updates_{r['op']}_{r['impl']}",
@@ -160,22 +267,46 @@ def quick_rows(n: int = 1 << 15) -> list[dict]:
              "derived": r["detail"]} for r in bench(n, with_pool=False)]
 
 
+def sharded_quick_rows(n: int = 1 << 15, n_shards: int = 4) -> list[dict]:
+    """CSV rows for benchmarks.run's ``sharded`` suite (subprocess mesh)."""
+    return [{"name": f"sharded_{r['op']}_{r['impl']}",
+             "us_per_call": r["ns_per_op"] / 1e3,
+             "derived": r["detail"]} for r in _sharded_rows(n_shards, n)]
+
+
 def main() -> None:
+    from . import harness
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1 << 17)
+    ap.add_argument("--shards", type=int, default=4,
+                    help="mesh width for the sharded rows (0 disables)")
+    ap.add_argument("--sharded-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: emit rows as JSON
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_updates.json"))
     args = ap.parse_args()
+    if args.sharded_worker:
+        rows = bench_sharded(args.n, args.sharded_worker)
+        print(json.dumps(rows))
+        return
     rows = bench(args.n)
-    meta = {"queries": Q, "repeats": REPEATS, "mode": "interpret/CPU",
-            "note": "host-loop-seed rows time the pre-PR2 per-leaf host "
-                    "buffer implementation (kept as "
-                    "updates.HostBufferDynamicRMI); two-tier rows are the "
-                    "device-resident delta-tier subsystem. two-tier-pallas "
-                    "times the Pallas interpreter (correctness-grade)."}
-    Path(args.out).write_text(json.dumps({"meta": meta, "rows": rows},
-                                         indent=1) + "\n")
-    print(f"wrote {args.out} ({len(rows)} rows)")
+    # Per-PR trajectory: append keyed by (git sha, suite); the committed
+    # baseline meta/rows from the seeding run stay untouched.
+    harness.append_bench(
+        args.out, "updates", rows,
+        note="host-loop-seed rows time the pre-PR2 per-leaf host buffer "
+             "implementation; two-tier rows are the device-resident "
+             "delta-tier subsystem. two-tier-pallas times the Pallas "
+             "interpreter (correctness-grade).")
+    if args.shards:
+        srows = _sharded_rows(args.shards, min(args.n, 1 << 16))
+        if srows:
+            harness.append_bench(
+                args.out, "sharded", srows,
+                note=f"ShardedDynamicIndex churn on a forced "
+                     f"{args.shards}-host-device CPU mesh vs single-device "
+                     f"DynamicRMI at equal total keys; pallas rows are "
+                     f"interpreter (correctness-grade).")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,15 @@
 """Shared benchmark machinery: the paper's index roster, timed builds and
-lookups, CSV rows for run.py."""
+lookups, CSV rows for run.py, and the per-PR trajectory appender for the
+committed BENCH_*.json baselines."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -13,6 +19,79 @@ import repro  # noqa: F401
 from repro.core import btree, pgm, radix_spline, reuse, rmi, rmrt, synth
 
 _POOLS: dict = {}
+
+
+def git_sha() -> str:
+    """Short HEAD sha of the repo the benchmarks live in ("unknown" outside
+    a checkout) — the trajectory key, together with the suite name."""
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def append_bench(path, suite: str, rows: list, mode: str = "interpret/CPU",
+                 note: str = "") -> dict:
+    """Append a per-PR trajectory entry to a committed BENCH json.
+
+    The file's top-level ``meta``/``rows`` (the original baseline) are left
+    untouched; entries accumulate under ``trajectory`` keyed by
+    (git sha, suite) — re-running the same suite at the same sha replaces
+    its entry instead of duplicating it, so the trajectory stays one row
+    per PR per suite.  Returns the written document."""
+    p = Path(path)
+    data = json.loads(p.read_text()) if p.exists() else \
+        {"meta": {}, "rows": []}
+    sha = git_sha()
+    traj = data.setdefault("trajectory", [])
+    traj[:] = [e for e in traj
+               if (e.get("sha"), e.get("suite")) != (sha, suite)]
+    entry = {"sha": sha, "suite": suite, "mode": mode,
+             "date": time.strftime("%Y-%m-%d"), "rows": rows}
+    if note:
+        entry["note"] = note
+    traj.append(entry)
+    p.write_text(json.dumps(data, indent=1) + "\n")
+    print(f"appended {len(rows)} rows to {p.name} "
+          f"(suite={suite}, sha={sha})")
+    return data
+
+
+def worker_rows(module: str, flag: str, n_devices: int, argv: list,
+                timeout: int = 3600) -> list:
+    """Collect benchmark rows from a forced-host-device-count subprocess.
+
+    XLA's host device count locks at first jax init, so any bench needing a
+    >1-device CPU mesh re-execs itself: ``python -m <module> <flag>
+    <n_devices> <argv...>`` with XLA_FLAGS forcing the count; the worker
+    prints its rows as JSON on the last stdout line.  Shared by the
+    distributed rows of bench_lookup and the sharded rows of
+    bench_updates.  Returns [] (with the worker's stderr echoed) on any
+    failure, so a broken mesh bench never sinks the host run."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                         f"={n_devices}")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", module, flag, str(n_devices),
+             *map(str, argv)],
+            env=env, capture_output=True, text=True, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        print(f"{module} worker timed out after {timeout}s", file=sys.stderr)
+        return []
+    if proc.returncode != 0:
+        print(f"{module} worker failed:\n{proc.stderr[-2000:]}",
+              file=sys.stderr)
+        return []
+    try:
+        return json.loads(proc.stdout.splitlines()[-1])
+    except (json.JSONDecodeError, IndexError):
+        print(f"{module} worker emitted no parseable rows:\n"
+              f"{proc.stdout[-2000:]}", file=sys.stderr)
+        return []
 
 
 def pools(eps: float = 0.9):

@@ -2,9 +2,13 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all, quick sizes
   PYTHONPATH=src python -m benchmarks.run --only fig5 --n 1000000
+  PYTHONPATH=src python -m benchmarks.run --only sharded --record
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a kernel microbench and
-the serving-path row for the Pallas lookup kernel).
+the serving-path row for the Pallas lookup kernel).  ``--record`` appends
+the collected rows to the committed BENCH_*.json trajectories keyed by
+(git sha, suite) — appended, never regenerated, so per-PR history
+accumulates.
 """
 from __future__ import annotations
 
@@ -80,8 +84,17 @@ def rmrt_rows(n: int = 200_000, q: int = 16_384):
     return rows
 
 
-SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "kernels",
-          "rmrt"]
+SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "sharded",
+          "kernels", "rmrt"]
+
+# --record routes each suite's rows into the matching committed trajectory
+# (appended keyed by git sha + suite — never regenerated; see
+# harness.append_bench).
+_RECORD_TARGETS = {
+    "fig7": "BENCH_updates.json", "updates": "BENCH_updates.json",
+    "sharded": "BENCH_updates.json", "kernels": "BENCH_lookup.json",
+    "rmrt": "BENCH_lookup.json",
+}
 
 
 def main() -> None:
@@ -90,39 +103,65 @@ def main() -> None:
                     help=f"comma list from {SUITES}")
     ap.add_argument("--n", type=int, default=None,
                     help="dataset size override (default 200k)")
+    ap.add_argument("--record", action="store_true",
+                    help="append the collected rows to the committed "
+                         "BENCH_*.json trajectories (keyed by git sha + "
+                         "suite)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
-    rows = []
+    by_suite: dict[str, list] = {}
     t_start = time.time()
     if "table2" in only:
         from . import table2_synth
-        rows += table2_synth.run()
+        by_suite["table2"] = table2_synth.run()
     if "fig5" in only:
         from . import fig5_real
-        rows += fig5_real.run(**({"n": args.n} if args.n else {}))
+        by_suite["fig5"] = fig5_real.run(**({"n": args.n} if args.n else {}))
     if "fig6" in only:
         from . import fig6_skew
-        rows += fig6_skew.run(**({"n": args.n} if args.n else {}))
+        by_suite["fig6"] = fig6_skew.run(**({"n": args.n} if args.n else {}))
     if "table3" in only:
         from . import table3_eps
-        rows += table3_eps.run(**({"n": args.n} if args.n else {}))
+        by_suite["table3"] = table3_eps.run(
+            **({"n": args.n} if args.n else {}))
     if "fig7" in only:
         from . import fig7_updates
-        rows += fig7_updates.run(**({"n": args.n} if args.n else {}))
+        by_suite["fig7"] = fig7_updates.run(
+            **({"n": args.n} if args.n else {}))
     if "updates" in only:
         from . import bench_updates
-        rows += bench_updates.quick_rows(**({"n": args.n} if args.n else {}))
+        by_suite["updates"] = bench_updates.quick_rows(
+            **({"n": args.n} if args.n else {}))
+    if "sharded" in only:
+        from . import bench_updates
+        by_suite["sharded"] = bench_updates.sharded_quick_rows(
+            **({"n": args.n} if args.n else {}))
     if "kernels" in only:
-        rows += kernel_rows(**({"n": args.n} if args.n else {}))
+        by_suite["kernels"] = kernel_rows(
+            **({"n": args.n} if args.n else {}))
     if "rmrt" in only:
-        rows += rmrt_rows(**({"n": args.n} if args.n else {}))
+        by_suite["rmrt"] = rmrt_rows(**({"n": args.n} if args.n else {}))
 
+    rows = [r for suite in SUITES for r in by_suite.get(suite, [])]
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"")
     print(f"# total {time.time()-t_start:.0f}s, {len(rows)} rows",
           file=sys.stderr)
+
+    if args.record:
+        from pathlib import Path
+        from . import harness
+        root = Path(__file__).resolve().parent.parent
+        for suite, suite_rows in by_suite.items():
+            target = _RECORD_TARGETS.get(suite)
+            if target and suite_rows:
+                harness.append_bench(root / target, f"run:{suite}",
+                                     suite_rows)
+            elif not target:
+                print(f"# --record: suite {suite} has no trajectory "
+                      f"target, skipped", file=sys.stderr)
 
 
 if __name__ == "__main__":

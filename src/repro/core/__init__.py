@@ -8,6 +8,9 @@ Public surface:
   rmrt.build_rmrt / rmrt.lookup       — the paper's RMRT
   updates.DynamicRMI                  — §4 insert handling (Lemma 4.1)
   distributed.build_sharded           — multi-host sharded index service
+  distributed.ShardedDynamicIndex     — sharded two-tier dynamic serving
+                                        (per-shard delta tiers, routed
+                                        updates, split rebalancing)
   btree / pgm / radix_spline          — baselines from the paper's roster
 """
 from . import (adapt, bounds, btree, cdf, distributed, models, pgm,

@@ -10,6 +10,33 @@ path as the single-host index), and results return via the inverse
 ``all_to_all``. All collectives are explicit, so the dry-run roofline for
 the index service is auditable like the LM cells.
 
+Partitioning invariants (shared by the static and dynamic index): shard
+boundaries come from :func:`shard_bounds`, an equal-count split *snapped to
+equal-key run starts*, so a run of duplicate keys is always owned by exactly
+one shard.  ``splits[s]`` is the last key of shard s and every key of shard
+s+1 is strictly greater, hence ``searchsorted(splits, q, side="left")``
+routes every query/update for a key to the one shard that can own it and
+the global leftmost live rank decomposes as (live keys in shards < dest) +
+(local leftmost rank).  Shards may be *empty* (n < n_shards, or runs longer
+than a balanced shard): they carry a trivial zero-model RMI over an all-+inf
+key block, answer rank 0 / found False, and re-absorb load through
+rebalancing.
+
+Dynamic serving (``ShardedDynamicIndex``): each shard owns a full two-tier
+``core.updates.DynamicRMI`` — base tier + sorted pow2-capacity delta tier
+with tombstone bitmaps, per-leaf Lemma 4.1 budgets driving pool-reuse
+rebuilds (``rmi.fit_leaves``).  ``insert_batch``/``delete_batch`` pre-bucket
+keys by the split vector on the host and run one device merge per touched
+shard; ``find`` stacks the shard tiers (lazily, cached until the next
+mutation) and dispatches the fused ``dynamic_lookup_pallas`` kernel — or its
+jnp oracle — per shard under ``shard_map`` with the same capacity-bucketed
+``all_to_all`` exchange as the static path.  Per-shard frozen routing scales
+ride the packed root blocks (``lookup.pack_root(route_scale=...)``) so one
+statically-traced kernel serves every shard.  Skew handling: when a shard's
+delta or dead ratio (or raw live-count skew) crosses a threshold, boundary
+runs migrate to an adjacent shard and the split between them moves —
+monotone and duplicate-run-safe because cuts snap to run boundaries.
+
 This module is exercised two ways:
   * functionally on small meshes in tests (shard_map over 1-8 CPU devices),
   * structurally in the multi-pod dry-run (lower/compile on 256 devices) via
@@ -18,7 +45,7 @@ This module is exercised two ways:
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -93,18 +120,53 @@ class ShardedIndex:
         return self.kroot, self.kmat, self.kvec
 
 
+def shard_bounds(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Equal-count partition positions over sorted ``keys``, snapped to
+    equal-key run *starts* so no duplicate run straddles a shard seam.
+
+    Returns (n_shards + 1,) non-decreasing positions b with b[0] = 0 and
+    b[-1] = n; shard s owns keys[b[s]:b[s+1]].  b[s] == b[s+1] marks an
+    empty shard (n < n_shards, or a run longer than a balanced shard
+    swallowing a boundary).  The snap guarantees the routing invariant the
+    global-rank arithmetic rests on: every key of shard s+1 is strictly
+    greater than the last key of shard s."""
+    n = int(keys.shape[0])
+    cap = -(-n // n_shards) if n else 0
+    b = np.minimum(np.arange(n_shards + 1, dtype=np.int64) * max(cap, 1), n)
+    for s in range(1, n_shards):
+        p = int(b[s])
+        if 0 < p < n and keys[p - 1] == keys[p]:
+            b[s] = np.searchsorted(keys, keys[p], side="left")
+    return np.maximum.accumulate(b)
+
+
+def _splits_from_bounds(keys: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    """(n_shards - 1,) split values: splits[s] = last key of shard s.
+    Shards that are empty *with no key to their left* (an all-empty prefix)
+    get -inf so any finite query routes past them; empty shards later in
+    the order repeat the previous split (monotone either way)."""
+    return np.asarray([keys[bounds[s + 1] - 1] if bounds[s + 1] > 0
+                       else -np.inf for s in range(bounds.shape[0] - 2)],
+                      np.float64)
+
+
 def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
                   n_leaves: int = 1024, pool=None) -> ShardedIndex:
-    """Equal-count range partition; one RMI per shard (built batched)."""
+    """Equal-count range partition snapped to duplicate-run boundaries; one
+    RMI per shard (empty shards get the trivial zero-model build)."""
     n_shards = mesh.shape[axis]
     keys = jnp.asarray(keys, jnp.float64)
     n = keys.shape[0]
-    cap = -(-n // n_shards)
-    splits = keys[jnp.minimum(jnp.arange(1, n_shards) * cap, n) - 1]
+    if n == 0:
+        raise ValueError("build_sharded needs at least one key")
+    kn = np.asarray(keys)
+    bounds = shard_bounds(kn, n_shards)
+    cap = max(int(np.diff(bounds).max()), 1)
+    splits = jnp.asarray(_splits_from_bounds(kn, bounds))
     shards, valid = [], []
     roots, leaves, elos, ehis = [], [], [], []
     for s in range(n_shards):
-        part = keys[s * cap:(s + 1) * cap]
+        part = keys[int(bounds[s]):int(bounds[s + 1])]
         v = part.shape[0]
         idx = rmi_mod.build_rmi(part, n_leaves=n_leaves, kind="linear",
                                 pool=pool)
@@ -193,47 +255,34 @@ def make_lookup_fn(index: ShardedIndex, *,
         *local* shard's slice (shard_map strips the leading shard dim)."""
         B = q_local.shape[0]
         me = jax.lax.axis_index(axis)
-        dest = jnp.searchsorted(splits, q_local, side="left").astype(jnp.int32)
         # capacity-bucketed routing: C slots per destination shard
         if capacity_factor is None:
             C = B          # worst case: all local queries target one shard
         else:
             C = max(int(B * capacity_factor / n_shards), 1)
-        slot_in_dest = _cumcount(dest, n_shards)
-        send = jnp.full((n_shards, C), jnp.inf, q_local.dtype)
-        send = send.at[dest, jnp.clip(slot_in_dest, 0, C - 1)].set(q_local)
-        origin_pos = jnp.full((n_shards, C), -1, jnp.int32)
-        origin_pos = origin_pos.at[dest, jnp.clip(slot_in_dest, 0, C - 1)].set(
-            jnp.arange(B, dtype=jnp.int32))
-        # exchange: row d of `send` goes to shard d
-        recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
-        rpos = jax.lax.all_to_all(origin_pos, axis, 0, 0, tiled=False)
-        # answer locally.  +inf exchange-padding slots are masked to a
-        # member query first and answered `valid` (= rank past end)
-        # directly: on an inf-padded (ragged) shard an inf query always
-        # fails the left-boundary seam check, and a batch of them would
-        # blow the sparse seam budget and demote every lookup to the dense
-        # re-search fallback (both the kernel's _seam_fix and the jnp
-        # path's verified_search).
-        rq = recv.reshape(-1)
-        live = rq < jnp.inf                  # excludes +inf pads and NaN
-        ranks = local_lookup(jax.tree.map(lambda a: a[0], tables), keys[0],
-                             jnp.where(live, rq, keys[0][0]))
-        ranks = jnp.where(live, ranks, valid[0])
-        ranks = jnp.minimum(ranks, valid[0]) + me * cap   # globalize
-        ranks = ranks.reshape(n_shards, C)
-        # return to origin
-        back = jax.lax.all_to_all(ranks, axis, 0, 0, tiled=False)
-        bpos = jax.lax.all_to_all(rpos, axis, 0, 0, tiled=False)
-        # scatter answers to their origin slots; padding (pos -1) is routed
-        # out of range and dropped. With a finite capacity_factor, queries
-        # beyond the budget keep rank -1 (caller retries).
-        flat_pos = bpos.reshape(-1)
-        flat_val = back.reshape(-1)
-        fill = jnp.full((B,), -1, ranks.dtype) if capacity_factor is not None \
-            else jnp.zeros((B,), ranks.dtype)
-        return fill.at[
-            jnp.where(flat_pos >= 0, flat_pos, B)].set(flat_val, mode="drop")
+
+        def answer(rq, live):
+            # +inf exchange-padding slots are masked to a member query
+            # first and answered `valid` (= rank past end) directly: on an
+            # inf-padded (ragged) shard an inf query always fails the
+            # left-boundary seam check, and a batch of them would blow the
+            # sparse seam budget and demote every lookup to the dense
+            # re-search fallback (both the kernel's _seam_fix and the jnp
+            # path's verified_search).  An *empty* shard has no member key
+            # (keys[0][0] is itself +inf) — mask to 0.0, which resolves to
+            # position 0 against its all-+inf block.
+            member = jnp.where(jnp.isfinite(keys[0][0]), keys[0][0], 0.0)
+            ranks = local_lookup(jax.tree.map(lambda a: a[0], tables),
+                                 keys[0], jnp.where(live, rq, member))
+            ranks = jnp.where(live, ranks, valid[0])
+            return (jnp.minimum(ranks, valid[0]) + me * cap)[:, None]
+
+        # With a finite capacity_factor, queries beyond the budget keep
+        # rank -1 (caller retries).
+        (ranks,) = _routed_exchange(
+            axis, n_shards, splits, q_local, C, answer,
+            (-1 if capacity_factor is not None else 0,))
+        return ranks
 
     fn = jax.shard_map(
         shard_fn, mesh=mesh,
@@ -255,3 +304,394 @@ def _cumcount(ids: Array, n_bins: int) -> Array:
     start = jnp.searchsorted(sorted_ids, jnp.arange(n_bins))
     ranks_sorted = jnp.arange(n, dtype=jnp.int32) - start[sorted_ids].astype(jnp.int32)
     return jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)
+
+
+def _routed_exchange(axis: str, n_shards: int, splits, q_local, C: int,
+                     answer_fn, fills: tuple) -> list:
+    """The capacity-bucketed query exchange shared by every shard_map body
+    here (static lookup and dynamic find): route each local query to its
+    owning shard (``searchsorted`` over the split vector, C slots per
+    destination, +inf padding), ``all_to_all`` out, apply
+    ``answer_fn(rq, live) -> (n_shards * C, P) int32 payload`` locally,
+    and return the payload through the inverse exchange scattered back to
+    each query's origin slot.
+
+    Returns one (B,) int32 array per payload column; ``fills[k]`` is
+    column k's value for unanswered slots (queries beyond a finite
+    capacity budget, or exchange padding).
+    """
+    B = q_local.shape[0]
+    dest = jnp.searchsorted(splits, q_local, side="left").astype(jnp.int32)
+    slot = jnp.clip(_cumcount(dest, n_shards), 0, C - 1)
+    send = jnp.full((n_shards, C), jnp.inf, q_local.dtype)
+    send = send.at[dest, slot].set(q_local)
+    opos = jnp.full((n_shards, C), -1, jnp.int32)
+    opos = opos.at[dest, slot].set(jnp.arange(B, dtype=jnp.int32))
+    recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=False)
+    rpos = jax.lax.all_to_all(opos, axis, 0, 0, tiled=False)
+    rq = recv.reshape(-1)
+    live = rq < jnp.inf                  # excludes +inf pads and NaN
+    payload = answer_fn(rq, live)
+    P = payload.shape[-1]
+    back = jax.lax.all_to_all(payload.reshape(n_shards, C, P), axis, 0, 0,
+                              tiled=False)
+    bpos = jax.lax.all_to_all(rpos, axis, 0, 0, tiled=False)
+    # scatter answers to their origin slots; padding (pos -1) is routed
+    # out of range and dropped, leaving the fill value.
+    tgt = jnp.where(bpos.reshape(-1) >= 0, bpos.reshape(-1), B)
+    fv = back.reshape(-1, P)
+    return [jnp.full((B,), fills[k], jnp.int32).at[tgt].set(fv[:, k],
+                                                            mode="drop")
+            for k in range(P)]
+
+
+# ---------------------------------------------------------------------------
+# Sharded dynamic index: per-shard two-tier DynamicRMI with routed updates,
+# fused per-shard find under shard_map, and run-snapped split rebalancing.
+# ---------------------------------------------------------------------------
+@dataclass
+class ShardedDynamicIndex:
+    """Range-partitioned two-tier dynamic index (module docstring: layout
+    and invariants).  Mutations are host-driven per shard (each shard is a
+    ``core.updates.DynamicRMI`` with its own delta tier, tombstones, and
+    Lemma 4.1 rebuild policy); serving stacks the shard tiers into device
+    arrays (cached until the next mutation) and answers a query batch in
+    one ``shard_map`` dispatch.  Queries must be finite (the exchange uses
+    +inf as its padding sentinel, like ``make_lookup_fn``)."""
+    mesh: Mesh
+    axis: str
+    splits: np.ndarray                  # (n_shards - 1,) host split values
+    shards: list                        # per-shard core.updates.DynamicRMI
+    eps: float
+    n_leaves: int
+    pool: object = None
+    # Rebalance policy: a shard whose delta tier holds more than
+    # ``rebalance_ratio`` of its live keys (insert-hot), whose dead fraction
+    # crosses the same ratio (delete-hot), or whose live count exceeds
+    # ``rebalance_skew`` x the mean, sheds/absorbs whole boundary runs
+    # to/from an adjacent shard and the split between them moves.  None
+    # disables rebalancing.
+    rebalance_ratio: float | None = 0.5
+    rebalance_skew: float = 2.0
+    rebalances: int = 0
+    build_kwargs: dict = field(default_factory=dict)
+    _stack: dict | None = None          # cached stacked device state
+    # Skew triggers that migration cannot resolve (one duplicate run bigger
+    # than the skew threshold: cuts snap to run boundaries, so there is
+    # nothing to move) are muted at the failing live count — re-armed as
+    # soon as the shard's live count changes.  Tier-ratio triggers never
+    # need this: their in-place rebuild fallback always clears them.
+    _skew_muted: dict = field(default_factory=dict)
+
+    @classmethod
+    def build(cls, keys, mesh: Mesh, axis: str = "data",
+              n_leaves: int = 256, pool=None, eps: float = 0.9,
+              rebalance_ratio: float | None = 0.5,
+              rebalance_skew: float = 2.0, **rmi_kwargs):
+        """Partition sorted ``keys`` with :func:`shard_bounds` (run-snapped,
+        empty shards allowed) and build one ``DynamicRMI`` per shard."""
+        from .updates import DynamicRMI
+        rmi_kwargs.setdefault("kind", "linear")
+        if rmi_kwargs.get("root_kind", "linear") != "linear":
+            raise ValueError(
+                "ShardedDynamicIndex requires a monotone (linear) root: "
+                "split routing and run snapping assume key order")
+        kn = np.asarray(jnp.asarray(keys, jnp.float64))
+        n_shards = mesh.shape[axis]
+        bounds = shard_bounds(kn, n_shards)
+        shards = [DynamicRMI.build(
+            jnp.asarray(kn[bounds[s]:bounds[s + 1]]), pool=pool, eps=eps,
+            n_leaves=n_leaves, **rmi_kwargs) for s in range(n_shards)]
+        return cls(mesh=mesh, axis=axis,
+                   splits=_splits_from_bounds(kn, bounds), shards=shards,
+                   eps=eps, n_leaves=n_leaves, pool=pool,
+                   rebalance_ratio=rebalance_ratio,
+                   rebalance_skew=rebalance_skew, build_kwargs=rmi_kwargs)
+
+    # -- shape / bookkeeping ----------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def f32_exact(self) -> bool:
+        """Every shard's tiers round-trip through f32 (kernel path
+        precondition, same contract as ``DynamicRMI.find``)."""
+        return all(d.f32_exact for d in self.shards)
+
+    @property
+    def total_live(self) -> int:
+        return int(self.live_counts().sum())
+
+    def live_counts(self) -> np.ndarray:
+        return np.asarray([d.live_count for d in self.shards], np.int64)
+
+    def live_keys(self) -> np.ndarray:
+        """Sorted live keys across every shard (host; ``find``'s global
+        rank indexes exactly this array)."""
+        return np.concatenate([d.live_keys() for d in self.shards])
+
+    # -- mutation ----------------------------------------------------------
+    def _route(self, keys: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.splits, keys, side="left")
+
+    def insert_batch(self, keys) -> None:
+        """Host pre-bucket by the split vector, one device merge per touched
+        shard (each shard's ``DynamicRMI.insert_batch`` runs its own Lemma
+        4.1 budget accounting and pool-reuse rebuilds)."""
+        keys = np.asarray(keys, np.float64).ravel()
+        if keys.size == 0:
+            return
+        dest = self._route(keys)
+        for s in np.unique(dest):
+            self.shards[s].insert_batch(keys[dest == s])
+        self._stack = None
+        self._maybe_rebalance()
+
+    def delete_batch(self, keys) -> None:
+        """Routed tombstone deletes (per-shard semantics — duplicates within
+        one batch collapse to a single removal, like ``DynamicRMI``)."""
+        keys = np.asarray(keys, np.float64).ravel()
+        if keys.size == 0:
+            return
+        dest = self._route(keys)
+        for s in np.unique(dest):
+            self.shards[s].delete_batch(keys[dest == s])
+        self._stack = None
+        self._maybe_rebalance()
+
+    # -- rebalance ---------------------------------------------------------
+    def _maybe_rebalance(self) -> None:
+        if self.rebalance_ratio is None or self.n_shards == 1:
+            return
+        live = self.live_counts().astype(np.float64)
+        mean = max(live.sum() / self.n_shards, 1.0)
+        hot, hot_tier = None, False
+        for s, d in enumerate(self.shards):
+            delta_frac = d.delta_live / max(d.live_count, 1)
+            tier = (delta_frac > self.rebalance_ratio
+                    or d.dead_fraction > self.rebalance_ratio)
+            skew = (live[s] > self.rebalance_skew * mean
+                    and self._skew_muted.get(s) != int(live[s]))
+            if tier or skew:
+                if hot is None or live[s] > live[hot]:
+                    hot, hot_tier = s, tier
+        if hot is None:
+            return
+        nb = [s for s in (hot - 1, hot + 1) if 0 <= s < self.n_shards]
+        if live[hot] >= min(live[s] for s in nb):
+            src, dst = hot, min(nb, key=lambda s: live[s])   # shed
+        else:
+            src, dst = max(nb, key=lambda s: live[s]), hot   # absorb
+        if self._migrate(src, dst):
+            self.rebalances += 1
+            self._stack = None
+            self._skew_muted.pop(src, None)
+            self._skew_muted.pop(dst, None)
+        elif not hot_tier:
+            # Unmovable skew (one giant duplicate run): mute this trigger
+            # at the current live count so every later batch doesn't pay a
+            # fruitless two-shard live_keys() sync.
+            self._skew_muted[hot] = int(live[hot])
+        else:
+            # Balanced live counts make migration a no-op, but a delta- or
+            # dead-ratio trigger can only clear through a merge/purge —
+            # rebuild the shard in place (delta merged, tombstones gone)
+            # so the trigger doesn't re-fire fruitlessly every batch.
+            self._rebuild_shard(hot, self.shards[hot].live_keys())
+            self.rebalances += 1
+            self._stack = None
+
+    def _migrate(self, src: int, dst: int) -> bool:
+        """Move ~half the live-count excess of ``src`` to adjacent ``dst``
+        as whole boundary runs, update the split between them, and rebuild
+        both shards from their live keys (fresh roots, tombstones purged,
+        pool reuse via the build path).  Cuts snap to run boundaries so the
+        strict-inequality routing invariant survives duplicate-heavy data;
+        a cut that would move everything (one giant run) is skipped."""
+        a = self.shards[src].live_keys()
+        b = self.shards[dst].live_keys()
+        m = int(a.size - b.size) // 2
+        if m <= 0 or a.size < 2:
+            return False
+        if dst == src + 1:
+            c = int(np.searchsorted(a, a[a.size - m], side="left"))
+            if c <= 0:
+                return False
+            src_keys, dst_keys = a[:c], np.concatenate([a[c:], b])
+            self.splits[src] = a[c - 1]
+        else:
+            c = int(np.searchsorted(a, a[m], side="left"))
+            if c <= 0:
+                return False
+            src_keys, dst_keys = a[c:], np.concatenate([b, a[:c]])
+            self.splits[dst] = a[c - 1]
+        self._rebuild_shard(src, src_keys)
+        self._rebuild_shard(dst, dst_keys)
+        return True
+
+    def _rebuild_shard(self, s: int, keys: np.ndarray) -> None:
+        from .updates import DynamicRMI
+        self.shards[s] = DynamicRMI.build(
+            jnp.asarray(keys), pool=self.pool, eps=self.eps,
+            n_leaves=self.n_leaves, **self.build_kwargs)
+
+    # -- serving -----------------------------------------------------------
+    def _stacked(self) -> dict:
+        """Stack the per-shard tiers into uniform device arrays (each shard
+        padded to the max base/delta capacity with +inf keys / zero
+        tombstones / edge-extended prefix sums).  Cached until the next
+        mutation; the packed kernel tables are a lazy sub-entry so jnp-path
+        consumers never pay for them."""
+        if self._stack is not None:
+            return self._stack
+        bcap = max(d.index.keys.shape[0] for d in self.shards)
+        dcap = max(d.delta_keys.shape[0] for d in self.shards)
+        padk = lambda a, c: jnp.pad(a, (0, c - a.shape[0]),
+                                    constant_values=jnp.inf)
+        padz = lambda a, c: jnp.pad(a, (0, c - a.shape[0]))
+        padp = lambda a, c: jnp.pad(a, (0, c + 1 - a.shape[0]), mode="edge")
+        stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+        live = self.live_counts()
+        offs = np.zeros(self.n_shards, np.int64)
+        np.cumsum(live[:-1], out=offs[1:])
+        self._stack = dict(
+            splits=jnp.asarray(self.splits),
+            offs=jnp.asarray(offs, jnp.int32),
+            route_n=jnp.asarray([d.route_n for d in self.shards],
+                                jnp.float64),
+            base=jnp.stack([padk(d.index.keys, bcap) for d in self.shards]),
+            bdead=jnp.stack([padz(d.base_dead, bcap) for d in self.shards]),
+            bpsum=jnp.stack([padp(d.base_psum, bcap) for d in self.shards]),
+            dk=jnp.stack([padk(d.delta_keys, dcap) for d in self.shards]),
+            ddead=jnp.stack([padz(d.delta_dead, dcap) for d in self.shards]),
+            dpsum=jnp.stack([padp(d.delta_psum, dcap) for d in self.shards]),
+            root=stack([d.index.root for d in self.shards]),
+            leaves=stack([d.index.leaves for d in self.shards]),
+            err_lo=jnp.stack([d.index.err_lo for d in self.shards]),
+            err_hi=jnp.stack([d.index.err_hi for d in self.shards]),
+            leaf_kind=self.shards[0].index.leaf_kind,
+            iters=max(d.index.search_iters for d in self.shards),
+            packed=None)
+        return self._stack
+
+    def _packed_stack(self, st: dict) -> tuple:
+        """Stacked per-shard kernel tables: mat/vec ride each shard's cached
+        ``RMIIndex.packed_tables``; the root block re-packs with that
+        shard's frozen routing scale folded in (``route_scale``), so the
+        kernel traces once with static ``route_n = n_leaves``."""
+        if st["packed"] is None:
+            from ..kernels import lookup as _lk
+            kroot, kmat, kvec = [], [], []
+            for d in self.shards:
+                _, mat, vec = d.index.packed_tables()
+                kroot.append(_lk.pack_root(
+                    d.index.root_kind, d.index.root,
+                    route_scale=self.n_leaves / d.route_n))
+                kmat.append(mat)
+                kvec.append(vec)
+            st["packed"] = (jnp.stack(kroot), jnp.stack(kmat),
+                            jnp.stack(kvec))
+        return st["packed"]
+
+    def find(self, queries, *, use_kernel: bool | None = None,
+             interpret: bool | None = None) -> tuple[Array, Array]:
+        """(found, global live rank) per query, one ``shard_map`` dispatch:
+        queries route to their owning shard by the split vector (capacity-
+        bucketed ``all_to_all``), the owner answers with its fused two-tier
+        find — the ``dynamic_lookup_pallas`` kernel via ``ops.dynamic_find``
+        or the jnp oracle — and the globalized answer returns through the
+        inverse exchange.  Path-selection contract mirrors
+        ``DynamicRMI.find`` (kernel default on TPU + f32-exact tiers)."""
+        q = jnp.asarray(queries, jnp.float64)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
+        elif use_kernel and not self.f32_exact:
+            raise ValueError(
+                "use_kernel=True on a sharded key space that is not "
+                "f32-exact: the kernel's f32 search cannot distinguish "
+                "f32-colliding keys")
+        st = self._stacked()
+        Q = q.shape[0]
+        qp = -(-max(Q, 1) // self.n_shards) * self.n_shards
+        if qp != Q:
+            q = jnp.pad(q, (0, qp - Q))      # 0.0 pads; sliced off below
+        fn = _sharded_dynamic_find_fn(
+            self.mesh, self.axis, n_leaves=self.n_leaves,
+            leaf_kind=st["leaf_kind"], iters=st["iters"],
+            use_kernel=bool(use_kernel),
+            interpret=interpret if interpret is None else bool(interpret))
+        tables = self._packed_stack(st) if use_kernel else \
+            (st["root"], st["leaves"], st["err_lo"], st["err_hi"])
+        found, rank = fn(st["splits"], st["offs"], st["route_n"], st["base"],
+                         st["bdead"], st["bpsum"], st["dk"], st["ddead"],
+                         st["dpsum"], tables, q)
+        return found[:Q], rank[:Q]
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_dynamic_find_fn(mesh: Mesh, axis: str, *, n_leaves: int,
+                             leaf_kind: str, iters: int, use_kernel: bool,
+                             interpret: bool | None):
+    """Jitted shard_map program for ``ShardedDynamicIndex.find``.  Cached on
+    the static configuration so a mutate/find churn loop only re-traces when
+    a capacity (array shape) actually crosses a power of two."""
+    n_shards = mesh.shape[axis]
+
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+
+        def local_find(tables, route_n, base, bdead, bpsum, dk, ddead,
+                       dpsum, q):
+            kroot, kmat, kvec = tables
+            return kernel_ops.dynamic_find(
+                q, kroot, kmat, kvec, base, bdead, bpsum, dk, ddead, dpsum,
+                n_leaves=n_leaves, route_n=n_leaves, root_kind="linear",
+                leaf_kind=leaf_kind, iters=iters, interpret=interpret)
+    else:
+        from . import updates as updates_mod
+
+        def local_find(tables, route_n, base, bdead, bpsum, dk, ddead,
+                       dpsum, q):
+            root, leaves, elo, ehi = tables
+            # f64 two-tier find (``updates._find_jit`` semantics) with the
+            # frozen routing scale as a *traced* per-shard scalar — the
+            # static-route_n jit cannot serve shards with different build
+            # sizes under one shard_map trace.  Everything past this
+            # routing line is the shared updates leaf_window /
+            # two_tier_answer pair.
+            b = jnp.clip((rmi_mod.models.linear_predict(root, q)
+                          * n_leaves / route_n).astype(jnp.int32),
+                         0, n_leaves - 1)
+            lo, hi = updates_mod.leaf_window(leaves, elo, ehi, b, q,
+                                             base.shape[0], leaf_kind)
+            found, rank, _ = updates_mod.two_tier_answer(
+                base, bpsum, dk, dpsum, q, lo, hi, iters)
+            return found, rank
+
+    def shard_fn(splits, offs, route_n, base, bdead, bpsum, dk, ddead,
+                 dpsum, tables, q_local):
+        def answer(rq, live):
+            # +inf exchange pads mask to a member key (0.0 on an empty
+            # shard's all-+inf block) so they never blow the sparse seam
+            # budget; their answers are forced dead here.
+            member = jnp.where(jnp.isfinite(base[0][0]), base[0][0], 0.0)
+            qm = jnp.where(live, rq, member)
+            found, rank = local_find(jax.tree.map(lambda a: a[0], tables),
+                                     route_n[0], base[0], bdead[0],
+                                     bpsum[0], dk[0], ddead[0], dpsum[0],
+                                     qm)
+            rank = jnp.where(live, rank.astype(jnp.int32) + offs[0], 0)
+            return jnp.stack([rank, (found & live).astype(jnp.int32)],
+                             axis=-1)
+
+        rank, found = _routed_exchange(axis, n_shards, splits, q_local,
+                                       q_local.shape[0], answer, (0, 0))
+        return found.astype(bool), rank
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)), check_vma=True)
+    return jax.jit(fn)

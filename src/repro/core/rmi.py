@@ -476,6 +476,32 @@ def build_rmi(
     """
     keys = jnp.asarray(keys, jnp.float64)
     n = keys.shape[0]
+    if n == 0:
+        # Empty partition: sharded builds produce empty shards when n is
+        # smaller than the shard count or when equal-count boundaries snap
+        # to duplicate-run edges (core.distributed.shard_bounds).  Return a
+        # trivial index with zero models and one-slot error windows: every
+        # key slot a consumer pads in is +inf, so any finite query resolves
+        # to position 0 and seam verification never fires.  Shapes match a
+        # real build exactly, so per-shard stacking stays uniform.
+        if root_kind != "linear":
+            raise ValueError("build_rmi on an empty key array requires a "
+                             "linear root (nothing to train an MLP root on)")
+        zero = jnp.zeros((), jnp.float64)
+        if kind == "linear":
+            leaves = models.LinearParams(a=jnp.zeros((n_leaves,), jnp.float64),
+                                         b=jnp.zeros((n_leaves,), jnp.float64))
+        else:
+            leaves = jax.tree.map(
+                lambda a: jnp.zeros((n_leaves,) + a.shape, jnp.float64),
+                models.mlp_init(jax.random.PRNGKey(0)))
+        ones = jnp.ones((n_leaves,), jnp.float64)
+        return RMIIndex(keys=keys, root_kind=root_kind,
+                        root=models.LinearParams(a=zero, b=zero),
+                        leaf_kind=kind, leaves=leaves,
+                        err_lo=-ones, err_hi=ones, n_leaves=n_leaves,
+                        reused_mask=jnp.zeros((n_leaves,), bool),
+                        leaf_sim=ones)
     pos = jnp.arange(n, dtype=jnp.float64)
 
     # ---- root -----------------------------------------------------------

@@ -225,6 +225,39 @@ def _delete_jit(base_keys: Array, base_dead: Array, dk: Array, ddead: Array,
     return new_bdead, new_ddead, nb, ndel
 
 
+def leaf_window(leaves, err_lo, err_hi, b, q, n: int, leaf_kind: str):
+    """Routed-leaf predict + error-bound window clip (shared by
+    :func:`_find_jit` and the sharded per-shard path in
+    ``core.distributed`` — only the *routing* that produces ``b``
+    differs between them)."""
+    p = jax.tree.map(lambda a: a[b], leaves)
+    if leaf_kind == "linear":
+        pred = models.linear_predict(p, q)
+    else:
+        h = jax.nn.relu(q[:, None] * p.w1 + p.b1)
+        pred = jnp.sum(h * p.w2, -1) + p.b2
+    lo = jnp.clip(jnp.floor(pred + err_lo[b]), 0, n - 1).astype(jnp.int32)
+    hi = jnp.clip(jnp.ceil(pred + err_hi[b]) + 1, 1, n).astype(jnp.int32)
+    return lo, hi
+
+
+def two_tier_answer(base_keys, base_psum, dk, dpsum, q, lo, hi, iters: int):
+    """The two-tier find tail, shared by :func:`_find_jit` and the sharded
+    per-shard jnp path (``core.distributed``): seam-verified base window
+    search, then the tombstone-mask / live-rank algebra.  A hit is any
+    *live* entry in the equal-key run [pos, right): count live slots via
+    the tombstone prefix sums (robust to partially tombstoned duplicate
+    runs).  Returns (found, rank, base_pos)."""
+    pos = rmi_mod.verified_search(base_keys, q, lo, hi, iters=iters)
+    bhi = jnp.searchsorted(base_keys, q, side="right").astype(jnp.int32)
+    base_hit = (bhi - pos) > (base_psum[bhi] - base_psum[pos])
+    dpos = jnp.searchsorted(dk, q, side="left").astype(jnp.int32)
+    dhi = jnp.searchsorted(dk, q, side="right").astype(jnp.int32)
+    delta_hit = (dhi - dpos) > (dpsum[dhi] - dpsum[dpos])
+    rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
+    return base_hit | delta_hit, rank, pos
+
+
 @functools.partial(jax.jit, static_argnames=(
     "root_kind", "leaf_kind", "n_leaves", "route_n", "iters"))
 def _find_jit(root, leaves, err_lo, err_hi, base_keys, base_dead, base_psum,
@@ -234,25 +267,8 @@ def _find_jit(root, leaves, err_lo, err_hi, base_keys, base_dead, base_psum,
     probe + tombstone mask, one jit. Returns (found, rank, base_pos)."""
     n = base_keys.shape[0]
     b = rmi_mod.root_buckets(root_kind, root, q, n_leaves, route_n)
-    p = jax.tree.map(lambda a: a[b], leaves)
-    if leaf_kind == "linear":
-        pred = models.linear_predict(p, q)
-    else:
-        h = jax.nn.relu(q[:, None] * p.w1 + p.b1)
-        pred = jnp.sum(h * p.w2, -1) + p.b2
-    lo = jnp.clip(jnp.floor(pred + err_lo[b]), 0, n - 1).astype(jnp.int32)
-    hi = jnp.clip(jnp.ceil(pred + err_hi[b]) + 1, 1, n).astype(jnp.int32)
-    pos = rmi_mod.verified_search(base_keys, q, lo, hi, iters=iters)
-    # A hit is any *live* entry in the equal-key run [pos, right): count
-    # live slots via the tombstone prefix sums (robust to partially
-    # tombstoned duplicate runs).
-    bhi = jnp.searchsorted(base_keys, q, side="right").astype(jnp.int32)
-    base_hit = (bhi - pos) > (base_psum[bhi] - base_psum[pos])
-    dpos = jnp.searchsorted(dk, q, side="left").astype(jnp.int32)
-    dhi = jnp.searchsorted(dk, q, side="right").astype(jnp.int32)
-    delta_hit = (dhi - dpos) > (dpsum[dhi] - dpsum[dpos])
-    rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
-    return base_hit | delta_hit, rank, pos
+    lo, hi = leaf_window(leaves, err_lo, err_hi, b, q, n, leaf_kind)
+    return two_tier_answer(base_keys, base_psum, dk, dpsum, q, lo, hi, iters)
 
 
 @functools.partial(jax.jit, static_argnames=("root_kind", "n_leaves",
@@ -381,9 +397,14 @@ class DynamicRMI:
               **rmi_kwargs):
         idx = rmi_mod.build_rmi(keys, pool=pool, **rmi_kwargs)
         n = idx.n
+        # Frozen routing scale: floor at 1 so an empty build (a sharded
+        # index's empty shard) keeps a well-defined key->leaf hash — its
+        # zero root sends everything to leaf 0, which stays consistent
+        # between insert- and find-time routing.
+        route_n = max(n, 1)
         counts = np.bincount(
             np.asarray(rmi_mod.root_buckets(idx.root_kind, idx.root, idx.keys,
-                                            idx.n_leaves, n)),
+                                            idx.n_leaves, route_n)),
             minlength=idx.n_leaves)
         budget = np.array(insertion_budget(
             jnp.asarray(idx.leaf_sim), jnp.float64(eps),
@@ -395,7 +416,7 @@ class DynamicRMI:
         padded = jnp.concatenate(
             [idx.keys, jnp.full((cap - n,), jnp.inf, idx.keys.dtype)])
         idx = replace(idx, keys=padded, _f32_exact=None, _packed=None)
-        d = cls(index=idx, pool=pool, eps=eps, route_n=n, base_n=n,
+        d = cls(index=idx, pool=pool, eps=eps, route_n=route_n, base_n=n,
                 reuse_on_rebuild=reuse_on_rebuild,
                 compact_dead_ratio=compact_dead_ratio,
                 delta_keys=jnp.full((_MIN_CAP,), jnp.inf, jnp.float64),
@@ -633,13 +654,12 @@ class DynamicRMI:
         if use_kernel:
             from ..kernels import ops as kernel_ops
             root, mat, vec = idx.packed_tables()
-            found, rank, _, _ = kernel_ops.dynamic_index_lookup(
+            return kernel_ops.dynamic_find(
                 q, root, mat, vec, idx.keys, self.base_dead, self.base_psum,
                 self.delta_keys, self.delta_dead, self.delta_psum,
                 n_leaves=idx.n_leaves, route_n=self.route_n,
                 root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
                 iters=idx.search_iters)
-            return found, rank
         found, rank, _ = _find_jit(
             idx.root, idx.leaves, idx.err_lo, idx.err_hi, idx.keys,
             self.base_dead, self.base_psum, self.delta_keys, self.delta_dead,
@@ -660,6 +680,19 @@ class DynamicRMI:
     @property
     def total_buffered(self) -> int:
         return int(self.delta_live)
+
+    @property
+    def live_count(self) -> int:
+        """Live keys across both tiers (what ``find``'s rank indexes) —
+        host counters only, no device sync."""
+        return self.base_n - self.base_dead_count + self.delta_live
+
+    @property
+    def dead_fraction(self) -> float:
+        """Tombstoned fraction of all stored (finite) entries — the sharded
+        index's rebalance trigger reads this."""
+        stored = self.base_n + self.delta_live + self.delta_dead_count
+        return (self.base_dead_count + self.delta_dead_count) / max(stored, 1)
 
 
 # ---------------------------------------------------------------------------

@@ -87,20 +87,29 @@ def full_iters(n_keys: int) -> int:
     return int(math.ceil(math.log2(max(n_keys, 2)))) + 1
 
 
-def pack_root(root_kind: str, params) -> jax.Array:
+def pack_root(root_kind: str, params, route_scale: float = 1.0) -> jax.Array:
     """(ROOT_ROWS, 128) f32 block holding the root model.
 
     linear: [0,0]=a, [3,0]=b.   mlp: rows 0/1/2 = w1/b1/w2 (H lanes), [3,0]=b2.
+
+    ``route_scale`` folds a routing rescale into the packed model (the
+    *output* layer for the MLP), so callers whose frozen routing scale
+    differs per table — the sharded dynamic path stacks shards with
+    different ``route_n`` under one statically-traced kernel — can pack
+    scale = kernel_route_n / shard_route_n and trace a single kernel with
+    ``route_n = kernel_route_n``.  Routing runs in f32 either way and every
+    final position is seam-verified, so the fold never changes results.
     """
+    s = jnp.float64(route_scale)
     blk = jnp.zeros((ROOT_ROWS, 128), jnp.float32)
     if root_kind == "linear":
-        blk = blk.at[0, 0].set(params.a.astype(jnp.float32))
-        blk = blk.at[3, 0].set(params.b.astype(jnp.float32))
+        blk = blk.at[0, 0].set((params.a * s).astype(jnp.float32))
+        blk = blk.at[3, 0].set((params.b * s).astype(jnp.float32))
     else:
         blk = blk.at[0, :H].set(params.w1.astype(jnp.float32))
         blk = blk.at[1, :H].set(params.b1.astype(jnp.float32))
-        blk = blk.at[2, :H].set(params.w2.astype(jnp.float32))
-        blk = blk.at[3, 0].set(params.b2.astype(jnp.float32))
+        blk = blk.at[2, :H].set((params.w2 * s).astype(jnp.float32))
+        blk = blk.at[3, 0].set((params.b2 * s).astype(jnp.float32))
     return blk
 
 

@@ -225,6 +225,20 @@ def dynamic_index_lookup(queries, root, mat, vec, keys, base_dead, base_psum,
                                seam_budget=seam_budget)
 
 
+def dynamic_find(queries, root, mat, vec, keys, base_dead, base_psum,
+                 delta_keys, delta_dead, delta_psum, **kw):
+    """The two-tier serving answer alone: (found, rank) of
+    :func:`dynamic_index_lookup`, without the positional diagnostics.
+    Shared by ``core.updates.DynamicRMI.find`` and the per-shard dispatch of
+    ``core.distributed.ShardedDynamicIndex`` (which packs per-shard routing
+    scales into the root block — ``lookup.pack_root(route_scale=...)`` — and
+    traces this once with a uniform static ``route_n``)."""
+    found, rank, _, _ = dynamic_index_lookup(
+        queries, root, mat, vec, keys, base_dead, base_psum, delta_keys,
+        delta_dead, delta_psum, **kw)
+    return found, rank
+
+
 @functools.partial(jax.jit, static_argnames=(
     "n_leaves", "route_n", "root_kind", "leaf_kind", "iters", "tile",
     "interpret", "seam_budget"))

@@ -208,3 +208,29 @@ def dynamic_lookup_ref(queries, root, mat, vec, keys, delta_keys, *,
 
     dl, _ = jax.lax.fori_loop(0, _lk.full_iters(nd), dbody, (dl, dh))
     return out, dl
+
+
+def dynamic_find_ref(queries, keys, base_dead, base_psum, delta_keys,
+                     delta_dead, delta_psum) -> tuple:
+    """Oracle for ops.dynamic_find's (found, rank): the same f32 tombstone /
+    two-tier live-rank algebra as ``ops._dynamic_lookup_jit``, with exact
+    searchsorted boundaries in place of the kernel positions — the seam
+    verification pins every valid kernel position to exactly this boundary,
+    so ops.dynamic_find must match bit-for-bit on f32-exact tiers.  Model
+    tables don't enter: routing only picks the (seam-verified) window."""
+    from . import lookup as _lk
+
+    kf = keys.astype(jnp.float32)
+    qf = queries.astype(jnp.float32)
+    pos = jnp.searchsorted(kf, qf, side="left").astype(jnp.int32)
+    bhi = jnp.searchsorted(kf, qf, side="right").astype(jnp.int32)
+    base_hit = (bhi - pos) > (base_psum[bhi] - base_psum[pos])
+    df = _lk.pad_delta(delta_keys)
+    nd = df.shape[0]
+    dpos = jnp.searchsorted(df, qf, side="left").astype(jnp.int32)
+    dhi = jnp.searchsorted(df, qf, side="right").astype(jnp.int32)
+    dpsum = jnp.pad(delta_psum, (0, nd + 1 - delta_psum.shape[0]),
+                    mode="edge")
+    delta_hit = (dhi - dpos) > (dpsum[dhi] - dpsum[dpos])
+    rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
+    return base_hit | delta_hit, rank

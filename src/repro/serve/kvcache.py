@@ -133,15 +133,21 @@ class DynamicPageTable:
     find (base window search + delta probe + tombstone mask) plus a gather.
     """
     cache: PagedKVCache
-    dyn: object = None                   # core.updates.DynamicRMI
+    dyn: object = None                   # DynamicRMI or ShardedDynamicIndex
     _keys: np.ndarray = None             # sorted live block keys
     _pages: np.ndarray = None            # aligned physical page ids
 
     @classmethod
-    def build(cls, cache: PagedKVCache, **rmi_kwargs):
+    def build(cls, cache: PagedKVCache, mesh=None, axis: str = "data",
+              **rmi_kwargs):
         """Bootstrap over the cache's current (non-empty) table; subsequent
-        allocations ride the delta tier until Lemma 4.1 triggers merges."""
-        from repro.core.updates import DynamicRMI
+        allocations ride the delta tier until Lemma 4.1 triggers merges.
+
+        With ``mesh`` given, the table rides the *sharded* dynamic index
+        (``core.distributed.ShardedDynamicIndex``): same batched
+        insert/delete/find surface, but block keys range-partition across
+        the mesh axis and lookups dispatch per shard under shard_map —
+        the serving control plane at multi-host scale."""
         items = sorted(cache.table.items())
         if not items:
             raise ValueError("DynamicPageTable.build needs a primed cache")
@@ -149,7 +155,13 @@ class DynamicPageTable:
                            for (r, b), _ in items])
         pages = np.asarray([p for _, p in items], np.int32)
         rmi_kwargs.setdefault("n_leaves", max(len(items) // 64, 1))
-        dyn = DynamicRMI.build(jnp.asarray(keys), **rmi_kwargs)
+        if mesh is not None:
+            from repro.core.distributed import ShardedDynamicIndex
+            dyn = ShardedDynamicIndex.build(jnp.asarray(keys), mesh,
+                                            axis=axis, **rmi_kwargs)
+        else:
+            from repro.core.updates import DynamicRMI
+            dyn = DynamicRMI.build(jnp.asarray(keys), **rmi_kwargs)
         return cls(cache=cache, dyn=dyn, _keys=keys, _pages=pages)
 
     def allocate(self, req: int, logical_blocks) -> np.ndarray:

@@ -1,0 +1,23 @@
+"""Shared test fixtures/helpers.
+
+``run_mesh_script`` is the forced-host-device-count subprocess harness used
+by every multi-device suite (the XLA host device count locks at the first
+jax init in a process, so any test needing an n>1 CPU mesh re-execs the
+script in a fresh interpreter; the script itself sets XLA_FLAGS before
+importing jax).
+"""
+import os
+import subprocess
+import sys
+
+
+def run_mesh_script(script: str, marker: str, timeout: int = 900) -> None:
+    """Run ``script`` with `python -c` (PYTHONPATH=src, inherited XLA_FLAGS
+    stripped so the script's own forced device count wins) and assert it
+    exits 0 with ``marker`` on stdout."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert marker in proc.stdout, proc.stdout[-2000:]

@@ -9,11 +9,9 @@ shard inside ``shard_map``; the jnp path is the clamped ``verified_search``
 — both must return identical global ranks, and those ranks must match the
 brute-force searchsorted truth on the concatenated live keys.
 """
-import os
-import subprocess
-import sys
-
 import pytest
+
+from conftest import run_mesh_script
 
 pytestmark = pytest.mark.kernel
 
@@ -75,14 +73,8 @@ print("DIST_OK ndev=%(ndev)d")
 """
 
 
-def _run(ndev: int, timeout: int = 900):
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT % {"ndev": ndev}],
-                          env=env, capture_output=True, text=True,
-                          timeout=timeout)
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    assert f"DIST_OK ndev={ndev}" in proc.stdout, proc.stdout[-2000:]
+def _run(ndev: int):
+    run_mesh_script(_SCRIPT % {"ndev": ndev}, f"DIST_OK ndev={ndev}")
 
 
 @pytest.mark.parametrize("ndev", [1, 2])
@@ -94,3 +86,77 @@ def test_distributed_kernel_parity_small_mesh(ndev):
 @pytest.mark.parametrize("ndev", [4, 8])
 def test_distributed_kernel_parity_large_mesh(ndev):
     _run(ndev)
+
+
+_EDGE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+ndev = %(ndev)d
+rng = np.random.default_rng(51 + ndev)
+mesh = jax.make_mesh((ndev,), ("data",))
+
+def decode_check(idx, keys, q):
+    cap = idx.keys.shape[1]
+    valid = np.asarray(idx.valid)
+    assert valid.sum() == keys.size
+    for uk in (False, True):
+        fn = distributed.make_lookup_fn(idx, use_kernel=uk)
+        r = np.asarray(fn(jnp.asarray(q)))
+        shard, local = r // cap, r %% cap
+        glob = np.concatenate([[0], np.cumsum(valid)])[shard] + local
+        np.testing.assert_array_equal(
+            glob, np.searchsorted(keys, q, side="left"),
+            err_msg="use_kernel=%%s" %% uk)
+
+# ---- empty shards: n < n_shards and n barely above it -----------------
+for n in (3, ndev + 1):
+    keys = np.unique(rng.uniform(1.0, 1e5, n).astype(np.float32)) \
+        .astype(np.float64)
+    idx = distributed.build_sharded(jnp.asarray(keys), mesh, n_leaves=16)
+    splits = np.asarray(idx.splits)
+    assert (np.diff(splits) >= 0).all(), "splits must stay monotone"
+    q = np.concatenate([keys, [0.0, keys[0] / 2, keys[-1] * 2],
+                        (keys[:-1] + keys[1:]) / 2])
+    q = np.resize(q, -(-q.size // ndev) * ndev)
+    decode_check(idx, keys, q)
+
+# ---- seam duplicates: equal-key runs longer than a balanced shard -----
+vals = np.unique(rng.uniform(0, 1e5, 29).astype(np.float32)) \
+    .astype(np.float64)
+keys = np.sort(rng.choice(vals, 16_000))
+idx = distributed.build_sharded(jnp.asarray(keys), mesh, n_leaves=32)
+valid = np.asarray(idx.valid)
+splits = np.asarray(idx.splits)
+starts = np.concatenate([[0], np.cumsum(valid)])
+for s in range(ndev - 1):       # no run straddles a seam: strict inequality
+    if valid[s + 1]:
+        assert keys[starts[s + 1]] > splits[s], (s, keys[starts[s + 1]])
+q = np.concatenate([vals, rng.choice(keys, 1000),
+                    [keys[0] - 1.0, keys[-1] + 1.0]])
+q = rng.permutation(np.resize(q, -(-q.size // ndev) * ndev))
+decode_check(idx, keys, q)      # duplicated keys: global leftmost rank
+print("EDGE_OK ndev=%(ndev)d")
+"""
+
+
+def _run_edge(ndev: int):
+    run_mesh_script(_EDGE_SCRIPT % {"ndev": ndev}, f"EDGE_OK ndev={ndev}")
+
+
+@pytest.mark.parametrize("ndev", [2])
+def test_build_sharded_empty_shards_and_seam_duplicates(ndev):
+    """Regression: build_sharded with empty shards (n < n_shards) and
+    equal-key runs straddling naive equal-count boundaries — splits snap to
+    run starts, stay monotone, and every query answers the global leftmost
+    searchsorted rank on both lookup paths."""
+    _run_edge(ndev)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [1, 4, 8])
+def test_build_sharded_edge_meshes(ndev):
+    _run_edge(ndev)

@@ -1,0 +1,201 @@
+"""Sharded dynamic index: interleaved insert/delete/find churn differential
+against a flat sorted-array oracle on 1/2/4/8-device CPU meshes.
+
+Each mesh size runs in a subprocess (device count locks at first jax init,
+like tests/test_distributed.py).  Every round of churn asserts — for BOTH
+the kernel-interpret and jnp per-shard paths — that ``find``'s (found, rank)
+matches the brute-force multiset truth on the concatenated live keys
+bit-exactly, including seam/split queries, out-of-range extremes, duplicate
+keys, a delete-all-of-one-shard drain, and a rebalance-triggering skewed
+ingest (keys are f32-exact throughout so the kernel's f32 boundary
+coincides with the f64 truth).
+"""
+import pytest
+
+from conftest import run_mesh_script
+
+pytestmark = pytest.mark.kernel
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+ndev = %(ndev)d
+rng = np.random.default_rng(29 + ndev)
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+base = f32keys(rng.lognormal(0, 0.8, 16_000) * 1e3)
+fresh = np.setdiff1d(f32keys(rng.lognormal(0, 0.8, 80_000) * 1e3), base)
+mesh = jax.make_mesh((ndev,), ("data",))
+idx = distributed.ShardedDynamicIndex.build(jnp.asarray(base), mesh,
+                                            n_leaves=64, eps=0.7)
+live = base.copy()
+
+def check(q, tag):
+    q = np.asarray(q, np.float64)
+    lo = np.searchsorted(live, q, side="left")
+    hi = np.searchsorted(live, q, side="right")
+    for uk in (False, True):
+        f, r = idx.find(jnp.asarray(q), use_kernel=uk)
+        np.testing.assert_array_equal(
+            np.asarray(r), lo, err_msg="rank %%s uk=%%s" %% (tag, uk))
+        np.testing.assert_array_equal(
+            np.asarray(f), hi > lo, err_msg="found %%s uk=%%s" %% (tag, uk))
+
+def queries(n=701):                      # odd n: exercises the Q padding
+    mem = rng.choice(live, n - 32) if live.size else np.zeros(n - 32)
+    seams = np.asarray(idx.splits, np.float64) if idx.n_shards > 1 \
+        else np.zeros(0)
+    oor = np.asarray([0.0, -1e9, 1e30, live[0] / 2 if live.size else 1.0,
+                      (live[-1] * 2) if live.size else 2.0], np.float32)
+    miss = rng.choice(fresh, 27)
+    return rng.permutation(np.concatenate(
+        [mem, seams, oor.astype(np.float64), miss]))[:n]
+
+def oracle_delete(live, batch):
+    # DynamicRMI semantics: duplicates within one batch collapse to one
+    # removal; each unique key retires its leftmost live occurrence.
+    for k in np.unique(batch):
+        i = np.searchsorted(live, k, side="left")
+        if i < live.size and live[i] == k:
+            live = np.delete(live, i)
+    return live
+
+check(queries(), "fresh")
+
+# ---- interleaved churn: inserts (incl. duplicates of live keys), deletes
+# (incl. misses), find after every round --------------------------------
+ptr = 0
+for rnd in range(4):
+    ins = fresh[ptr:ptr + 1500]; ptr += 1500
+    dups = rng.choice(live, 64)          # multiset: duplicate inserts
+    batch = np.concatenate([ins, dups])
+    idx.insert_batch(batch)
+    live = np.sort(np.concatenate([live, batch]))
+    dels = np.concatenate([rng.choice(live, 400, replace=False),
+                           fresh[-8:]])  # misses are no-ops
+    idx.delete_batch(dels)
+    live = oracle_delete(live, dels)
+    check(queries(), "round %%d" %% rnd)
+
+# ---- delete-all-of-one-shard drain ------------------------------------
+if idx.n_shards > 1:
+    for _ in range(64):                  # duplicates need repeated batches
+        in0 = live[live <= idx.splits[0]]
+        if in0.size == 0:
+            break
+        batch = np.unique(in0)
+        idx.delete_batch(batch)
+        live = oracle_delete(live, batch)
+    check(queries(), "drain")
+
+# ---- rebalance-triggering skewed ingest -------------------------------
+span_hi = float(idx.splits[0]) if idx.n_shards > 1 else float(live[0])
+hot = np.setdiff1d(f32keys(rng.uniform(live[0] / 4, max(span_hi, live[0]),
+                                       30_000)), live)
+idx.insert_batch(hot)
+live = np.sort(np.concatenate([live, hot]))
+if idx.n_shards > 1:
+    assert idx.rebalances >= 1, "skewed ingest must trigger a rebalance"
+check(queries(), "skew")
+assert idx.total_live == live.size
+print("SHARDED_DYN_OK ndev=%(ndev)d")
+"""
+
+
+def _run(ndev: int):
+    run_mesh_script(_SCRIPT % {"ndev": ndev}, f"SHARDED_DYN_OK ndev={ndev}")
+
+
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_sharded_dynamic_churn_small_mesh(ndev):
+    _run(ndev)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [4, 8])
+def test_sharded_dynamic_churn_large_mesh(ndev):
+    _run(ndev)
+
+
+_EMPTY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+mesh = jax.make_mesh((8,), ("data",))
+base = np.asarray([1.0, 2.0, 5.0, 9.0, 12.0])   # n < n_shards: empty shards
+idx = distributed.ShardedDynamicIndex.build(jnp.asarray(base), mesh,
+                                            n_leaves=16, eps=0.7)
+live = base.copy()
+
+def check(q):
+    q = np.asarray(q, np.float64)
+    lo = np.searchsorted(live, q, side="left")
+    hi = np.searchsorted(live, q, side="right")
+    for uk in (False, True):
+        f, r = idx.find(jnp.asarray(q), use_kernel=uk)
+        np.testing.assert_array_equal(np.asarray(r), lo)
+        np.testing.assert_array_equal(np.asarray(f), hi > lo)
+
+check([0.5, 1.0, 2.0, 3.0, 9.0, 12.0, 100.0])
+# inserts routed into gaps and past the end (trailing empty shards)
+ins = np.asarray([0.25, 3.5, 20.0, 21.0, 22.0])
+idx.insert_batch(ins)
+live = np.sort(np.concatenate([live, ins]))
+check(np.concatenate([live, [0.0, 50.0, 2.5]]))
+print("EMPTY_OK")
+"""
+
+
+def test_sharded_dynamic_empty_shards():
+    """n < n_shards: empty shards build, serve, and absorb inserts."""
+    run_mesh_script(_EMPTY_SCRIPT, "EMPTY_OK")
+
+
+_DEAD_HOT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+rng = np.random.default_rng(9)
+base = np.unique(np.sort(rng.uniform(0, 1e6, 6000)).astype(np.float32)) \
+    .astype(np.float64)
+idx = distributed.ShardedDynamicIndex.build(
+    jnp.asarray(base), jax.make_mesh((2,), ("data",)), n_leaves=32, eps=0.7)
+live = base.copy()
+# Uniform deletes keep live counts balanced while every shard's dead
+# fraction climbs: migration can't help, so the trigger must resolve via
+# an in-place shard rebuild (tombstones purged) instead of re-firing a
+# fruitless migration on every batch.
+for _ in range(8):
+    dels = rng.choice(live, 500, replace=False)
+    idx.delete_batch(dels)
+    for k in np.unique(dels):
+        live = np.delete(live, np.searchsorted(live, k))
+assert idx.rebalances >= 1, "dead-hot trigger never resolved"
+assert max(d.dead_fraction for d in idx.shards) < 0.5
+q = np.concatenate([rng.choice(live, 500), rng.choice(base, 200)])
+lo = np.searchsorted(live, q, side="left")
+hi = np.searchsorted(live, q, side="right")
+for uk in (False, True):
+    f, r = idx.find(jnp.asarray(q), use_kernel=uk)
+    np.testing.assert_array_equal(np.asarray(r), lo)
+    np.testing.assert_array_equal(np.asarray(f), hi > lo)
+print("DEAD_HOT_OK")
+"""
+
+
+def test_sharded_dynamic_dead_hot_rebuilds_in_place():
+    """A delete-heavy workload with balanced shards must clear the dead
+    ratio via an in-place rebuild, keeping finds exact afterwards."""
+    run_mesh_script(_DEAD_HOT_SCRIPT, "DEAD_HOT_OK")

@@ -390,6 +390,82 @@ def test_dynamic_page_table_batched_alloc_release():
     assert not bool(f[0])
 
 
+@pytest.mark.kernel
+def test_dynamic_find_ref_parity():
+    """ops.dynamic_find (seam-fixed kernel positions + tombstone algebra)
+    must match ref.dynamic_find_ref (exact f32 searchsorted boundaries +
+    the same algebra) bit-exactly on a churned index: valid kernel
+    positions are pinned to the exact boundary by the seam verification."""
+    from repro.kernels import ops as kernel_ops
+    base = _f32_keys(12_288, seed=33)
+    d = DynamicRMI.build(jnp.asarray(base), eps=0.6, n_leaves=32,
+                         kind="linear")
+    ins = np.setdiff1d(_f32_keys(2_000, seed=34), base)
+    d.insert_batch(ins)
+    d.delete_batch(np.concatenate([RNG.choice(base, 100, replace=False),
+                                   ins[:40]]))
+    q = jnp.asarray(np.concatenate(
+        [RNG.choice(base, 400), RNG.choice(ins, 200),
+         _f32_keys(64, seed=35, hi=2.0)]))
+    idx = d.index
+    root, mat, vec = idx.packed_tables()
+    got_f, got_r = kernel_ops.dynamic_find(
+        q, root, mat, vec, idx.keys, d.base_dead, d.base_psum,
+        d.delta_keys, d.delta_dead, d.delta_psum, n_leaves=idx.n_leaves,
+        route_n=d.route_n, root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
+        iters=idx.search_iters)
+    want_f, want_r = ref.dynamic_find_ref(
+        q, idx.keys, d.base_dead, d.base_psum, d.delta_keys, d.delta_dead,
+        d.delta_psum)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_r), np.asarray(want_r))
+
+
+@pytest.mark.kernel
+def test_dynamic_page_table_sharded():
+    """DynamicPageTable rides the sharded dynamic index: a 1-device mesh in
+    the default process exercises the full routed insert/delete/find path
+    (multi-device meshes are covered by tests/test_sharded_dynamic.py)."""
+    import jax
+    from repro.serve.kvcache import DynamicPageTable, PagedKVCache
+    cache = PagedKVCache(n_pages=1024, page_size=16, n_kv_heads=2,
+                         head_dim=8, n_layers=1)
+    for r in range(4):
+        cache.allocate_batch(r, range(64))
+    mesh = jax.make_mesh((1,), ("data",))
+    t = DynamicPageTable.build(cache, mesh=mesh, eps=0.5, kind="linear")
+    from repro.core.distributed import ShardedDynamicIndex
+    assert isinstance(t.dyn, ShardedDynamicIndex)
+    pages = t.allocate(4, range(32))
+    f, pg = t.lookup(np.asarray([(4 << 22) | 7, (1 << 22) | 33],
+                                np.float64))
+    assert bool(f[0]) and bool(f[1])
+    assert pg[0] == pages[7] and pg[1] == cache.table[(1, 33)]
+    t.release(1)
+    f, _ = t.lookup(np.asarray([(1 << 22) | 33], np.float64))
+    assert not bool(f[0])
+    t.allocate(5, range(16))
+    f, _ = t.lookup(np.asarray([(5 << 22) | 3], np.float64))
+    assert bool(f[0])
+
+
+def test_empty_build_accepts_inserts():
+    """An empty-built DynamicRMI (a sharded index's empty shard) serves
+    found=False / rank 0, then absorbs inserts through the normal
+    rebuild path."""
+    d = DynamicRMI.build(jnp.asarray(np.zeros(0)), eps=0.5, n_leaves=16,
+                         kind="linear")
+    assert d.live_count == 0
+    f, r = d.find(jnp.asarray([1.0, 100.0]))
+    assert not np.asarray(f).any() and (np.asarray(r) == 0).all()
+    ins = _f32_keys(300, seed=44)
+    d.insert_batch(ins)
+    _assert_find_exact(d, np.concatenate([ins[:100], [0.0, 2.0]]))
+    d.delete_batch(ins[:10])
+    _assert_find_exact(d, ins[:50])
+    assert d.live_count == ins.size - 10
+
+
 def test_indexed_dataset_append_and_delete(lin_pool):
     from repro.data.indexed_dataset import IndexedDataset
     ds = IndexedDataset.create(pool=lin_pool, eps=0.9, n_leaves=64)
