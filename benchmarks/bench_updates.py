@@ -24,6 +24,12 @@ Times ns/op for the §4 update subsystem and writes ``BENCH_updates.json``
                 n-host-device CPU mesh vs single-device DynamicRMI at equal
                 total keys (per-shard cost trajectory; runs in a worker
                 subprocess because the device count locks at first jax init)
+  restack       hot-shard maintenance sweep over 2/4/8-shard submeshes of
+                one forced 8-device mesh: restack-churn rows (one shard
+                takes every insert, rebalancing off) must stay ~flat in
+                shard count — the per-shard slice cache makes per-batch
+                restack work O(touched shards); migrate-skew rows count
+                incremental (delta-riding) vs full-rebuild migrations
 
 Rows *append* to ``BENCH_updates.json`` under ``trajectory``, keyed by
 (git sha, suite) — the committed baseline rows stay untouched.
@@ -251,6 +257,92 @@ def bench_sharded(n: int = 1 << 16, n_shards: int = 4,
     return rows
 
 
+def bench_restack(n: int = 1 << 16, shard_counts=(2, 4, 8),
+                  eps: float = 0.7) -> list[dict]:
+    """Hot-shard maintenance cost vs total shard count.
+
+    ``restack-churn``: every insert batch lands in ONE shard (rebalancing
+    off); per-round cost = the routed merge into that shard + the slice-
+    cache refresh the next ``find`` pays.  With the per-shard slice cache
+    the per-round maintenance work is O(touched shards) = O(1), so ns/key
+    must stay ~flat as the shard count grows — the pre-PR5 ``_stacked()``
+    re-padded and re-stacked every shard per mutation, scaling O(all).
+
+    ``migrate-skew``: the same ingest with rebalancing ON; the detail
+    reports incremental (delta-riding) vs full-rebuild migrations — the
+    common budget-respecting case must ride the receiver's delta tier, not
+    rebuild both shards from scratch.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import distributed
+
+    base = _keys(n)
+    rng = np.random.default_rng(4)
+    n_leaves = max(n // 256, 16)
+    rows: list[dict] = []
+
+    def _row(op, impl, ns, detail):
+        rows.append({"op": op, "impl": impl, "n_keys": int(base.size),
+                     "ns_per_op": round(ns, 1), "detail": detail})
+        print(f"{op:14s} {impl:14s} {ns:12.0f} ns/op  {detail}")
+
+    prime, batch, rounds = 8192, 512, 8
+    for S in shard_counts:
+        if S > len(jax.devices()):
+            continue
+        mesh = Mesh(np.asarray(jax.devices()[:S]), ("data",))
+
+        def _build(**kw):
+            return distributed.ShardedDynamicIndex.build(
+                jnp.asarray(base), mesh, n_leaves=n_leaves, eps=eps, **kw)
+
+        # fresh f32-exact keys inside shard 0's range (hot for every batch)
+        idx = _build(rebalance_ratio=None)
+        splits0 = float(idx.splits[0])
+        lo = base[0] / 2
+        hot = np.setdiff1d(
+            np.unique(rng.uniform(lo, splits0, prime + (rounds + 2) * batch
+                                  + 20_000).astype(np.float32))
+            .astype(np.float64), base)
+        q = jnp.asarray(rng.choice(base, 2048))
+
+        idx.insert_batch(hot[:prime])       # capacity ramp + jit warm
+        jax.block_until_ready(idx.find(q, use_kernel=False))
+        times = []
+        r0_rows, r0_full = idx.restack_rows, idx.restack_full
+        for r in range(rounds):
+            chunk = hot[prime + r * batch: prime + (r + 1) * batch]
+            t0 = time.time()
+            idx.insert_batch(chunk)
+            jax.block_until_ready(idx.find(q, use_kernel=False))
+            times.append(time.time() - t0)
+        _row("restack-churn", f"sharded-{S}",
+             float(np.median(times)) / batch * 1e9,
+             f"rounds={rounds} batch={batch} hot_shard=1/{S} "
+             f"rows_written={idx.restack_rows - r0_rows} "
+             f"full_restacks={idx.restack_full - r0_full}")
+
+        # skewed ingest with rebalancing on: migrations must ride the
+        # receiver's delta tier in the common case.  skew=1.5 because a
+        # pure-insert hot shard can never exceed 2x the mean on a 2-shard
+        # mesh (live_0 <= total) — 1.5 lets the 4/8-shard meshes trigger
+        # within this ingest volume (the 2-shard row is a negative
+        # control).
+        idx = _build(rebalance_skew=1.5)
+        t0 = time.time()
+        for r in range(8):
+            idx.insert_batch(hot[r * 2048:(r + 1) * 2048])
+        jax.block_until_ready(idx.find(q, use_kernel=False))
+        dt = time.time() - t0
+        _row("migrate-skew", f"sharded-{S}", dt / (8 * 2048) * 1e9,
+             f"ingest={8 * 2048} rebalances={idx.rebalances} "
+             f"migrations_incremental={idx.migrations_incremental} "
+             f"migrations_full={idx.migrations_full}")
+    return rows
+
+
 def _sharded_rows(n_shards: int, n: int) -> list[dict]:
     """Collect the sharded rows from a forced-device-count subprocess
     (harness.worker_rows — the host-device count locks at first jax
@@ -258,6 +350,14 @@ def _sharded_rows(n_shards: int, n: int) -> list[dict]:
     from . import harness
     return harness.worker_rows("benchmarks.bench_updates",
                                "--sharded-worker", n_shards, ["--n", n])
+
+
+def _restack_rows_worker(n_devices: int, n: int) -> list[dict]:
+    """Collect the restack/migration sweep from a forced-device-count
+    subprocess (shard counts 2/4/8 share one 8-device worker)."""
+    from . import harness
+    return harness.worker_rows("benchmarks.bench_updates",
+                               "--restack-worker", n_devices, ["--n", n])
 
 
 def quick_rows(n: int = 1 << 15) -> list[dict]:
@@ -274,6 +374,14 @@ def sharded_quick_rows(n: int = 1 << 15, n_shards: int = 4) -> list[dict]:
              "derived": r["detail"]} for r in _sharded_rows(n_shards, n)]
 
 
+def restack_quick_rows(n: int = 1 << 15, n_devices: int = 8) -> list[dict]:
+    """CSV rows for benchmarks.run's ``restack`` suite (subprocess mesh)."""
+    return [{"name": f"restack_{r['op']}_{r['impl']}",
+             "us_per_call": r["ns_per_op"] / 1e3,
+             "derived": r["detail"]}
+            for r in _restack_rows_worker(n_devices, n)]
+
+
 def main() -> None:
     from . import harness
     ap = argparse.ArgumentParser()
@@ -282,11 +390,17 @@ def main() -> None:
                     help="mesh width for the sharded rows (0 disables)")
     ap.add_argument("--sharded-worker", type=int, default=None,
                     help=argparse.SUPPRESS)   # internal: emit rows as JSON
+    ap.add_argument("--restack-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: emit rows as JSON
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_updates.json"))
     args = ap.parse_args()
     if args.sharded_worker:
         rows = bench_sharded(args.n, args.sharded_worker)
+        print(json.dumps(rows))
+        return
+    if args.restack_worker:
+        rows = bench_restack(args.n)
         print(json.dumps(rows))
         return
     rows = bench(args.n)
@@ -307,6 +421,16 @@ def main() -> None:
                      f"{args.shards}-host-device CPU mesh vs single-device "
                      f"DynamicRMI at equal total keys; pallas rows are "
                      f"interpreter (correctness-grade).")
+        rrows = _restack_rows_worker(8, min(args.n, 1 << 16))
+        if rrows:
+            harness.append_bench(
+                args.out, "restack", rrows,
+                note="Hot-shard maintenance sweep at equal total keys on "
+                     "one forced 8-host-device CPU mesh (2/4/8-shard "
+                     "submeshes): restack-churn rows must stay ~flat in "
+                     "shard count (per-shard slice cache, O(touched) "
+                     "restack); migrate-skew rows report incremental "
+                     "(delta-riding) vs full-rebuild migrations.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,169 @@
+"""CI guard for the committed BENCH_*.json perf trajectories.
+
+Three properties, enforced on every PR (ci.yml `bench-guard`):
+
+  1. **Schema**: each file is ``{meta, rows, trajectory?}``; baseline rows
+     carry the per-file required columns; every trajectory entry carries
+     (sha, suite, mode, date, rows).
+  2. **Keying**: trajectory entries are keyed by (git sha, suite) — the key
+     is unique, so one PR contributes at most one entry per suite and
+     re-runs replace instead of duplicating.
+  3. **Append-only history**: the append flow (``harness.append_bench``)
+     never mutates what a file already holds — exercised here by running a
+     real append against a scratch copy and asserting the pre-existing
+     document survives byte-identical.
+
+Run: ``PYTHONPATH=src python -m benchmarks.check_bench [files...]``
+Exits non-zero with one line per violation.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import re
+import sys
+import tempfile
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+# Required columns of the baseline/trajectory rows, per file.
+_ROW_KEYS = {
+    "BENCH_updates.json": {"op", "impl", "n_keys", "ns_per_op", "detail"},
+    "BENCH_lookup.json": {"variant", "n_keys", "path", "ns_per_query"},
+}
+
+_ENTRY_KEYS = {"sha", "suite", "mode", "date", "rows"}
+_DATE_RE = re.compile(r"^\d{4}-\d{2}-\d{2}$")
+
+
+def check_schema(path: Path, doc: object) -> list[str]:
+    """Structural checks (property 1 and 2). Returns human-readable
+    violations, empty when clean."""
+    errs: list[str] = []
+    name = path.name
+
+    def err(msg: str) -> None:
+        errs.append(f"{name}: {msg}")
+
+    if not isinstance(doc, dict):
+        return [f"{name}: top level must be an object, got {type(doc).__name__}"]
+    if not isinstance(doc.get("meta"), dict):
+        err("missing/invalid 'meta' object")
+    rows = doc.get("rows")
+    if not (isinstance(rows, list) and rows):
+        err("missing/empty baseline 'rows'")
+        rows = []
+    required = _ROW_KEYS.get(name, set())
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            err(f"rows[{i}] is not an object")
+        elif required - row.keys():
+            err(f"rows[{i}] missing columns {sorted(required - row.keys())}")
+
+    traj = doc.get("trajectory", [])
+    if not isinstance(traj, list):
+        err("'trajectory' must be a list")
+        traj = []
+    seen: set[tuple[str, str]] = set()
+    for i, entry in enumerate(traj):
+        if not isinstance(entry, dict):
+            err(f"trajectory[{i}] is not an object")
+            continue
+        missing = _ENTRY_KEYS - entry.keys()
+        if missing:
+            err(f"trajectory[{i}] missing fields {sorted(missing)}")
+            continue
+        if not _DATE_RE.match(str(entry["date"])):
+            err(f"trajectory[{i}] date {entry['date']!r} is not YYYY-MM-DD")
+        if not (isinstance(entry["rows"], list) and entry["rows"]):
+            err(f"trajectory[{i}] ({entry['sha']}, {entry['suite']}) has no rows")
+        else:
+            for j, row in enumerate(entry["rows"]):
+                if not isinstance(row, dict) or required - row.keys():
+                    bad = sorted(required - set(row)) if isinstance(row, dict) else "all"
+                    err(f"trajectory[{i}].rows[{j}] missing columns {bad}")
+                    break
+        key = (str(entry["sha"]), str(entry["suite"]))
+        if key in seen:
+            err(f"duplicate trajectory key {key} — append flow must replace")
+        seen.add(key)
+    return errs
+
+
+def check_append_immutable(path: Path) -> list[str]:
+    """Property 3: a real ``harness.append_bench`` run against a scratch
+    copy must leave every pre-existing byte of the document intact and must
+    replace (not duplicate) a re-appended (sha, suite) key."""
+    from . import harness
+
+    before = json.loads(path.read_text())
+    errs: list[str] = []
+    fake_rows = [{k: 0 for k in _ROW_KEYS.get(path.name, {"x"})}]
+    with tempfile.TemporaryDirectory() as td:
+        scratch = Path(td) / path.name
+        scratch.write_text(path.read_text())
+        harness.append_bench(scratch, "guard-selftest", copy.deepcopy(fake_rows))
+        after = json.loads(scratch.read_text())
+        if after.get("meta") != before.get("meta"):
+            errs.append(f"{path.name}: append flow mutated 'meta'")
+        if after.get("rows") != before.get("rows"):
+            errs.append(f"{path.name}: append flow mutated baseline 'rows'")
+        old_traj = before.get("trajectory", [])
+        new_traj = [
+            e for e in after.get("trajectory", []) if e.get("suite") != "guard-selftest"
+        ]
+        if new_traj != old_traj:
+            errs.append(
+                f"{path.name}: append flow mutated pre-existing trajectory entries"
+            )
+        # Re-append the same (sha, suite): must replace, not duplicate.
+        harness.append_bench(scratch, "guard-selftest", copy.deepcopy(fake_rows))
+        again = json.loads(scratch.read_text())
+        keys = [
+            (e.get("sha"), e.get("suite"))
+            for e in again.get("trajectory", [])
+            if e.get("suite") == "guard-selftest"
+        ]
+        if len(keys) != 1:
+            errs.append(
+                f"{path.name}: re-appending the same (sha, suite) left "
+                f"{len(keys)} entries, expected 1 (replace semantics)"
+            )
+    return errs
+
+
+def check_file(path: Path) -> list[str]:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path.name}: unreadable ({exc})"]
+    errs = check_schema(path, doc)
+    if not errs:
+        errs += check_append_immutable(path)
+    return errs
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    paths = [Path(a) for a in args] or sorted(_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures: list[str] = []
+    for path in paths:
+        errs = check_file(path)
+        failures += errs
+        traj = []
+        if not errs:
+            traj = json.loads(path.read_text()).get("trajectory", [])
+        status = "FAIL" if errs else f"ok ({len(traj)} trajectory entries)"
+        print(f"check_bench: {path.name}: {status}")
+    for msg in failures:
+        print(f"check_bench: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -85,15 +85,15 @@ def rmrt_rows(n: int = 200_000, q: int = 16_384):
 
 
 SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "sharded",
-          "kernels", "rmrt"]
+          "restack", "kernels", "rmrt"]
 
 # --record routes each suite's rows into the matching committed trajectory
 # (appended keyed by git sha + suite — never regenerated; see
 # harness.append_bench).
 _RECORD_TARGETS = {
     "fig7": "BENCH_updates.json", "updates": "BENCH_updates.json",
-    "sharded": "BENCH_updates.json", "kernels": "BENCH_lookup.json",
-    "rmrt": "BENCH_lookup.json",
+    "sharded": "BENCH_updates.json", "restack": "BENCH_updates.json",
+    "kernels": "BENCH_lookup.json", "rmrt": "BENCH_lookup.json",
 }
 
 
@@ -136,6 +136,10 @@ def main() -> None:
     if "sharded" in only:
         from . import bench_updates
         by_suite["sharded"] = bench_updates.sharded_quick_rows(
+            **({"n": args.n} if args.n else {}))
+    if "restack" in only:
+        from . import bench_updates
+        by_suite["restack"] = bench_updates.restack_quick_rows(
             **({"n": args.n} if args.n else {}))
     if "kernels" in only:
         by_suite["kernels"] = kernel_rows(

@@ -8,7 +8,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.core import reuse, synth

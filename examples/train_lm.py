@@ -10,7 +10,6 @@ import os
 import tempfile
 
 import repro  # noqa: F401
-from repro.configs.reduced import reduced
 from repro.launch.train import train
 
 

@@ -15,8 +15,7 @@ roofline's useful-FLOPs ratio (EXPERIMENTS.md).
 from __future__ import annotations
 
 import importlib
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -41,6 +41,22 @@ def widen_for_inserts(err_lo: Array, err_hi: Array, n_inserts: Array):
     return err_lo - n_inserts, err_hi + n_inserts
 
 
+def insertion_headroom(budget, n_inserts) -> float:
+    """Aggregate Lemma 4.1 headroom: sum over leaves of the remaining
+    insertion budget max(budget_l - inserts_l, 0).
+
+    The sharded rebalancer compares a migrated boundary run against the
+    *receiving* shard's headroom: a run within the headroom rides the delta
+    tier (at worst triggering localized leaf rebuilds), while a run that
+    overflows it would churn most of the shard's leaves anyway, so the
+    receiver falls back to one full rebuild.  Host numpy — this feeds a
+    host-side policy decision, not traced code."""
+    import numpy as np
+    b = np.asarray(budget, np.float64)
+    i = np.asarray(n_inserts, np.float64)
+    return float(np.maximum(b - i, 0.0).sum())
+
+
 # ---------------------------------------------------------------------------
 # Search-window accounting (ROADMAP "Update path x clamped depth"): the
 # serving search depth is a function of per-leaf window *widths*, so the

@@ -8,7 +8,6 @@ paper finds BTree build time unbeatable, which we reproduce.
 from __future__ import annotations
 
 import functools
-import math
 from dataclasses import dataclass
 
 import jax

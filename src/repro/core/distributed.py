@@ -27,15 +27,52 @@ Dynamic serving (``ShardedDynamicIndex``): each shard owns a full two-tier
 with tombstone bitmaps, per-leaf Lemma 4.1 budgets driving pool-reuse
 rebuilds (``rmi.fit_leaves``).  ``insert_batch``/``delete_batch`` pre-bucket
 keys by the split vector on the host and run one device merge per touched
-shard; ``find`` stacks the shard tiers (lazily, cached until the next
-mutation) and dispatches the fused ``dynamic_lookup_pallas`` kernel — or its
-jnp oracle — per shard under ``shard_map`` with the same capacity-bucketed
-``all_to_all`` exchange as the static path.  Per-shard frozen routing scales
-ride the packed root blocks (``lookup.pack_root(route_scale=...)``) so one
-statically-traced kernel serves every shard.  Skew handling: when a shard's
-delta or dead ratio (or raw live-count skew) crosses a threshold, boundary
-runs migrate to an adjacent shard and the split between them moves —
-monotone and duplicate-run-safe because cuts snap to run boundaries.
+shard; ``find`` dispatches the fused ``dynamic_lookup_pallas`` kernel — or
+its jnp oracle — per shard under ``shard_map`` with the same
+capacity-bucketed ``all_to_all`` exchange as the static path.  Per-shard
+frozen routing scales ride the packed root blocks
+(``lookup.pack_root(route_scale=...)``) so one statically-traced kernel
+serves every shard.
+
+Slice-cache invalidation contract (the maintenance cost model): the stacked
+device state the ``shard_map`` dispatch consumes is assembled from
+*per-shard slices* and maintained incrementally, so every mutation path
+costs O(touched shards), never O(all shards):
+
+  * Each shard stores its tiers at its **own** capacity class
+    (``kernels.lookup.capacity_class`` — pow2, 128 floor); the assembled
+    stack pads every slice to the *global* max class with +inf keys / zero
+    tombstones / edge-extended prefix sums.
+  * A mutation (routed merge, delete, rebuild, migration) marks only the
+    touched shards dirty; the next ``find`` rewrites exactly those rows of
+    the stacked arrays (one batched row-scatter per array) and leaves the
+    rest untouched.  Packed kernel tables ride the same rows: per-shard
+    ``mat``/``vec`` come from the shard's cached ``RMIIndex.packed_tables``
+    and the root block from ``DynamicRMI.packed_root`` (cacheable forever —
+    roots and routing scales are frozen at shard build).
+  * Re-padding the whole stack happens **only** when the global capacity
+    class actually changes — i.e. a shard's tier outgrows (or a rebuilt
+    shard retires) the current global max.  A hot shard doubling *below*
+    the global max stays a row-local event.
+  * Shard-level scalars (live offsets, rebalance counters) live in a
+    device-resident ``(n_shards, 4)`` counter table updated with O(touched)
+    row scatters; the rebalance trigger is one jitted reduction over it
+    returning two scalars, so trigger cost no longer scales with the host
+    counter scan at O(1k) shards.
+
+Skew handling: when the device trigger fires (delta ratio, dead ratio, or
+raw live-count skew), whole boundary runs migrate to an adjacent shard and
+the split between them moves — monotone and duplicate-run-safe because cuts
+snap to run boundaries.  Migration is *incremental*: the donor sheds its
+boundary region in place (``DynamicRMI.shed_suffix``/``shed_prefix`` — a
+truncation or an exact uniform intercept shift; no refit), and the migrated
+run rides the **delta tier** of the receiver via the ordinary routed merge,
+at worst triggering localized Lemma 4.1 leaf rebuilds.  Only when the run
+overflows the receiver's aggregate Lemma 4.1 insertion headroom
+(``bounds.insertion_headroom`` — the regime where most leaves would churn
+anyway) does the receiver fall back to one full rebuild; delta-hot shards
+with balanced live counts flush their delta in place
+(``DynamicRMI.flush_delta``) instead of rebuilding from scratch.
 
 This module is exercised two ways:
   * functionally on small meshes in tests (shard_map over 1-8 CPU devices),
@@ -50,7 +87,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from . import rmi as rmi_mod
@@ -349,15 +386,49 @@ def _routed_exchange(axis: str, n_shards: int, splits, q_local, C: int,
 # Sharded dynamic index: per-shard two-tier DynamicRMI with routed updates,
 # fused per-shard find under shard_map, and run-snapped split rebalancing.
 # ---------------------------------------------------------------------------
+@jax.jit
+def _offs_jit(counts: Array) -> Array:
+    """Per-shard global live-rank offsets from the device counter table:
+    offs[s] = live keys in shards < s (one cumsum — no host scan)."""
+    live = counts[:, 0] - counts[:, 1] + counts[:, 2]
+    return (jnp.cumsum(live) - live).astype(jnp.int32)
+
+
+@jax.jit
+def _rebalance_trigger_jit(counts: Array, muted: Array, ratio, skew):
+    """The rebalance trigger as one device reduction over the counter
+    table (columns: base_n, base_dead, delta_live, delta_dead): returns
+    (hot shard id or -1, skewed?, delta-hot?, dead-hot?) — the only values
+    the host-side policy needs, so the per-batch trigger cost is four
+    synced scalars instead of an O(n_shards) host counter scan."""
+    livei = counts[:, 0] - counts[:, 1] + counts[:, 2]
+    live = livei.astype(jnp.float64)
+    dlive = counts[:, 2].astype(jnp.float64)
+    deadf = (counts[:, 1] + counts[:, 3]).astype(jnp.float64)
+    stored = (counts[:, 0] + counts[:, 2] + counts[:, 3]).astype(jnp.float64)
+    delta_hot = dlive / jnp.maximum(live, 1.0) > ratio
+    dead_hot = deadf / jnp.maximum(stored, 1.0) > ratio
+    tier = delta_hot | dead_hot
+    mean = jnp.maximum(jnp.sum(live) / live.shape[0], 1.0)
+    skewed = (live > skew * mean) & (livei != muted)
+    trig = tier | skewed
+    hot = jnp.argmax(jnp.where(trig, live, -1.0)).astype(jnp.int32)
+    any_ = jnp.any(trig)
+    return (jnp.where(any_, hot, -1), skewed[hot] & any_,
+            delta_hot[hot] & any_, dead_hot[hot] & any_)
+
+
 @dataclass
 class ShardedDynamicIndex:
-    """Range-partitioned two-tier dynamic index (module docstring: layout
-    and invariants).  Mutations are host-driven per shard (each shard is a
-    ``core.updates.DynamicRMI`` with its own delta tier, tombstones, and
-    Lemma 4.1 rebuild policy); serving stacks the shard tiers into device
-    arrays (cached until the next mutation) and answers a query batch in
-    one ``shard_map`` dispatch.  Queries must be finite (the exchange uses
-    +inf as its padding sentinel, like ``make_lookup_fn``)."""
+    """Range-partitioned two-tier dynamic index (module docstring: layout,
+    slice-cache invalidation contract, and rebalance policy).  Mutations
+    are host-driven per shard (each shard is a ``core.updates.DynamicRMI``
+    with its own delta tier, tombstones, and Lemma 4.1 rebuild policy);
+    serving assembles the per-shard slices into stacked device arrays —
+    maintained incrementally, O(touched shards) per mutation — and answers
+    a query batch in one ``shard_map`` dispatch.  Queries must be finite
+    (the exchange uses +inf as its padding sentinel, like
+    ``make_lookup_fn``)."""
     mesh: Mesh
     axis: str
     splits: np.ndarray                  # (n_shards - 1,) host split values
@@ -373,15 +444,41 @@ class ShardedDynamicIndex:
     # disables rebalancing.
     rebalance_ratio: float | None = 0.5
     rebalance_skew: float = 2.0
+    # Migration fallback rule: a migrated run rides the receiver's delta
+    # tier while its size stays within this multiple of the receiver's
+    # aggregate Lemma 4.1 insertion headroom (``bounds.insertion_headroom``).
+    # Per-leaf budgets are rebuild *triggers*, not soundness limits — an
+    # over-budget boundary leaf rebuilds locally during the routed merge —
+    # so a small multiple keeps the refit work localized; a run several
+    # times the headroom would refit most leaves anyway (or lands on a
+    # trivial empty receiver, headroom 0), and falls back to one full
+    # receiver rebuild.
+    migrate_headroom_factor: float = 4.0
     rebalances: int = 0
+    # Maintenance-cost accounting (the O(touched) contract, assertable):
+    migrations_incremental: int = 0     # delta-riding migrations
+    migrations_full: int = 0            # receiver headroom-overflow rebuilds
+    restack_full: int = 0               # cold stack assemblies (capacity
+                                        # class changes / first use)
+    restack_rows: int = 0               # dirty slice rows rewritten in place
     build_kwargs: dict = field(default_factory=dict)
-    _stack: dict | None = None          # cached stacked device state
+    _stack: dict | None = None          # assembled stacked device state
+    _dirty: set = field(default_factory=set)    # shard ids needing re-slice
+    _counts: Array = None               # (n_shards, 4) i64 device counters:
+                                        # base_n, base_dead, delta_live,
+                                        # delta_dead
     # Skew triggers that migration cannot resolve (one duplicate run bigger
     # than the skew threshold: cuts snap to run boundaries, so there is
     # nothing to move) are muted at the failing live count — re-armed as
     # soon as the shard's live count changes.  Tier-ratio triggers never
-    # need this: their in-place rebuild fallback always clears them.
-    _skew_muted: dict = field(default_factory=dict)
+    # need this: their in-place flush/rebuild fallback always clears them.
+    _muted: Array = None                # (n_shards,) i64 live count, -1 off
+    # Host mirrors of per-shard shape/depth metadata, updated O(touched):
+    # capacity classes decide when the global pad width must change, the
+    # depth vector feeds the static search depth of the find trace.
+    _bcaps: np.ndarray = None
+    _dcaps: np.ndarray = None
+    _iters_vec: np.ndarray = None
 
     @classmethod
     def build(cls, keys, mesh: Mesh, axis: str = "data",
@@ -402,11 +499,49 @@ class ShardedDynamicIndex:
         shards = [DynamicRMI.build(
             jnp.asarray(kn[bounds[s]:bounds[s + 1]]), pool=pool, eps=eps,
             n_leaves=n_leaves, **rmi_kwargs) for s in range(n_shards)]
-        return cls(mesh=mesh, axis=axis,
-                   splits=_splits_from_bounds(kn, bounds), shards=shards,
-                   eps=eps, n_leaves=n_leaves, pool=pool,
-                   rebalance_ratio=rebalance_ratio,
-                   rebalance_skew=rebalance_skew, build_kwargs=rmi_kwargs)
+        idx = cls(mesh=mesh, axis=axis,
+                  splits=_splits_from_bounds(kn, bounds), shards=shards,
+                  eps=eps, n_leaves=n_leaves, pool=pool,
+                  rebalance_ratio=rebalance_ratio,
+                  rebalance_skew=rebalance_skew, build_kwargs=rmi_kwargs)
+        idx._init_maintenance()
+        return idx
+
+    def _init_maintenance(self) -> None:
+        """Seed the device counter table, the skew mutes, and the host
+        capacity/depth mirrors — the only full-shard scan outside a cold
+        restack; everything after build updates these O(touched)."""
+        S = self.n_shards
+        self._bcaps = np.asarray(
+            [d.index.keys.shape[0] for d in self.shards], np.int64)
+        self._dcaps = np.asarray(
+            [d.delta_keys.shape[0] for d in self.shards], np.int64)
+        self._iters_vec = np.asarray(
+            [d.index.search_iters for d in self.shards], np.int64)
+        self._counts = jnp.asarray(
+            [[d.base_n, d.base_dead_count, d.delta_live, d.delta_dead_count]
+             for d in self.shards], jnp.int64)
+        self._muted = jnp.full((S,), -1, jnp.int64)
+
+    def _touch(self, ids) -> None:
+        """Mark shards mutated: refresh their counter rows (one batched
+        device row-scatter), host capacity/depth mirrors, and the dirty set
+        the next restack consumes.  O(touched shards)."""
+        ids = sorted({int(s) for s in ids})
+        if not ids:
+            return
+        for s in ids:
+            d = self.shards[s]
+            self._bcaps[s] = d.index.keys.shape[0]
+            self._dcaps[s] = d.delta_keys.shape[0]
+            self._iters_vec[s] = d.index.search_iters
+            self._dirty.add(s)
+        vals = np.asarray(
+            [[self.shards[s].base_n, self.shards[s].base_dead_count,
+              self.shards[s].delta_live, self.shards[s].delta_dead_count]
+             for s in ids], np.int64)
+        self._counts = self._counts.at[jnp.asarray(ids)].set(
+            jnp.asarray(vals))
 
     # -- shape / bookkeeping ----------------------------------------------
     @property
@@ -438,14 +573,16 @@ class ShardedDynamicIndex:
     def insert_batch(self, keys) -> None:
         """Host pre-bucket by the split vector, one device merge per touched
         shard (each shard's ``DynamicRMI.insert_batch`` runs its own Lemma
-        4.1 budget accounting and pool-reuse rebuilds)."""
+        4.1 budget accounting and pool-reuse rebuilds).  Only the touched
+        shards' cached slices invalidate."""
         keys = np.asarray(keys, np.float64).ravel()
         if keys.size == 0:
             return
         dest = self._route(keys)
-        for s in np.unique(dest):
+        touched = np.unique(dest)
+        for s in touched:
             self.shards[s].insert_batch(keys[dest == s])
-        self._stack = None
+        self._touch(touched)
         self._maybe_rebalance()
 
     def delete_batch(self, keys) -> None:
@@ -455,79 +592,102 @@ class ShardedDynamicIndex:
         if keys.size == 0:
             return
         dest = self._route(keys)
-        for s in np.unique(dest):
+        touched = np.unique(dest)
+        for s in touched:
             self.shards[s].delete_batch(keys[dest == s])
-        self._stack = None
+        self._touch(touched)
         self._maybe_rebalance()
 
     # -- rebalance ---------------------------------------------------------
     def _maybe_rebalance(self) -> None:
+        """Load skew resolves by migration (boundary runs move between
+        neighbours); tier triggers resolve *in place* — a delta-hot shard
+        flushes its tier into the base (localized refits), a dead-hot shard
+        rebuilds to purge base tombstones.  Migration deliberately does not
+        answer tier triggers any more: the incremental donor/receiver paths
+        leave tombstones and delta entries where they are, so only the
+        in-place resolutions actually clear those ratios."""
         if self.rebalance_ratio is None or self.n_shards == 1:
             return
-        live = self.live_counts().astype(np.float64)
-        mean = max(live.sum() / self.n_shards, 1.0)
-        hot, hot_tier = None, False
-        for s, d in enumerate(self.shards):
-            delta_frac = d.delta_live / max(d.live_count, 1)
-            tier = (delta_frac > self.rebalance_ratio
-                    or d.dead_fraction > self.rebalance_ratio)
-            skew = (live[s] > self.rebalance_skew * mean
-                    and self._skew_muted.get(s) != int(live[s]))
-            if tier or skew:
-                if hot is None or live[s] > live[hot]:
-                    hot, hot_tier = s, tier
-        if hot is None:
+        hot_d, skew_d, delta_d, dead_d = _rebalance_trigger_jit(
+            self._counts, self._muted, jnp.float64(self.rebalance_ratio),
+            jnp.float64(self.rebalance_skew))
+        hot = int(hot_d)
+        if hot < 0:
             return
-        nb = [s for s in (hot - 1, hot + 1) if 0 <= s < self.n_shards]
-        if live[hot] >= min(live[s] for s in nb):
-            src, dst = hot, min(nb, key=lambda s: live[s])   # shed
-        else:
-            src, dst = max(nb, key=lambda s: live[s]), hot   # absorb
-        if self._migrate(src, dst):
-            self.rebalances += 1
-            self._stack = None
-            self._skew_muted.pop(src, None)
-            self._skew_muted.pop(dst, None)
-        elif not hot_tier:
-            # Unmovable skew (one giant duplicate run): mute this trigger
-            # at the current live count so every later batch doesn't pay a
-            # fruitless two-shard live_keys() sync.
-            self._skew_muted[hot] = int(live[hot])
-        else:
-            # Balanced live counts make migration a no-op, but a delta- or
-            # dead-ratio trigger can only clear through a merge/purge —
-            # rebuild the shard in place (delta merged, tombstones gone)
-            # so the trigger doesn't re-fire fruitlessly every batch.
+        if bool(skew_d):
+            nb = [s for s in (hot - 1, hot + 1) if 0 <= s < self.n_shards]
+            lv = {s: self.shards[s].live_count for s in nb + [hot]}
+            if lv[hot] >= min(lv[s] for s in nb):
+                src, dst = hot, min(nb, key=lambda s: lv[s])     # shed
+            else:
+                src, dst = max(nb, key=lambda s: lv[s]), hot     # absorb
+            if self._migrate(src, dst):
+                self.rebalances += 1
+                self._muted = self._muted.at[
+                    jnp.asarray([src, dst])].set(-1)
+                self._touch([src, dst])
+                return
+            if not (bool(delta_d) or bool(dead_d)):
+                # Unmovable skew (one giant duplicate run): mute this
+                # trigger at the current live count so every later batch
+                # doesn't pay a fruitless donor live_keys() sync.
+                self._muted = self._muted.at[hot].set(lv[hot])
+                return
+        if bool(dead_d):
+            # Base tombstones only purge through a rebuild — in place, so
+            # the trigger doesn't re-fire fruitlessly every batch.
             self._rebuild_shard(hot, self.shards[hot].live_keys())
-            self.rebalances += 1
-            self._stack = None
+        else:
+            # Delta-hot: flush the tier into the base, refitting only the
+            # leaves that hold delta entries.
+            self.shards[hot].flush_delta()
+        self.rebalances += 1
+        self._touch([hot])
 
     def _migrate(self, src: int, dst: int) -> bool:
         """Move ~half the live-count excess of ``src`` to adjacent ``dst``
-        as whole boundary runs, update the split between them, and rebuild
-        both shards from their live keys (fresh roots, tombstones purged,
-        pool reuse via the build path).  Cuts snap to run boundaries so the
+        as whole boundary runs and update the split between them —
+        *incrementally*: the donor sheds its boundary region in place
+        (``shed_suffix``/``shed_prefix`` — truncation or exact uniform
+        intercept shift, no refit) and the migrated run rides the
+        receiver's delta tier through the ordinary routed merge, at worst
+        triggering localized Lemma 4.1 leaf rebuilds.  Only when the run
+        overflows the receiver's aggregate Lemma 4.1 insertion headroom
+        (the regime where most of its leaves would churn anyway — e.g. a
+        trivial empty receiver) does the receiver fall back to one full
+        rebuild; the donor never does.  Cuts snap to run boundaries so the
         strict-inequality routing invariant survives duplicate-heavy data;
         a cut that would move everything (one giant run) is skipped."""
         a = self.shards[src].live_keys()
-        b = self.shards[dst].live_keys()
-        m = int(a.size - b.size) // 2
+        recv = self.shards[dst]
+        m = int(a.size - recv.live_count) // 2
         if m <= 0 or a.size < 2:
             return False
         if dst == src + 1:
             c = int(np.searchsorted(a, a[a.size - m], side="left"))
             if c <= 0:
                 return False
-            src_keys, dst_keys = a[:c], np.concatenate([a[c:], b])
-            self.splits[src] = a[c - 1]
+            moved, split_key = a[c:], float(a[c - 1])
+            self.shards[src].shed_suffix(split_key)
+            self.splits[src] = split_key
         else:
             c = int(np.searchsorted(a, a[m], side="left"))
             if c <= 0:
                 return False
-            src_keys, dst_keys = a[c:], np.concatenate([b, a[:c]])
-            self.splits[dst] = a[c - 1]
-        self._rebuild_shard(src, src_keys)
-        self._rebuild_shard(dst, dst_keys)
+            moved, split_key = a[:c], float(a[c - 1])
+            self.shards[src].shed_prefix(split_key)
+            self.splits[dst] = split_key
+        if moved.size <= self.migrate_headroom_factor * \
+                recv.insertion_headroom:
+            recv.insert_batch(moved)        # rides the delta tier
+            self.migrations_incremental += 1
+        else:
+            live = recv.live_keys()
+            merged = np.concatenate(
+                [moved, live] if dst == src + 1 else [live, moved])
+            self._rebuild_shard(dst, merged)
+            self.migrations_full += 1
         return True
 
     def _rebuild_shard(self, s: int, keys: np.ndarray) -> None:
@@ -536,62 +696,115 @@ class ShardedDynamicIndex:
             jnp.asarray(keys), pool=self.pool, eps=self.eps,
             n_leaves=self.n_leaves, **self.build_kwargs)
 
-    # -- serving -----------------------------------------------------------
-    def _stacked(self) -> dict:
-        """Stack the per-shard tiers into uniform device arrays (each shard
-        padded to the max base/delta capacity with +inf keys / zero
-        tombstones / edge-extended prefix sums).  Cached until the next
-        mutation; the packed kernel tables are a lazy sub-entry so jnp-path
-        consumers never pay for them."""
-        if self._stack is not None:
-            return self._stack
-        bcap = max(d.index.keys.shape[0] for d in self.shards)
-        dcap = max(d.delta_keys.shape[0] for d in self.shards)
-        padk = lambda a, c: jnp.pad(a, (0, c - a.shape[0]),
-                                    constant_values=jnp.inf)
+    # -- serving: the per-shard slice cache --------------------------------
+    # Invalidation contract (module docstring): mutations mark shards dirty
+    # via _touch; _stacked rewrites exactly the dirty rows of the stacked
+    # arrays (one batched row-scatter per array), re-assembling from
+    # scratch only when the *global* capacity class changed.
+    @staticmethod
+    def _pads(bcap: int, dcap: int):
+        from ..kernels.lookup import pad_capacity as padk
         padz = lambda a, c: jnp.pad(a, (0, c - a.shape[0]))
         padp = lambda a, c: jnp.pad(a, (0, c + 1 - a.shape[0]), mode="edge")
+        return padk, padz, padp
+
+    def _slice_rows(self, s: int, bcap: int, dcap: int) -> dict:
+        """One shard's slice set, padded to the global capacity classes —
+        the unit of incremental restacking."""
+        d = self.shards[s]
+        padk, padz, padp = self._pads(bcap, dcap)
+        return dict(
+            route_n=jnp.float64(d.route_n),
+            base=padk(d.index.keys, bcap),
+            bdead=padz(d.base_dead, bcap),
+            bpsum=padp(d.base_psum, bcap),
+            dk=padk(d.delta_keys, dcap),
+            ddead=padz(d.delta_dead, dcap),
+            dpsum=padp(d.delta_psum, dcap),
+            err_lo=d.index.err_lo,
+            err_hi=d.index.err_hi)
+
+    _ROW_KEYS = ("route_n", "base", "bdead", "bpsum", "dk", "ddead",
+                 "dpsum", "err_lo", "err_hi")
+
+    def _stacked(self) -> dict:
+        """Assemble (or incrementally refresh) the stacked device state the
+        ``shard_map`` dispatch consumes.  Dirty rows rewrite in place; a
+        cold full assembly happens only on first use or when the global
+        capacity class changes (a shard's tier outgrew — or a rebuilt shard
+        retired — the current global max).  The packed kernel tables are a
+        lazy sub-entry riding the same rows, so jnp-path consumers never
+        pay for them."""
+        bcap = int(self._bcaps.max())
+        dcap = int(self._dcaps.max())
+        st = self._stack
+        if st is None or st["bcap"] != bcap or st["dcap"] != dcap:
+            return self._restack_full(bcap, dcap)
+        if self._dirty:
+            self._restack_rows(st, sorted(self._dirty), bcap, dcap)
+        return st
+
+    def _restack_full(self, bcap: int, dcap: int) -> dict:
+        """Cold assembly over every shard (first use / capacity-class
+        change)."""
         stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
-        live = self.live_counts()
-        offs = np.zeros(self.n_shards, np.int64)
-        np.cumsum(live[:-1], out=offs[1:])
+        rows = [self._slice_rows(s, bcap, dcap)
+                for s in range(self.n_shards)]
         self._stack = dict(
+            bcap=bcap, dcap=dcap,
             splits=jnp.asarray(self.splits),
-            offs=jnp.asarray(offs, jnp.int32),
-            route_n=jnp.asarray([d.route_n for d in self.shards],
-                                jnp.float64),
-            base=jnp.stack([padk(d.index.keys, bcap) for d in self.shards]),
-            bdead=jnp.stack([padz(d.base_dead, bcap) for d in self.shards]),
-            bpsum=jnp.stack([padp(d.base_psum, bcap) for d in self.shards]),
-            dk=jnp.stack([padk(d.delta_keys, dcap) for d in self.shards]),
-            ddead=jnp.stack([padz(d.delta_dead, dcap) for d in self.shards]),
-            dpsum=jnp.stack([padp(d.delta_psum, dcap) for d in self.shards]),
+            offs=_offs_jit(self._counts),
             root=stack([d.index.root for d in self.shards]),
             leaves=stack([d.index.leaves for d in self.shards]),
-            err_lo=jnp.stack([d.index.err_lo for d in self.shards]),
-            err_hi=jnp.stack([d.index.err_hi for d in self.shards]),
             leaf_kind=self.shards[0].index.leaf_kind,
-            iters=max(d.index.search_iters for d in self.shards),
-            packed=None)
+            iters=int(self._iters_vec.max()),
+            packed=None,
+            **{k: jnp.stack([r[k] for r in rows]) for k in self._ROW_KEYS})
+        self.restack_full += 1
+        self._dirty.clear()
         return self._stack
 
+    def _restack_rows(self, st: dict, ids: list, bcap: int,
+                      dcap: int) -> None:
+        """Rewrite the dirty shards' rows of the stacked arrays in place —
+        one batched row-scatter per array, O(touched) slice work."""
+        rows = [self._slice_rows(s, bcap, dcap) for s in ids]
+        idx = jnp.asarray(ids)
+        for k in self._ROW_KEYS:
+            st[k] = st[k].at[idx].set(jnp.stack([r[k] for r in rows]))
+        scat = lambda t, *r: t.at[idx].set(jnp.stack(r))
+        st["root"] = jax.tree.map(
+            scat, st["root"], *[self.shards[s].index.root for s in ids])
+        st["leaves"] = jax.tree.map(
+            scat, st["leaves"], *[self.shards[s].index.leaves for s in ids])
+        if st["packed"] is not None:
+            packs = [self._shard_pack(s) for s in ids]
+            st["packed"] = tuple(
+                t.at[idx].set(jnp.stack([p[i] for p in packs]))
+                for i, t in enumerate(st["packed"]))
+        st["offs"] = _offs_jit(self._counts)
+        st["splits"] = jnp.asarray(self.splits)
+        st["iters"] = int(self._iters_vec.max())
+        self.restack_rows += len(ids)
+        self._dirty.clear()
+
+    def _shard_pack(self, s: int) -> tuple:
+        """One shard's packed kernel tables: mat/vec from the shard's
+        cached ``RMIIndex.packed_tables``, the root block from the
+        shard-lifetime ``DynamicRMI.packed_root`` cache (its frozen routing
+        scale folded in, so the kernel traces once with static
+        ``route_n = n_leaves``)."""
+        d = self.shards[s]
+        _, mat, vec = d.index.packed_tables()
+        return d.packed_root(self.n_leaves), mat, vec
+
     def _packed_stack(self, st: dict) -> tuple:
-        """Stacked per-shard kernel tables: mat/vec ride each shard's cached
-        ``RMIIndex.packed_tables``; the root block re-packs with that
-        shard's frozen routing scale folded in (``route_scale``), so the
-        kernel traces once with static ``route_n = n_leaves``."""
+        """Stacked per-shard kernel tables (lazy: first kernel-path find,
+        then maintained row-wise by :meth:`_restack_rows`)."""
         if st["packed"] is None:
-            from ..kernels import lookup as _lk
-            kroot, kmat, kvec = [], [], []
-            for d in self.shards:
-                _, mat, vec = d.index.packed_tables()
-                kroot.append(_lk.pack_root(
-                    d.index.root_kind, d.index.root,
-                    route_scale=self.n_leaves / d.route_n))
-                kmat.append(mat)
-                kvec.append(vec)
-            st["packed"] = (jnp.stack(kroot), jnp.stack(kmat),
-                            jnp.stack(kvec))
+            packs = [self._shard_pack(s) for s in range(self.n_shards)]
+            st["packed"] = tuple(jnp.stack([p[i] for p in packs])
+                                 for i in range(3))
         return st["packed"]
 
     def find(self, queries, *, use_kernel: bool | None = None,

@@ -15,7 +15,7 @@ preserving the ascending-error-bound order.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax

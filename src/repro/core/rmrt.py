@@ -14,6 +14,7 @@ TPUs do not chase pointers. Descent is a fixed-depth masked loop.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
@@ -269,9 +270,6 @@ def _predict_one(kind, params, node, q):
         return models.linear_predict(p, q)
     h = jax.nn.relu(q[..., None] * p.w1 + p.b1)
     return jnp.sum(h * p.w2, -1) + p.b2
-
-
-import functools
 
 
 @functools.partial(jax.jit,

@@ -53,7 +53,8 @@ import numpy as np
 
 from . import models
 from . import rmi as rmi_mod
-from .bounds import clamped_depth, insertion_budget, window_widths
+from .bounds import (clamped_depth, insertion_budget, insertion_headroom,
+                     window_widths)
 from .reuse import ModelPool
 
 Array = jax.Array
@@ -64,6 +65,13 @@ _COMPACT_RATIO = 0.25   # default delta-tier dead fraction before compaction
 
 def _pow2ceil(v: int) -> int:
     return 1 << max(int(v) - 1, 1).bit_length()
+
+
+def _capacity(n: int) -> int:
+    """Tier capacity bucket (kernels.lookup.capacity_class with the
+    _MIN_CAP floor): shapes only change on pow2 crossings."""
+    from ..kernels.lookup import capacity_class
+    return capacity_class(n, floor=_MIN_CAP)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +231,52 @@ def _delete_jit(base_keys: Array, base_dead: Array, dk: Array, ddead: Array,
     nb = jnp.sum(new_bdead) - jnp.sum(base_dead)
     ndel = jnp.sum(new_ddead) - jnp.sum(ddead)
     return new_bdead, new_ddead, nb, ndel
+
+
+@jax.jit
+def _shed_suffix_jit(keys: Array, dead: Array, cut):
+    """Truncate a sorted +inf-padded tier at position ``cut``: entries
+    [cut:] become +inf padding / cleared tombstones.  Survivor positions
+    are unchanged.  Returns (keys, dead, #tombstones dropped)."""
+    keep = jnp.arange(keys.shape[0]) < cut
+    nd = dead & keep
+    return jnp.where(keep, keys, jnp.inf), nd, jnp.sum(dead) - jnp.sum(nd)
+
+
+@jax.jit
+def _shed_suffix_delta_jit(keys: Array, leaf: Array, dead: Array, cut):
+    """:func:`_shed_suffix_jit` with the routed-leaf payload."""
+    keep = jnp.arange(keys.shape[0]) < cut
+    nd = dead & keep
+    return (jnp.where(keep, keys, jnp.inf), jnp.where(keep, leaf, -1), nd,
+            jnp.sum(dead) - jnp.sum(nd))
+
+
+@jax.jit
+def _shed_prefix_jit(keys: Array, dead: Array, cut):
+    """Drop the first ``cut`` slots of a sorted +inf-padded tier and
+    compact left (one gather — order preserved, tail re-padded).  Survivor
+    positions all shift down by exactly ``cut``."""
+    n = keys.shape[0]
+    src = jnp.arange(n) + cut
+    ok = src < n
+    srcc = jnp.clip(src, 0, n - 1)
+    nd = jnp.where(ok, dead[srcc], False)
+    return (jnp.where(ok, keys[srcc], jnp.inf), nd,
+            jnp.sum(dead) - jnp.sum(nd))
+
+
+@jax.jit
+def _shed_prefix_delta_jit(keys: Array, leaf: Array, dead: Array, cut):
+    """:func:`_shed_prefix_jit` with the routed-leaf payload."""
+    n = keys.shape[0]
+    src = jnp.arange(n) + cut
+    ok = src < n
+    srcc = jnp.clip(src, 0, n - 1)
+    nd = jnp.where(ok, dead[srcc], False)
+    return (jnp.where(ok, keys[srcc], jnp.inf),
+            jnp.where(ok, leaf[srcc], -1), nd,
+            jnp.sum(dead) - jnp.sum(nd))
 
 
 def leaf_window(leaves, err_lo, err_hi, b, q, n: int, leaf_kind: str):
@@ -389,6 +443,9 @@ class DynamicRMI:
     build_kwargs: dict = field(default_factory=dict)
     _win: np.ndarray = None             # per-leaf window widths (depth calc)
     _delta_f32: bool | None = None
+    _kroot: Array = None                # packed kernel root (frozen: the
+                                        # root model and route_n never
+                                        # change after build)
 
     @classmethod
     def build(cls, keys, pool=None, eps: float = 0.9,
@@ -412,9 +469,9 @@ class DynamicRMI:
         # Quantize the base tier to pow2 capacity with +inf padding: pads
         # sort past every live key and route to the dump bucket, so rebuild
         # merges change shapes (and retrace jits) only on capacity doubling.
-        cap = max(_pow2ceil(n), _MIN_CAP)
-        padded = jnp.concatenate(
-            [idx.keys, jnp.full((cap - n,), jnp.inf, idx.keys.dtype)])
+        from ..kernels.lookup import pad_capacity
+        cap = _capacity(n)
+        padded = pad_capacity(idx.keys, cap)
         idx = replace(idx, keys=padded, _f32_exact=None, _packed=None)
         d = cls(index=idx, pool=pool, eps=eps, route_n=route_n, base_n=n,
                 reuse_on_rebuild=reuse_on_rebuild,
@@ -447,7 +504,7 @@ class DynamicRMI:
         lv = rmi_mod.root_buckets(idx.root_kind, idx.root, k, idx.n_leaves,
                                   self.route_n)  # born, np.sort >> XLA sort
         cap = max(self.delta_keys.shape[0],
-                  _pow2ceil(max(self.delta_live + keys.size, _MIN_CAP)))
+                  _capacity(self.delta_live + keys.size))
         if self.delta_live == 0 and self.delta_dead_count == 0:
             self.delta_keys, self.delta_leaf = _fill_delta_jit(
                 k, lv, cap_out=cap)
@@ -516,6 +573,118 @@ class DynamicRMI:
         self.delta_compactions += 1
         self._delta_f32 = None          # tier contents changed
 
+    # -- boundary-run migration primitives (sharded rebalancer) ------------
+    def shed_suffix(self, split: float) -> None:
+        """Drop every entry with key > ``split`` from both tiers — the
+        donor half of an incremental migration to the *right* neighbour.
+        Survivor positions are unchanged (a suffix truncation shifts
+        nothing), so every model, error bound, packed kernel table, and the
+        clamped search depth stay valid as-is.  ``split`` must land on an
+        equal-key run boundary (callers snap it) so duplicate runs — and
+        their tombstone-prefix invariant — move or stay whole."""
+        cut_b = int(jnp.searchsorted(self.index.keys, jnp.float64(split),
+                                     side="right"))
+        if cut_b < self.base_n:
+            keys, dead, shed_dead = _shed_suffix_jit(
+                self.index.keys, self.base_dead, cut_b)
+            # keys only lose finite entries to +inf padding: the packed
+            # tables (models only) and f32-exactness survive untouched.
+            self.index = replace(self.index, keys=keys)
+            self.base_dead = dead
+            self.base_dead_count -= int(shed_dead)
+            self.base_psum = jnp.zeros((keys.shape[0] + 1,), jnp.int32) \
+                if self.base_dead_count == 0 else _psum(dead)
+            self.base_n = cut_b
+        cut_d = int(jnp.searchsorted(self.delta_keys, jnp.float64(split),
+                                     side="right"))
+        nf = self.delta_live + self.delta_dead_count
+        if cut_d < nf:
+            dk, dleaf, ddead, sdead = _shed_suffix_delta_jit(
+                self.delta_keys, self.delta_leaf, self.delta_dead, cut_d)
+            self.delta_keys, self.delta_leaf, self.delta_dead = dk, dleaf, \
+                ddead
+            self.delta_dead_count -= int(sdead)
+            self.delta_live -= (nf - cut_d) - int(sdead)
+            self.delta_psum = _psum(ddead)
+
+    def shed_prefix(self, split: float) -> None:
+        """Drop every entry with key <= ``split`` — the donor half of an
+        incremental migration to the *left* neighbour.  Both tiers compact
+        left and every leaf intercept shifts down by exactly the number of
+        removed base entries: the shift is uniform (all removals happen
+        left of every survivor), so it is exact for either leaf kind under
+        any root, and error bounds / clamped depth stay tight.  Routing is
+        untouched (the frozen root model maps keys, not positions)."""
+        cut_b = int(jnp.searchsorted(self.index.keys, jnp.float64(split),
+                                     side="right"))
+        if cut_b > 0:
+            keys, dead, shed_dead = _shed_prefix_jit(
+                self.index.keys, self.base_dead, cut_b)
+            if self.index.leaf_kind == "linear":
+                leaves = self.index.leaves._replace(
+                    b=self.index.leaves.b - cut_b)
+            else:
+                leaves = self.index.leaves._replace(
+                    b2=self.index.leaves.b2 - cut_b)
+            # leaf intercepts changed: packed kernel tables go stale (the
+            # cached packed *root* on ``_kroot`` stays — roots are frozen).
+            self.index = replace(self.index, keys=keys, leaves=leaves,
+                                 _packed=None)
+            self.base_dead = dead
+            self.base_dead_count -= int(shed_dead)
+            self.base_psum = jnp.zeros((keys.shape[0] + 1,), jnp.int32) \
+                if self.base_dead_count == 0 else _psum(dead)
+            self.base_n -= cut_b
+        cut_d = int(jnp.searchsorted(self.delta_keys, jnp.float64(split),
+                                     side="right"))
+        if cut_d > 0:
+            dk, dleaf, ddead, sdead = _shed_prefix_delta_jit(
+                self.delta_keys, self.delta_leaf, self.delta_dead, cut_d)
+            self.delta_keys, self.delta_leaf, self.delta_dead = dk, dleaf, \
+                ddead
+            self.delta_dead_count -= int(sdead)
+            self.delta_live -= (cut_d - int(sdead))
+            self.delta_psum = _psum(ddead)
+
+    def flush_delta(self) -> None:
+        """Merge every live delta entry into the base tier now, refitting
+        only the leaves that actually hold delta entries (the rest take
+        :meth:`_rebuild_leaves`'s exact intercept shift) — the incremental
+        answer to a delta-hot shard, replacing the old from-scratch shard
+        rebuild."""
+        if self.delta_live == 0:
+            if self.delta_dead_count:
+                self._compact_delta()
+            return
+        L = self.index.n_leaves
+        livem = jnp.isfinite(self.delta_keys) & ~self.delta_dead
+        cnt = jnp.bincount(jnp.where(livem, self.delta_leaf, L),
+                           length=L + 1)[:L]
+        lid = np.flatnonzero(np.asarray(cnt))
+        if lid.size:
+            self._rebuild_leaves(lid)
+
+    @property
+    def insertion_headroom(self) -> float:
+        """Aggregate Lemma 4.1 headroom (``bounds.insertion_headroom``):
+        how many more inserts the current leaf budgets can absorb."""
+        return insertion_headroom(self.budget, self.n_inserts)
+
+    def packed_root(self, route_leaves: int | None = None) -> Array:
+        """Packed kernel root block with the frozen routing scale folded in
+        (``lookup.pack_root(route_scale=route_leaves / route_n)``), cached
+        for the life of the structure — root model and ``route_n`` are
+        frozen at build, so there is no invalidation path.  Callers must
+        pass a consistent ``route_leaves`` (the sharded dispatch always
+        uses its uniform ``n_leaves``)."""
+        if self._kroot is None:
+            from ..kernels import lookup as _lk
+            scale = 1.0 if route_leaves is None \
+                else route_leaves / self.route_n
+            self._kroot = _lk.pack_root(self.index.root_kind,
+                                        self.index.root, route_scale=scale)
+        return self._kroot
+
     # -- rebuild -----------------------------------------------------------
     def _rebuild_leaves(self, leaf_ids: np.ndarray) -> None:
         """Batched Lemma 4.1 rebuild: merge the leaves' delta entries into
@@ -568,10 +737,10 @@ class DynamicRMI:
         self.delta_live -= m
 
         self.base_n += m
-        cap_new = max(idx.n, _pow2ceil(self.base_n))
+        cap_new = max(idx.n, _capacity(self.base_n))
         # Trim the moved array to its finite prefix (pow2-stepped so shapes
         # stay cache-friendly) before the base merge.
-        mp = min(max(_pow2ceil(max(m, 1)), _MIN_CAP), mk.shape[0])
+        mp = min(_capacity(m), mk.shape[0])
         new_base, new_bdead = _merge_base_jit(
             idx.keys, self.base_dead, mk[:mp], cap_out=cap_new,
             has_dead=self.base_dead_count > 0)

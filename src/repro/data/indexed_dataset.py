@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import reuse as reuse_mod
-from repro.core import rmi as rmi_mod
 from repro.core import synth
 from repro.core.updates import DynamicRMI
 

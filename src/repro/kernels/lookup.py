@@ -58,7 +58,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -219,6 +218,23 @@ def _lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, keys_ref, out_ref,
 
 def _pow2ceil(v: int) -> int:
     return 1 << max(int(v) - 1, 1).bit_length()
+
+
+def capacity_class(n: int, floor: int = 128) -> int:
+    """Pow2 capacity bucket shared by tier storage and the sharded slice
+    cache: a tier of ``n`` finite entries is stored +inf-padded to this
+    capacity, so array shapes — and with them every jit specialization,
+    packed-table layout, and stacked per-shard slice — change only when the
+    entry count crosses a power of two.  The 128 floor is one kernel lane
+    tile."""
+    return max(_pow2ceil(max(int(n), 1)), floor)
+
+
+def pad_capacity(keys: jax.Array, cap: int) -> jax.Array:
+    """+inf-pad a sorted tier (or tier slice) to its capacity class — pads
+    sort past every live key, route to the dump bucket, and never win a
+    left-boundary search."""
+    return jnp.pad(keys, (0, cap - keys.shape[0]), constant_values=jnp.inf)
 
 
 def lookup_pallas(queries, root, mat, vec, keys, *, n_leaves: int,

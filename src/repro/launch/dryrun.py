@@ -29,7 +29,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.serve import step as serve_step
 from repro.train import optimizer
-from repro.train.step import batch_shapes, batch_specs, make_train_step
+from repro.train.step import batch_shapes, make_train_step
 
 # v5e hardware constants (DESIGN.md §7)
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -16,7 +16,6 @@ axis 0), with the superblock body optionally jax.checkpoint'd (train remat).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -108,7 +107,6 @@ def _block_leaves(cfg, kind: str, pos: int) -> dict:
         tpn = tp
         if cfg.moe_at(pos):
             mc = cfg.moe
-            E_l = cfg.n_experts_padded // (cfg.tp if cfg.tp_shard else 1)
             fe = mc.d_expert
             out["ffn"] = layers.MoEParams(
                 ln=Leaf((d,), (None,), -1),

@@ -17,7 +17,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .sharding import TP, fsdp_gather, scan_aligned, tp_psum
+from .sharding import fsdp_gather, scan_aligned, tp_psum
 
 Array = jax.Array
 F32 = jnp.float32

@@ -197,3 +197,31 @@ class DynamicPageTable:
             return found, np.zeros(found.shape, np.int32)
         rank = np.clip(np.asarray(rank), 0, self._pages.size - 1)
         return found, self._pages[rank]
+
+    def maintenance_stats(self) -> dict:
+        """Index-maintenance counters for the serving control plane (what a
+        scheduler watches to size allocation batches): rebuild/compaction
+        counts on a single-host table, plus — when the table rides the
+        sharded index — rebalances split by kind and the slice-cache
+        restack accounting (``restack_rows`` grows O(touched shards) per
+        allocate/release, ``restack_full`` only on capacity-class
+        changes)."""
+        d = self.dyn
+        if hasattr(d, "shards"):        # ShardedDynamicIndex
+            return dict(
+                sharded=True,
+                live=int(d.total_live),
+                rebalances=int(d.rebalances),
+                migrations_incremental=int(d.migrations_incremental),
+                migrations_full=int(d.migrations_full),
+                restack_full=int(d.restack_full),
+                restack_rows=int(d.restack_rows),
+                rebuilds=int(sum(s.rebuilds for s in d.shards)),
+            )
+        return dict(
+            sharded=False,
+            live=int(d.live_count),
+            rebuilds=int(d.rebuilds),
+            delta_compactions=int(d.delta_compactions),
+            buffered=int(d.total_buffered),
+        )

@@ -9,15 +9,11 @@ Collective inventory per step (all explicit in this file or the layers):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import model as M
-from repro.models.layers import sync_grad
 from repro.models.sharding import (batch_axes_for, scan_aligned,
                                    set_batch_axes, set_fsdp_gather,
                                    set_mesh_axes, set_psum_dtype,

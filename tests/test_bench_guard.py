@@ -1,0 +1,88 @@
+"""Bench-trajectory guard: the checker passes the committed BENCH files and
+actually catches the violations it exists for (schema drift, duplicate
+(sha, suite) keys, mutated history)."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import check_bench  # noqa: E402
+
+
+def _updates_doc():
+    return {
+        "meta": {"queries": 1},
+        "rows": [{"op": "insert", "impl": "x", "n_keys": 1,
+                  "ns_per_op": 1.0, "detail": ""}],
+        "trajectory": [
+            {"sha": "abc1234", "suite": "updates", "mode": "interpret/CPU",
+             "date": "2026-07-30",
+             "rows": [{"op": "insert", "impl": "x", "n_keys": 1,
+                       "ns_per_op": 1.0, "detail": ""}]},
+        ],
+    }
+
+
+def _write(tmp_path, doc, name="BENCH_updates.json"):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return p
+
+
+def test_committed_files_pass():
+    assert check_bench.main([]) == 0
+
+
+def test_clean_doc_passes(tmp_path):
+    p = _write(tmp_path, _updates_doc())
+    assert check_bench.check_file(p) == []
+
+
+def test_schema_violations_caught(tmp_path):
+    doc = _updates_doc()
+    del doc["rows"][0]["ns_per_op"]
+    assert check_bench.check_schema(Path("BENCH_updates.json"), doc)
+
+    doc = _updates_doc()
+    doc["trajectory"][0].pop("sha")
+    assert check_bench.check_schema(Path("BENCH_updates.json"), doc)
+
+    doc = _updates_doc()
+    doc["trajectory"][0]["date"] = "today"
+    assert check_bench.check_schema(Path("BENCH_updates.json"), doc)
+
+
+def test_duplicate_trajectory_key_caught(tmp_path):
+    doc = _updates_doc()
+    doc["trajectory"].append(json.loads(json.dumps(doc["trajectory"][0])))
+    errs = check_bench.check_schema(Path("BENCH_updates.json"), doc)
+    assert any("duplicate trajectory key" in e for e in errs)
+
+
+def test_append_flow_preserves_history(tmp_path):
+    """The real append flow, run twice against a scratch copy, must leave
+    meta/rows/pre-existing entries intact and replace the re-run key."""
+    p = _write(tmp_path, _updates_doc())
+    assert check_bench.check_append_immutable(p) == []
+    # the scratch-append self-test must not touch the input file itself
+    assert json.loads(p.read_text()) == _updates_doc()
+
+
+def test_mutated_history_is_detected(tmp_path, monkeypatch):
+    """If append_bench ever started rewriting historical entries, the guard
+    must fail — simulate a broken appender that drops old entries."""
+    from benchmarks import harness
+
+    def broken_append(path, suite, rows, mode="interpret/CPU", note=""):
+        data = json.loads(Path(path).read_text())
+        data["trajectory"] = [{"sha": "zzz", "suite": suite, "mode": mode,
+                               "date": "2026-07-30", "rows": rows}]
+        Path(path).write_text(json.dumps(data))
+        return data
+
+    monkeypatch.setattr(harness, "append_bench", broken_append)
+    p = _write(tmp_path, _updates_doc())
+    errs = check_bench.check_append_immutable(p)
+    assert any("pre-existing trajectory" in e for e in errs)

@@ -160,3 +160,94 @@ def test_build_sharded_empty_shards_and_seam_duplicates(ndev):
 @pytest.mark.parametrize("ndev", [1, 4, 8])
 def test_build_sharded_edge_meshes(ndev):
     _run_edge(ndev)
+
+
+_SEAM_SPARSE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.kernels import ops
+from repro.core import distributed, rmi as rmi_mod
+
+# Spy on both seam-verification layers: record every per-shard miss count
+# so the test can pin that the +inf exchange pads (masked to a member key,
+# 0.0 on an empty shard) never blow the sparse budget — the pre-PR4 bug
+# demoted EVERY lookup to the dense full re-search whenever any shard was
+# empty, because a batch of raw +inf pads always fails the left-boundary
+# seam check.
+kernel_bad, jnp_bad = [], []
+
+orig_fix = ops._seam_fix
+def spy_fix(r, kf, qf, seam_budget):
+    n = kf.shape[0]
+    rc = jnp.clip(r, 0, n - 1)
+    valid = ((r == 0) | (kf[jnp.clip(r - 1, 0, n - 1)] < qf)) & \
+            ((r == n) | (kf[rc] >= qf))
+    jax.debug.callback(lambda nb: kernel_bad.append(int(nb)),
+                       jnp.sum(~valid))
+    return orig_fix(r, kf, qf, seam_budget)
+ops._seam_fix = spy_fix
+
+orig_vs = rmi_mod.verified_search
+def spy_vs(keys, queries, lo, hi, iters=None):
+    n = keys.shape[0]
+    r = rmi_mod.bounded_search(keys, queries, lo, hi, iters=iters)
+    rc = jnp.clip(r, 0, n - 1)
+    valid = ((r == 0) | (keys[jnp.clip(r - 1, 0, n - 1)] < queries)) & \
+            ((r == n) | (keys[rc] >= queries))
+    jax.debug.callback(lambda nb: jnp_bad.append(int(nb)),
+                       jnp.sum(~valid))
+    return orig_vs(keys, queries, lo, hi, iters=iters)
+rmi_mod.verified_search = spy_vs
+
+mesh = jax.make_mesh((4,), ("data",))
+rng = np.random.default_rng(0)
+
+def decode(idx, r):
+    cap = idx.keys.shape[1]
+    valid = np.asarray(idx.valid)
+    starts = np.concatenate([[0], np.cumsum(valid)])
+    return starts[r // cap] + r % cap
+
+# ---- n < n_shards: three empty shards, heavy out-of-range load ---------
+keys = np.unique(rng.uniform(1.0, 1e5, 3).astype(np.float32)) \
+    .astype(np.float64)
+idx = distributed.build_sharded(jnp.asarray(keys), mesh, n_leaves=16)
+B = 2048
+q = rng.permutation(np.concatenate(
+    [keys, rng.uniform(0.5, 2e5, B - keys.size - 2), [0.0, 1e30]]))
+for uk in (False, True):
+    kernel_bad.clear(); jnp_bad.clear()
+    fn = distributed.make_lookup_fn(idx, use_kernel=uk)
+    r = np.asarray(fn(jnp.asarray(q)))
+    np.testing.assert_array_equal(decode(idx, r),
+                                  np.searchsorted(keys, q, side="left"))
+    bad = kernel_bad if uk else jnp_bad
+    assert bad and max(bad) == 0, \
+        "empty-shard pads must be seam-clean, got misses %r" % bad
+
+# ---- duplicate-run data + an empty shard: the non-empty shards' real
+# seam misses must stay sparse (within budget), not demote to dense ------
+keys = np.sort(np.concatenate([np.full(900, 10.0), [20.0, 30.0]]))
+idx = distributed.build_sharded(jnp.asarray(keys), mesh, n_leaves=16)
+assert int(np.sum(np.asarray(idx.valid) == 0)) >= 1, "needs an empty shard"
+q = jnp.asarray(rng.choice([5.0, 10.0, 15.0, 20.0, 25.0, 35.0], 2048))
+kernel_bad.clear()
+fn = distributed.make_lookup_fn(idx, use_kernel=True)
+r = np.asarray(fn(q))
+np.testing.assert_array_equal(
+    decode(idx, r), np.searchsorted(keys, np.asarray(q), side="left"))
+assert max(kernel_bad) > 0, "this workload must produce real seam misses"
+assert max(kernel_bad) <= 1024, \
+    "seam misses must stay within the sparse budget, got %r" % kernel_bad
+print("SEAM_SPARSE_OK")
+"""
+
+
+def test_empty_shards_keep_sparse_seam_path():
+    """Regression (PR4 pad-mask fix, pinned here): with empty shards in the
+    mesh, exchange padding masked to a member key must produce zero seam
+    misses on every shard — and real seam misses on non-empty shards must
+    resolve through the sparse path, never the dense full re-search."""
+    run_mesh_script(_SEAM_SPARSE_SCRIPT, "SEAM_SPARSE_OK")

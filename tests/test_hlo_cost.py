@@ -2,7 +2,6 @@
 exists: XLA cost_analysis counts while bodies once)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro  # noqa: F401
 from repro.launch.hlo_cost import HloCost
@@ -60,7 +59,6 @@ def test_dot_flops_plain():
 
 
 def test_collectives_counted_with_trips():
-    import os
     devs = jax.device_count()
     if devs < 2:
         import pytest

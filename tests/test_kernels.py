@@ -166,7 +166,7 @@ def test_flash_attention_kernel(B, Sq, H, dh, dtype):
     path (which the LM substrate uses and other tests validate)."""
     from repro.kernels.flash import flash_attention_pallas
     from repro.models.layers import flash_attention
-    import ml_dtypes
+    import ml_dtypes  # noqa: F401 — bf16 availability probe
     dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
     q = jnp.asarray(RNG.normal(0, 1, (B, Sq, H, dh)), dt)
     k = jnp.asarray(RNG.normal(0, 1, (B, Sq, H, dh)), dt)

@@ -1,0 +1,133 @@
+"""Per-shard slice cache: after any interleaved churn sequence, the
+incrementally maintained stacked device state must be bit-exact against a
+cold full restack, on 1/2/4/8-device meshes (subprocess per mesh size, like
+the other multi-device suites).
+
+Also pins the O(touched) accounting contract: a batch routed to one shard
+(no rebalance, no capacity-class crossing) rewrites exactly one slice row
+and never triggers a full restack.
+"""
+import pytest
+
+from conftest import run_mesh_script
+
+pytestmark = pytest.mark.kernel
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+ndev = %(ndev)d
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+def assert_stack_equal(warm, cold, tag):
+    assert warm.keys() == cold.keys(), tag
+    for k in warm:
+        a, b = warm[k], cold[k]
+        if k == "leaf_kind":
+            assert a == b, (tag, k)
+        elif k in ("bcap", "dcap", "iters"):
+            assert a == b, (tag, k, a, b)
+        elif k == "packed":
+            assert (a is None) == (b is None), (tag, k)
+            if a is not None:
+                for x, y in zip(a, b):
+                    np.testing.assert_array_equal(
+                        np.asarray(x), np.asarray(y),
+                        err_msg="%%s %%s" %% (tag, k))
+        elif k in ("root", "leaves"):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg="%%s %%s" %% (tag, k))
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg="%%s %%s" %% (tag, k))
+
+def check_vs_cold(idx, tag):
+    # warm: whatever the incremental path maintained; cold: force a full
+    # re-assembly of the same logical state and compare every array.
+    warm = dict(idx._stacked())
+    idx._packed_stack(idx._stack)
+    warm = dict(idx._stack)
+    idx._stack = None
+    idx._dirty.clear()
+    cold = idx._stacked()
+    idx._packed_stack(cold)
+    assert_stack_equal(warm, cold, tag)
+
+mesh = jax.make_mesh((ndev,), ("data",))
+for seed in (3, 11):
+    rng = np.random.default_rng(seed + 97 * ndev)
+    base = f32keys(rng.lognormal(0, 0.8, 8_000) * 1e3)
+    fresh = np.setdiff1d(f32keys(rng.lognormal(0, 0.8, 60_000) * 1e3), base)
+    idx = distributed.ShardedDynamicIndex.build(
+        jnp.asarray(base), mesh, n_leaves=32, eps=0.7)
+    live = base.copy()
+    ptr = 0
+    for rnd in range(4):
+        ins = fresh[ptr:ptr + 900]; ptr += 900
+        idx.insert_batch(ins)
+        live = np.sort(np.concatenate([live, ins]))
+        dels = rng.choice(live, 250, replace=False)
+        idx.delete_batch(dels)
+        keep = np.ones(live.size, bool)
+        keep[np.searchsorted(live, np.unique(dels))] = False
+        live = live[keep]
+        check_vs_cold(idx, "seed %%d round %%d" %% (seed, rnd))
+        q = rng.permutation(np.concatenate(
+            [rng.choice(live, 400), fresh[-16:],
+             np.asarray(idx.splits, np.float64) if idx.n_shards > 1
+             else np.zeros(0)]))
+        lo = np.searchsorted(live, q, side="left")
+        hi = np.searchsorted(live, q, side="right")
+        for uk in (False, True):
+            f, r = idx.find(jnp.asarray(q), use_kernel=uk)
+            np.testing.assert_array_equal(np.asarray(r), lo)
+            np.testing.assert_array_equal(np.asarray(f), hi > lo)
+
+# ---- O(touched) accounting: one quiet batch into one shard ------------
+rng = np.random.default_rng(5)
+base = f32keys(rng.lognormal(0, 0.8, 8_000) * 1e3)
+idx = distributed.ShardedDynamicIndex.build(
+    jnp.asarray(base), mesh, n_leaves=32, eps=0.7, rebalance_ratio=None)
+jax.block_until_ready(idx.find(jnp.asarray(base[:64]), use_kernel=False)[1])
+# prime shard 0's delta capacity so the measured batch cannot cross a
+# power of two (which would legitimately force a full restack)
+span0 = float(idx.splits[0]) if idx.n_shards > 1 else float(base[-1])
+pool = np.setdiff1d(f32keys(rng.uniform(base[0] / 2, span0, 9_000)), base)
+idx.insert_batch(pool[:2_000])
+jax.block_until_ready(idx.find(jnp.asarray(base[:64]), use_kernel=False)[1])
+caps = (idx._bcaps.copy(), idx._dcaps.copy())
+rows0, full0 = idx.restack_rows, idx.restack_full
+idx.insert_batch(pool[2_000:2_128])         # one shard, no capacity change
+jax.block_until_ready(idx.find(jnp.asarray(base[:64]), use_kernel=False)[1])
+assert np.array_equal(caps[0], idx._bcaps), "base capacity must not move"
+assert np.array_equal(caps[1], idx._dcaps), "delta capacity must not move"
+assert idx.restack_full == full0, "quiet batch must not full-restack"
+assert idx.restack_rows - rows0 == 1, \
+    "one touched shard must rewrite exactly one row, got %%d" %% (
+        idx.restack_rows - rows0)
+print("RESTACK_OK ndev=%(ndev)d")
+"""
+
+
+def _run(ndev: int):
+    run_mesh_script(_SCRIPT % {"ndev": ndev}, f"RESTACK_OK ndev={ndev}")
+
+
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_restack_cache_bit_exact_small_mesh(ndev):
+    _run(ndev)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [4, 8])
+def test_restack_cache_bit_exact_large_mesh(ndev):
+    _run(ndev)

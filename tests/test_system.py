@@ -3,7 +3,6 @@ correct indices, the full roster answers lookups exactly, the distributed
 service and data pipeline resolve addresses, and a short LM training run
 learns (loss decreases)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -484,3 +484,113 @@ def test_indexed_dataset_append_and_delete(lin_pool):
     # draining a shard completely must not crash boundary maintenance
     ds.delete_samples(1, ds.shards[1].keys)
     assert ds.shards[1].keys.size == 0
+
+
+# ---------------------------------------------------------------------------
+# Boundary-run shed primitives + delta flush (PR5: incremental migration).
+# ---------------------------------------------------------------------------
+def _churned_dyn(n=4000, seed=31, n_leaves=64, eps=0.7):
+    """A DynamicRMI with live delta entries and tombstones in both tiers."""
+    base = _f32_keys(n, seed=seed, lo=0.0, hi=1e6)
+    extra = np.setdiff1d(_f32_keys(3 * n, seed=seed + 1, lo=0.0, hi=1e6),
+                         base)
+    d = DynamicRMI.build(jnp.asarray(base), eps=eps, n_leaves=n_leaves,
+                         kind="linear")
+    rng = np.random.default_rng(seed + 2)
+    d.insert_batch(extra[:n // 4])
+    live = np.sort(np.concatenate([base, extra[:n // 4]]))
+    dels = rng.choice(live, n // 10, replace=False)
+    d.delete_batch(dels)
+    keep = np.ones(live.size, bool)
+    keep[np.searchsorted(live, np.unique(dels))] = False
+    return d, live[keep]
+
+
+def _assert_find_matches(d, live, q):
+    lo = np.searchsorted(live, q, side="left")
+    hi = np.searchsorted(live, q, side="right")
+    found, rank = d.find(jnp.asarray(q), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(rank), lo)
+    np.testing.assert_array_equal(np.asarray(found), hi > lo)
+
+
+@pytest.mark.parametrize("frac", [0.3, 0.7])
+def test_shed_suffix_truncates_both_tiers(frac):
+    d, live = _churned_dyn()
+    split = float(live[int(live.size * frac)])
+    before_leaves = d.index.leaves
+    d.shed_suffix(split)
+    kept = live[live <= split]
+    np.testing.assert_array_equal(d.live_keys(), kept)
+    assert d.live_count == kept.size
+    # survivor positions unchanged: models untouched, packed root cache too
+    assert d.index.leaves is before_leaves
+    rng = np.random.default_rng(9)
+    q = np.concatenate([rng.choice(kept, 300), [split, kept[0], kept[-1]]])
+    _assert_find_matches(d, kept, q)
+
+
+@pytest.mark.parametrize("frac", [0.3, 0.7])
+def test_shed_prefix_shifts_intercepts_exactly(frac):
+    d, live = _churned_dyn(seed=47)
+    split = float(live[int(live.size * frac)])
+    iters_before = d.index.search_iters
+    d.shed_prefix(split)
+    kept = live[live > split]
+    np.testing.assert_array_equal(d.live_keys(), kept)
+    assert d.live_count == kept.size
+    # the uniform shift is exact: bounds (hence the clamped depth) keep
+    assert d.index.search_iters == iters_before
+    rng = np.random.default_rng(9)
+    q = np.concatenate([rng.choice(kept, 300), [split, kept[0], kept[-1]]])
+    _assert_find_matches(d, kept, q)
+
+
+def test_shed_roundtrip_donor_receiver():
+    """A full donor/receiver hand-off: suffix-shed keys absorbed by an
+    adjacent structure keep both sides exact (the sharded _migrate path,
+    minus the mesh)."""
+    d, live = _churned_dyn(seed=53)
+    cut = live[int(live.size * 0.6)]
+    moved = live[live > cut]
+    recv_base = _f32_keys(500, seed=99, lo=2e6, hi=3e6)
+    recv = DynamicRMI.build(jnp.asarray(recv_base), eps=0.7, n_leaves=32,
+                            kind="linear")
+    d.shed_suffix(float(cut))
+    recv.insert_batch(moved)
+    recv_live = np.sort(np.concatenate([recv_base, moved]))
+    rng = np.random.default_rng(3)
+    _assert_find_matches(d, live[live <= cut],
+                         rng.choice(live[live <= cut], 200))
+    _assert_find_matches(recv, recv_live, np.concatenate(
+        [rng.choice(recv_live, 300), [moved[0], moved[-1], recv_base[0]]]))
+
+
+def test_flush_delta_merges_and_localizes():
+    d, live = _churned_dyn(seed=61)
+    # a small batch after the bulk churn stays buffered (fresh budgets)
+    extra = np.setdiff1d(_f32_keys(12_000, seed=62, lo=0.0, hi=1e6), live)
+    d.insert_batch(extra[:200])
+    live = np.sort(np.concatenate([live, extra[:200]]))
+    assert d.delta_live > 0
+    d.flush_delta()
+    assert d.delta_live == 0 and d.delta_dead_count == 0
+    np.testing.assert_array_equal(d.live_keys(), live)
+    rng = np.random.default_rng(5)
+    _assert_find_matches(d, live, rng.choice(live, 300))
+    # headroom is restored for the flushed leaves (fresh Lemma 4.1 budgets)
+    assert d.insertion_headroom > 0
+
+
+def test_maintenance_stats_surface():
+    from repro.serve.kvcache import DynamicPageTable, PagedKVCache
+    cache = PagedKVCache(n_pages=64, page_size=8, n_kv_heads=1, head_dim=4,
+                         n_layers=1)
+    cache.allocate_batch(0, range(16))
+    table = DynamicPageTable.build(cache, n_leaves=8)
+    table.allocate(1, range(8))
+    table.release(0)
+    stats = table.maintenance_stats()
+    assert stats["sharded"] is False
+    assert stats["live"] == 8
+    assert stats["rebuilds"] >= 0 and stats["buffered"] >= 0
