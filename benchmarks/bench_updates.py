@@ -30,6 +30,10 @@ Times ns/op for the §4 update subsystem and writes ``BENCH_updates.json``
                 shard count — the per-shard slice cache makes per-batch
                 restack work O(touched shards); migrate-skew rows count
                 incremental (delta-riding) vs full-rebuild migrations
+  recover       durability sweep (core.persist) on a forced 4-device mesh:
+                snapshot cost vs index size, same-width restore latency,
+                and restore-resharded 4->2 latency (the elastic-restart
+                path) — full_rebuilds in the detail must stay 0
 
 Rows *append* to ``BENCH_updates.json`` under ``trajectory``, keyed by
 (git sha, suite) — the committed baseline rows stay untouched.
@@ -343,6 +347,76 @@ def bench_restack(n: int = 1 << 16, shard_counts=(2, 4, 8),
     return rows
 
 
+def bench_recover(n_values=(1 << 14, 1 << 16), eps: float = 0.7,
+                  n_shards: int = 4) -> list[dict]:
+    """Durability cost trajectory: snapshot cost vs index size, restore
+    latency at the same width, and restore-resharded (N->2) latency — the
+    elastic-restart path after host loss.  ``full_rebuilds`` in the detail
+    must stay 0: resharding cuts fitted shards and rides delta merges, it
+    never rebuilds from scratch.
+    """
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import distributed, persist
+
+    rows: list[dict] = []
+
+    def _row(op, impl, n_keys, ns, detail):
+        rows.append({"op": op, "impl": impl, "n_keys": int(n_keys),
+                     "ns_per_op": round(ns, 1), "detail": detail})
+        print(f"{op:16s} {impl:12s} {ns:12.1f} ns/key  {detail}")
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("data",))
+    mesh2 = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+    rng = np.random.default_rng(7)
+    for n in n_values:
+        base = _keys(n)
+        n_leaves = max(n // 256, 16)
+        idx = distributed.ShardedDynamicIndex.build(
+            jnp.asarray(base), mesh, n_leaves=n_leaves, eps=eps)
+        fresh = np.setdiff1d(_keys(4 * n, seed=9), base)
+        idx.insert_batch(fresh[:n // 8])
+        idx.delete_batch(rng.choice(base, n // 16, replace=False))
+        nk = idx.total_live
+        with tempfile.TemporaryDirectory() as d:
+            store = persist.SnapshotStore(d, keep=2 + REPEATS)
+            persist.snapshot_sharded(store, 0, idx, blocking=True)  # warm
+            step = [0]
+
+            def _snap():
+                step[0] += 1
+                persist.snapshot_sharded(store, step[0], idx,
+                                         blocking=True)
+
+            dt = _median(_snap)
+            sd = Path(store.directory) / persist._STEP_FMT.format(step[0])
+            nbytes = sum(f.stat().st_size for f in sd.iterdir())
+            _row("snapshot", f"sharded-{n_shards}", nk, dt / nk * 1e9,
+                 f"bytes={nbytes} files={len(list(sd.iterdir()))} "
+                 f"keys={nk}")
+
+            dt = _median(lambda: persist.restore_sharded(store, mesh))
+            _row("restore", f"sharded-{n_shards}", nk, dt / nk * 1e9,
+                 f"keys={nk} same-width")
+
+            st = [None]
+
+            def _reshard():
+                _, rep = persist.restore_sharded(store, mesh2)
+                st[0] = rep.reshard
+
+            dt = _median(_reshard)
+            s = st[0]
+            _row("restore-reshard", f"{n_shards}to2", nk, dt / nk * 1e9,
+                 f"pieces={s.pieces} delta_merges={s.delta_merges} "
+                 f"moved_keys={s.moved_keys} leaf_refits={s.leaf_refits} "
+                 f"full_rebuilds={s.full_rebuilds}")
+    return rows
+
+
 def _sharded_rows(n_shards: int, n: int) -> list[dict]:
     """Collect the sharded rows from a forced-device-count subprocess
     (harness.worker_rows — the host-device count locks at first jax
@@ -358,6 +432,14 @@ def _restack_rows_worker(n_devices: int, n: int) -> list[dict]:
     from . import harness
     return harness.worker_rows("benchmarks.bench_updates",
                                "--restack-worker", n_devices, ["--n", n])
+
+
+def _recover_rows_worker(n_devices: int, n: int) -> list[dict]:
+    """Collect the durability sweep from a forced-device-count subprocess
+    (snapshot / restore / restore-resharded-to-2)."""
+    from . import harness
+    return harness.worker_rows("benchmarks.bench_updates",
+                               "--recover-worker", n_devices, ["--n", n])
 
 
 def quick_rows(n: int = 1 << 15) -> list[dict]:
@@ -382,6 +464,14 @@ def restack_quick_rows(n: int = 1 << 15, n_devices: int = 8) -> list[dict]:
             for r in _restack_rows_worker(n_devices, n)]
 
 
+def recover_quick_rows(n: int = 1 << 14, n_devices: int = 4) -> list[dict]:
+    """CSV rows for benchmarks.run's ``recover`` suite (subprocess mesh)."""
+    return [{"name": f"recover_{r['op']}_{r['impl']}",
+             "us_per_call": r["ns_per_op"] / 1e3,
+             "derived": r["detail"]}
+            for r in _recover_rows_worker(n_devices, n)]
+
+
 def main() -> None:
     from . import harness
     ap = argparse.ArgumentParser()
@@ -392,6 +482,8 @@ def main() -> None:
                     help=argparse.SUPPRESS)   # internal: emit rows as JSON
     ap.add_argument("--restack-worker", type=int, default=None,
                     help=argparse.SUPPRESS)   # internal: emit rows as JSON
+    ap.add_argument("--recover-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)   # internal: emit rows as JSON
     ap.add_argument("--out", default=str(Path(__file__).resolve().parent.parent
                                          / "BENCH_updates.json"))
     args = ap.parse_args()
@@ -401,6 +493,10 @@ def main() -> None:
         return
     if args.restack_worker:
         rows = bench_restack(args.n)
+        print(json.dumps(rows))
+        return
+    if args.recover_worker:
+        rows = bench_recover((args.n, 4 * args.n))
         print(json.dumps(rows))
         return
     rows = bench(args.n)
@@ -431,6 +527,14 @@ def main() -> None:
                      "shard count (per-shard slice cache, O(touched) "
                      "restack); migrate-skew rows report incremental "
                      "(delta-riding) vs full-rebuild migrations.")
+        krows = _recover_rows_worker(4, min(args.n, 1 << 14))
+        if krows:
+            harness.append_bench(
+                args.out, "recover", krows,
+                note="Durability sweep on a forced 4-host-device CPU mesh: "
+                     "snapshot cost vs index size, same-width restore, and "
+                     "restore-resharded 4->2 (elastic restart); "
+                     "full_rebuilds must stay 0.")
 
 
 if __name__ == "__main__":

@@ -85,7 +85,7 @@ def rmrt_rows(n: int = 200_000, q: int = 16_384):
 
 
 SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "sharded",
-          "restack", "kernels", "rmrt"]
+          "restack", "recover", "kernels", "rmrt"]
 
 # --record routes each suite's rows into the matching committed trajectory
 # (appended keyed by git sha + suite — never regenerated; see
@@ -93,6 +93,7 @@ SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "sharded",
 _RECORD_TARGETS = {
     "fig7": "BENCH_updates.json", "updates": "BENCH_updates.json",
     "sharded": "BENCH_updates.json", "restack": "BENCH_updates.json",
+    "recover": "BENCH_updates.json",
     "kernels": "BENCH_lookup.json", "rmrt": "BENCH_lookup.json",
 }
 
@@ -140,6 +141,10 @@ def main() -> None:
     if "restack" in only:
         from . import bench_updates
         by_suite["restack"] = bench_updates.restack_quick_rows(
+            **({"n": args.n} if args.n else {}))
+    if "recover" in only:
+        from . import bench_updates
+        by_suite["recover"] = bench_updates.recover_quick_rows(
             **({"n": args.n} if args.n else {}))
     if "kernels" in only:
         by_suite["kernels"] = kernel_rows(

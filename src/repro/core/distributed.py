@@ -461,6 +461,12 @@ class ShardedDynamicIndex:
     restack_full: int = 0               # cold stack assemblies (capacity
                                         # class changes / first use)
     restack_rows: int = 0               # dirty slice rows rewritten in place
+    capacity_shrinks: int = 0           # shards whose tiers stepped a
+                                        # capacity class back down
+    # Shards replaced by trivial empty shards during a damaged restore
+    # (persist.restore_sharded on_corrupt="quarantine"): queries routed to
+    # their ranges answer found=False until the operator re-feeds them.
+    quarantined: list = field(default_factory=list)
     build_kwargs: dict = field(default_factory=dict)
     _stack: dict | None = None          # assembled stacked device state
     _dirty: set = field(default_factory=set)    # shard ids needing re-slice
@@ -532,6 +538,12 @@ class ShardedDynamicIndex:
             return
         for s in ids:
             d = self.shards[s]
+            # Eager capacity step-down (hysteresis inside shrink_capacity):
+            # no shrinkable state survives a mutation, so a cold restack is
+            # always a pure re-assembly of the logical state — the warm/cold
+            # bit-exactness contract the restack-cache tests pin.
+            if d.shrink_capacity():
+                self.capacity_shrinks += 1
             self._bcaps[s] = d.index.keys.shape[0]
             self._dcaps[s] = d.delta_keys.shape[0]
             self._iters_vec[s] = d.index.search_iters
@@ -746,7 +758,19 @@ class ShardedDynamicIndex:
 
     def _restack_full(self, bcap: int, dcap: int) -> dict:
         """Cold assembly over every shard (first use / capacity-class
-        change)."""
+        change).  Also the capacity-class catch-all: shards that arrived
+        oversized without passing through ``_touch`` (a just-restored or
+        just-resharded index) step down here before the pad widths are
+        fixed; for a maintained index the sweep is a no-op (``_touch``
+        shrinks eagerly)."""
+        for s, d in enumerate(self.shards):
+            if d.shrink_capacity():
+                self.capacity_shrinks += 1
+                self._bcaps[s] = d.index.keys.shape[0]
+                self._dcaps[s] = d.delta_keys.shape[0]
+                self._iters_vec[s] = d.index.search_iters
+        bcap = int(self._bcaps.max())
+        dcap = int(self._dcaps.max())
         stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
         rows = [self._slice_rows(s, bcap, dcap)
                 for s in range(self.n_shards)]

@@ -1,0 +1,805 @@
+"""Durable snapshots + elastic N->M resharding for the sharded dynamic
+index (and the generic checkpoint store the train-side ``Checkpointer``
+rides).
+
+A production index must survive restarts and mesh resizes: everything
+``ShardedDynamicIndex`` serves from is process-lifetime device state, so
+this module gives it (1) crash-safe snapshots, (2) verified restore that is
+*bit-exact* mid-churn, and (3) restore onto a different shard count that
+reuses fitted state instead of rebuilding (the paper's lazy-reuse thesis
+applied to operations: after a disruption, the cheap path is reusing fitted
+leaves, not refitting them).
+
+Snapshot layout and manifest schema (``SCHEMA`` below)::
+
+    <dir>/step_00000042/            one committed snapshot
+        manifest.json               commit record (see below)
+        index.npz                   global arrays: splits, counter table,
+                                    skew mutes
+        shard_00000.npz ...         one file per shard: both tiers,
+                                    tombstone bitmaps, fitted root/leaf
+                                    params, error bounds, Lemma 4.1
+                                    counters, window widths
+        pool.npz                    optional: the replicated model pool
+
+    manifest.json = {
+      "schema": 1,                  manifest schema version — an unknown
+                                    version is treated as corruption and
+                                    falls back, never half-parsed
+      "kind":   "sharded-dynamic-index" | "tree",
+      "step":   int, "time": float,
+      "meta":   free-form JSON the writer attached (for the sharded index:
+                policies, per-shard scalar counters, build kwargs),
+      "files":  {fname: {"md5": hex, "arrays": {name: {shape, dtype}}}},
+    }
+
+Durability contract (the invalidation rules a reader can rely on):
+
+  * **Atomic commit**: a snapshot is written into ``step_*.tmp`` and
+    ``os.replace``-renamed into place after every file and the manifest
+    are on disk — a write killed mid-shard (crash, SIGKILL, fault
+    injection) leaves only a ``.tmp`` directory that readers never see.
+  * **Checksummed restore**: every file's md5 is recorded in the manifest
+    at write time (over the exact bytes handed to the OS); restore
+    re-hashes what it reads and raises :class:`SnapshotCorruption` on any
+    mismatch, torn manifest, or missing file — corruption is *detected and
+    reported*, never silently accepted.
+  * **Latest-complete fallback**: :func:`restore_sharded` walks snapshots
+    newest-to-oldest and serves the first one that verifies end-to-end;
+    with ``on_corrupt="quarantine"`` a snapshot whose *shard files* are
+    damaged restores anyway, replacing each damaged shard with a trivial
+    empty shard (recorded in ``report.quarantined`` and
+    ``index.quarantined``) — degraded serving: queries routed to a
+    quarantined range answer not-found instead of sinking the process.
+  * **Surfaced async errors**: the background writer never swallows a
+    failure — it is recorded and re-raised from ``wait()`` or the next
+    ``save()``; transient ``OSError``s retry with exponential backoff
+    (``retries``/``backoff`` knobs) before being surfaced.
+
+Bit-exactness: a snapshot taken between ``insert_batch`` calls restores to
+identical ``find`` results on both the kernel and jnp paths.  Everything
+the stacked dispatch consumes is either serialized verbatim (f64 tiers,
+bitmaps, fitted params, error bounds, frozen routing scales, clamped
+depths, counter table) or a pure deterministic function of it (tombstone
+prefix sums, packed kernel tables, the per-shard slice stack) — so the
+cold restack after restore reproduces the pre-crash device state bit for
+bit.
+
+Elastic resharding (:func:`reshard_sharded`, also the restore path when
+the target mesh width differs from the snapshot): new boundaries are
+balanced-live-count cuts snapped to duplicate-run starts (the
+:func:`~repro.core.distributed.shard_bounds` invariant), old shards are
+cut into boundary-aligned *pieces* with ``DynamicRMI.shed_prefix``/
+``shed_suffix`` on clones (truncation or exact intercept shift — zero
+refits), and each new shard keeps its largest piece as the *anchor* while
+the other pieces' live keys ride the anchor's **delta tier** through the
+ordinary routed merge — at worst triggering localized Lemma 4.1 rebuilds
+of the seam-window leaves (out-of-range keys route to the anchor's edge
+leaves under its frozen root).  ``ReshardStats`` pins the contract:
+``full_rebuilds`` stays 0 (only trivial empty shards are ever built from
+scratch) and ``leaf_refits`` counts the seam-leaf rebuilds.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+SCHEMA = 1
+_STEP_FMT = "step_{:08d}"
+
+
+class SnapshotError(IOError):
+    """Base error of the persist layer."""
+
+
+class SnapshotCorruption(SnapshotError):
+    """A snapshot failed verification (torn manifest, checksum mismatch,
+    missing file, unknown schema)."""
+
+
+# ---------------------------------------------------------------------------
+# Tree walkers (pluggable: dicts + NamedTuples, None-skipping) — shared by
+# the train Checkpointer and the sharded snapshot below.
+# ---------------------------------------------------------------------------
+def tree_paths(tree, prefix: str = "") -> list:
+    """Stable dotted path for every leaf (dicts + NamedTuples; ``None``
+    subtrees are skipped)."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out += tree_paths(tree[k], f"{prefix}{k}.")
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            out += tree_paths(getattr(tree, k), f"{prefix}{k}.")
+    elif tree is None:
+        pass
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def set_tree_path(tree, path: str, value):
+    """Set ``path`` (dotted) in a dict/NamedTuple tree; returns a
+    replacement node when an immutable (NamedTuple) root was rebuilt."""
+    keys = path.split(".")
+
+    def rec(node, i):
+        k = keys[i]
+        if isinstance(node, dict):
+            if i == len(keys) - 1:
+                node[k] = value
+            else:
+                repl = rec(node[k], i + 1)
+                if repl is not None:       # immutable child replaced
+                    node[k] = repl
+            return None
+        if hasattr(node, "_fields"):       # NamedTuple: immutable
+            if i == len(keys) - 1:
+                return node._replace(**{k: value})
+            repl = rec(getattr(node, k), i + 1)
+            return node._replace(**{k: repl}) if repl is not None else None
+        return None
+
+    return rec(tree, 0)
+
+
+def get_tree_path(tree, path: str):
+    node = tree
+    for k in path.split("."):
+        node = node[k] if isinstance(node, dict) else getattr(node, k)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Array codec: npy/npz have no bf16 — view-cast to u16 and tag the dtype in
+# the manifest so restore round-trips exactly.
+# ---------------------------------------------------------------------------
+def _encode_array(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _decode_array(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def _npz_key(name: str) -> str:
+    # np.savez keywords cannot carry dots reliably; names round-trip via
+    # the manifest, so the on-disk key just needs to be collision-free.
+    return name.replace(".", "__")
+
+
+def _write_bytes(path: str, data: bytes) -> None:
+    """Single seam for every snapshot byte written to disk — the
+    fault-injection harness (tests/faultinject.py) monkeypatches this to
+    kill writes mid-file, tear manifests, or raise transient OSErrors."""
+    with open(path, "wb") as f:
+        f.write(data)
+
+
+# ---------------------------------------------------------------------------
+# The generic store.
+# ---------------------------------------------------------------------------
+@dataclass
+class SnapshotStore:
+    """Checksummed, atomically-committed snapshot directory with an async
+    writer whose failures are surfaced, never swallowed.
+
+    ``save`` takes ``files``: {fname: {array_name: np.ndarray}} — a fname
+    ending in ``.npy`` holds exactly one array (under name ``""``), any
+    other holds an npz of its dict.  ``retries`` extra transient-
+    ``OSError`` attempts per file (= per shard) with ``backoff *
+    2**attempt`` sleeps; the final failure is raised (blocking save) or
+    recorded and re-raised from ``wait()``/the next ``save()`` (async)."""
+    directory: str
+    keep: int = 3
+    retries: int = 0
+    backoff: float = 0.05
+    kind: str = "tree"
+    write_retries: int = 0              # transient attempts that were retried
+    _q: queue.Queue = None
+    _thread: threading.Thread = None
+    _error: BaseException = None
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._q = queue.Queue(maxsize=2)
+
+    # -- write -------------------------------------------------------------
+    def save(self, step: int, files: dict, meta: dict | None = None, *,
+             blocking: bool = False) -> None:
+        """Write one snapshot.  Async by default: the caller-side cost is
+        materializing ``files``; a prior async failure is re-raised here
+        so a failed snapshot can never be mistaken for durability."""
+        self.raise_pending()
+        if blocking:
+            self._write(step, files, meta or {})
+            return
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        self._q.put((step, files, meta or {}))
+
+    def wait(self) -> None:
+        """Block until queued snapshots are on disk; re-raise any writer
+        failure."""
+        if self._thread is not None:
+            self._q.join()
+        self.raise_pending()
+
+    def raise_pending(self) -> None:
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise SnapshotError(
+                f"async snapshot write failed: {err!r}") from err
+
+    def _worker(self):
+        while True:
+            step, files, meta = self._q.get()
+            try:
+                self._write(step, files, meta)
+            except BaseException as e:
+                with self._lock:
+                    self._error = e
+            self._q.task_done()
+
+    def _write(self, step: int, files: dict, meta: dict) -> None:
+        self._write_once(step, files, meta)
+        self._gc()
+
+    def _retried_write(self, path: str, data: bytes) -> None:
+        """Per-file (= per-shard) retry with exponential backoff on
+        transient ``OSError``s; the final failure propagates."""
+        for attempt in range(self.retries + 1):
+            try:
+                _write_bytes(path, data)
+                return
+            except OSError:
+                if attempt >= self.retries:
+                    raise
+                self.write_retries += 1
+                time.sleep(self.backoff * (2 ** attempt))
+
+    def _write_once(self, step: int, files: dict, meta: dict) -> None:
+        d = os.path.join(self.directory, _STEP_FMT.format(step) + ".tmp")
+        shutil.rmtree(d, ignore_errors=True)    # stale tmp from a retry
+        os.makedirs(d, exist_ok=True)
+        manifest = {"schema": SCHEMA, "kind": self.kind, "step": step,
+                    "time": time.time(), "meta": meta, "files": {}}
+        for fname, arrays in files.items():
+            buf = io.BytesIO()
+            entry = {"arrays": {}}
+            if fname.endswith(".npy"):
+                (name, arr), = arrays.items()
+                store, tag = _encode_array(np.asarray(arr))
+                np.save(buf, store)
+                entry["arrays"][name] = {"shape": list(np.shape(arr)),
+                                         "dtype": tag}
+            else:
+                enc = {}
+                for name, arr in arrays.items():
+                    store, tag = _encode_array(np.asarray(arr))
+                    enc[_npz_key(name)] = store
+                    entry["arrays"][name] = {"shape": list(np.shape(arr)),
+                                             "dtype": tag}
+                np.savez(buf, **enc)
+            data = buf.getvalue()
+            entry["md5"] = hashlib.md5(data).hexdigest()
+            self._retried_write(os.path.join(d, fname), data)
+            manifest["files"][fname] = entry
+        self._retried_write(os.path.join(d, "manifest.json"),
+                            json.dumps(manifest).encode())
+        final = os.path.join(self.directory, _STEP_FMT.format(step))
+        shutil.rmtree(final, ignore_errors=True)   # re-save of same step
+        os.replace(d, final)                       # atomic commit
+
+    # -- read --------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, _STEP_FMT.format(step))
+
+    def steps(self) -> list:
+        """Committed snapshot steps, ascending (``.tmp`` dirs — torn
+        writes — are never listed)."""
+        out = []
+        for s in os.listdir(self.directory):
+            if s.startswith("step_") and not s.endswith(".tmp"):
+                try:
+                    out.append(int(s.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def _gc(self) -> None:
+        for s in self.steps()[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def read_manifest(self, step: int) -> dict:
+        """Parse + validate a snapshot's manifest; any defect (missing,
+        torn JSON, unknown schema, bad structure) is SnapshotCorruption."""
+        path = os.path.join(self._step_dir(step), "manifest.json")
+        try:
+            with open(path, "rb") as f:
+                manifest = json.loads(f.read())
+        except (OSError, ValueError) as e:
+            raise SnapshotCorruption(
+                f"step {step}: unreadable manifest: {e!r}") from e
+        if not isinstance(manifest, dict) or \
+                manifest.get("schema") != SCHEMA or \
+                not isinstance(manifest.get("files"), dict):
+            raise SnapshotCorruption(
+                f"step {step}: manifest schema mismatch "
+                f"(got {manifest.get('schema')!r}, want {SCHEMA})")
+        return manifest
+
+    def load_file(self, step: int, fname: str, manifest: dict | None = None,
+                  *, verify: bool = True) -> dict:
+        """Load one snapshot file as {array_name: np.ndarray}, re-hashing
+        the bytes read against the manifest md5 (any mismatch, missing
+        file, or undecodable payload is SnapshotCorruption)."""
+        if manifest is None:
+            manifest = self.read_manifest(step)
+        entry = manifest["files"].get(fname)
+        if entry is None:
+            raise SnapshotCorruption(
+                f"step {step}: {fname} not in manifest")
+        try:
+            with open(os.path.join(self._step_dir(step), fname), "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise SnapshotCorruption(
+                f"step {step}: missing file {fname}: {e!r}") from e
+        if verify and hashlib.md5(data).hexdigest() != entry["md5"]:
+            raise SnapshotCorruption(
+                f"step {step}: checksum mismatch for {fname}")
+        try:
+            if fname.endswith(".npy"):
+                (name, spec), = entry["arrays"].items()
+                arr = np.load(io.BytesIO(data), allow_pickle=False)
+                return {name: _decode_array(arr, spec["dtype"])}
+            z = np.load(io.BytesIO(data), allow_pickle=False)
+            return {name: _decode_array(z[_npz_key(name)], spec["dtype"])
+                    for name, spec in entry["arrays"].items()}
+        except Exception as e:
+            raise SnapshotCorruption(
+                f"step {step}: undecodable payload in {fname}: {e!r}") from e
+
+
+# ---------------------------------------------------------------------------
+# Sharded dynamic index snapshots.
+# ---------------------------------------------------------------------------
+KIND_SHARDED = "sharded-dynamic-index"
+_SHARD_FMT = "shard_{:05d}.npz"
+
+_SHARD_SCALARS = (
+    "eps", "route_n", "base_n", "base_dead_count", "delta_live",
+    "delta_dead_count", "delta_compactions", "rebuilds", "deleted",
+    "capacity_shrinks")
+_IDX_COUNTERS = (
+    "rebalances", "migrations_incremental", "migrations_full",
+    "restack_full", "restack_rows", "capacity_shrinks")
+
+
+def _params_to(arrays: dict, prefix: str, params) -> None:
+    for path, arr in tree_paths(params):
+        arrays[prefix + path] = np.asarray(arr)
+
+
+def _params_from(arrays: dict, prefix: str, kind: str):
+    import jax.numpy as jnp
+    from . import models
+    if kind == "linear":
+        return models.LinearParams(a=jnp.asarray(arrays[prefix + "a"]),
+                                   b=jnp.asarray(arrays[prefix + "b"]))
+    return models.MLPParams(**{k: jnp.asarray(arrays[prefix + k])
+                               for k in ("w1", "b1", "w2", "b2")})
+
+
+def _shard_arrays(d) -> tuple[dict, dict]:
+    """(arrays, meta) for one ``DynamicRMI``.  Host-mutable numpy state is
+    copied (the async writer races later churn); device arrays are
+    immutable and referenced as-is.  Tombstone prefix sums, packed kernel
+    tables, and f32-exactness flags are derived state — recomputed on
+    restore from the same inputs, hence bit-identical."""
+    idx = d.index
+    arrays = {
+        "base_keys": np.asarray(idx.keys),
+        "base_dead": np.asarray(d.base_dead),
+        "err_lo": np.asarray(idx.err_lo),
+        "err_hi": np.asarray(idx.err_hi),
+        "reused_mask": np.asarray(idx.reused_mask),
+        "leaf_sim": np.asarray(idx.leaf_sim),
+        "delta_keys": np.asarray(d.delta_keys),
+        "delta_leaf": np.asarray(d.delta_leaf),
+        "delta_dead": np.asarray(d.delta_dead),
+        "n_inserts": d.n_inserts.copy(),
+        "budget": d.budget.copy(),
+        "win": d._win.copy(),
+    }
+    _params_to(arrays, "root.", idx.root)
+    _params_to(arrays, "leaves.", idx.leaves)
+    meta = {k: _json_scalar(getattr(d, k)) for k in _SHARD_SCALARS}
+    meta.update(root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
+                n_leaves=int(idx.n_leaves),
+                compact_dead_ratio=_json_scalar(d.compact_dead_ratio),
+                reuse_on_rebuild=d.reuse_on_rebuild,
+                build_kwargs=d.build_kwargs)
+    return arrays, meta
+
+
+def _json_scalar(v):
+    if v is None or isinstance(v, (bool, str)):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    return float(v)
+
+
+def _restore_shard(arrays: dict, meta: dict, pool):
+    """Rebuild one ``DynamicRMI`` from its snapshot arrays.  Everything
+    derived (psums, clamped depth, packed tables) is recomputed from the
+    serialized state, which the bit-exactness contract relies on."""
+    import jax.numpy as jnp
+    from . import rmi as rmi_mod
+    from .bounds import clamped_depth
+    from .updates import DynamicRMI, _psum
+
+    index = rmi_mod.RMIIndex(
+        keys=jnp.asarray(arrays["base_keys"]),
+        root_kind=meta["root_kind"],
+        root=_params_from(arrays, "root.", meta["root_kind"]),
+        leaf_kind=meta["leaf_kind"],
+        leaves=_params_from(arrays, "leaves.", meta["leaf_kind"]),
+        err_lo=jnp.asarray(arrays["err_lo"]),
+        err_hi=jnp.asarray(arrays["err_hi"]),
+        n_leaves=int(meta["n_leaves"]),
+        reused_mask=jnp.asarray(arrays["reused_mask"]),
+        leaf_sim=jnp.asarray(arrays["leaf_sim"]))
+    base_dead = jnp.asarray(arrays["base_dead"])
+    delta_dead = jnp.asarray(arrays["delta_dead"])
+    d = DynamicRMI(
+        index=index, pool=pool, eps=float(meta["eps"]),
+        route_n=int(meta["route_n"]),
+        delta_keys=jnp.asarray(arrays["delta_keys"]),
+        delta_leaf=jnp.asarray(arrays["delta_leaf"]),
+        delta_dead=delta_dead, delta_psum=_psum(delta_dead),
+        delta_live=int(meta["delta_live"]),
+        delta_dead_count=int(meta["delta_dead_count"]),
+        compact_dead_ratio=meta["compact_dead_ratio"],
+        delta_compactions=int(meta["delta_compactions"]),
+        base_n=int(meta["base_n"]), base_dead=base_dead,
+        base_psum=_psum(base_dead),
+        base_dead_count=int(meta["base_dead_count"]),
+        n_inserts=np.asarray(arrays["n_inserts"], np.int64),
+        budget=np.asarray(arrays["budget"], np.float64),
+        rebuilds=int(meta["rebuilds"]), deleted=int(meta["deleted"]),
+        reuse_on_rebuild=meta["reuse_on_rebuild"],
+        build_kwargs=dict(meta["build_kwargs"]))
+    d.capacity_shrinks = int(meta.get("capacity_shrinks", 0))
+    d._win = np.asarray(arrays["win"], np.float64)
+    index._iters = clamped_depth(d._win, index.n)
+    return d
+
+
+def _pool_files(pool) -> tuple[dict, dict]:
+    arrays = {"hists": np.asarray(pool.hists),
+              "err_lo": np.asarray(pool.err_lo),
+              "err_hi": np.asarray(pool.err_hi)}
+    _params_to(arrays, "params.", pool.params)
+    _params_to(arrays, "domains.", pool.domains)
+    meta = {"eps": float(pool.eps), "m": int(pool.m), "kind": pool.kind,
+            "reuse_count": int(pool.reuse_count),
+            "trained_count": int(pool.trained_count)}
+    return arrays, meta
+
+
+def _restore_pool(arrays: dict, meta: dict):
+    import jax.numpy as jnp
+    from .adapt import DomainSpec
+    from .reuse import ModelPool
+    domains = DomainSpec(**{k: jnp.asarray(arrays["domains." + k])
+                            for k in DomainSpec._fields})
+    return ModelPool(
+        eps=meta["eps"], m=meta["m"], kind=meta["kind"],
+        hists=jnp.asarray(arrays["hists"]),
+        params=_params_from(arrays, "params.", meta["kind"]),
+        err_lo=jnp.asarray(arrays["err_lo"]),
+        err_hi=jnp.asarray(arrays["err_hi"]), domains=domains,
+        reuse_count=meta["reuse_count"],
+        trained_count=meta["trained_count"])
+
+
+def snapshot_sharded(store: SnapshotStore, step: int, idx, *,
+                     blocking: bool = False,
+                     include_pool: bool = True) -> None:
+    """Snapshot a ``ShardedDynamicIndex``: one npz per shard + global
+    arrays + (optionally) the replicated pool, checksummed and atomically
+    committed by ``store``.  Async by default — every host-mutable array
+    is copied before this returns, so churn may continue immediately."""
+    store.kind = KIND_SHARDED
+    files = {"index.npz": {
+        "splits": np.asarray(idx.splits, np.float64).copy(),
+        "counts": np.asarray(idx._counts),
+        "muted": np.asarray(idx._muted)}}
+    shard_meta = []
+    for s, d in enumerate(idx.shards):
+        arrays, m = _shard_arrays(d)
+        files[_SHARD_FMT.format(s)] = arrays
+        shard_meta.append(m)
+    meta = {
+        "axis": idx.axis, "eps": float(idx.eps),
+        "n_leaves": int(idx.n_leaves), "n_shards": int(idx.n_shards),
+        "rebalance_ratio": _json_scalar(idx.rebalance_ratio),
+        "rebalance_skew": float(idx.rebalance_skew),
+        "migrate_headroom_factor": float(idx.migrate_headroom_factor),
+        "build_kwargs": idx.build_kwargs,
+        "counters": {k: int(getattr(idx, k)) for k in _IDX_COUNTERS},
+        "shards": shard_meta,
+    }
+    if include_pool and idx.pool is not None:
+        arrays, pm = _pool_files(idx.pool)
+        files["pool.npz"] = arrays
+        meta["pool"] = pm
+    store.save(step, files, meta, blocking=blocking)
+
+
+@dataclass
+class ReshardStats:
+    """Work accounting of one elastic N->M reshard.  The no-full-rebuild
+    contract is ``full_rebuilds == 0`` (only trivial *empty* shards are
+    ever built from scratch — ``empty_builds``); ``leaf_refits`` counts the
+    localized Lemma 4.1 seam-leaf rebuilds the delta-riding merges
+    triggered."""
+    n_from: int = 0
+    n_to: int = 0
+    pieces: int = 0             # boundary-aligned (old shard, new shard)
+                                # overlaps extracted via clone + shed
+    delta_merges: int = 0       # donor segments merged via the delta tier
+    moved_keys: int = 0         # live keys that changed owning structure
+    leaf_refits: int = 0        # Lemma 4.1 leaf rebuilds during the merges
+    empty_builds: int = 0       # trivial empty shards built
+    full_rebuilds: int = 0      # from-scratch builds of NON-empty shards
+                                # (always 0 — pinned by tests)
+
+
+@dataclass
+class RestoreReport:
+    """What :func:`restore_sharded` actually did."""
+    step: int = -1
+    n_shards_from: int = 0      # shard count in the snapshot
+    n_shards: int = 0           # shard count served (the target mesh)
+    quarantined: list = field(default_factory=list)
+    skipped: list = field(default_factory=list)   # [(step, reason), ...]
+    reshard: ReshardStats | None = None
+
+
+def _empty_shard(eps, n_leaves, pool, build_kwargs):
+    import jax.numpy as jnp
+    from .updates import DynamicRMI
+    # a shard's recorded build_kwargs may already pin n_leaves (DynamicRMI
+    # folds it into rmi_kwargs) — explicit args win
+    kw = dict(build_kwargs)
+    kw["n_leaves"] = n_leaves
+    return DynamicRMI.build(jnp.zeros((0,), jnp.float64), pool=pool,
+                            eps=eps, **kw)
+
+
+def _reshard_pieces(shards: list, n_to: int, *, eps, n_leaves, pool,
+                    build_kwargs) -> tuple[list, np.ndarray, ReshardStats]:
+    """Cut N fitted shards into M at duplicate-run-safe boundaries.
+
+    Cuts are balanced-live-count positions snapped to run starts.  Each new
+    shard keeps its largest overlapping piece as the *anchor* — extracted
+    by ``shed_prefix``/``shed_suffix`` on a clone (truncation / exact
+    intercept shift, zero refits) — and the remaining overlap segments'
+    live keys merge into the anchor's delta tier through the ordinary
+    routed ``insert_batch``, refitting only the seam-window leaves whose
+    Lemma 4.1 budgets trip.  Input shard objects are consumed.  Returns
+    (new shards, new splits, stats)."""
+    n_from = len(shards)
+    stats = ReshardStats(n_from=n_from, n_to=n_to)
+    lc = np.asarray([d.live_count for d in shards], np.int64)
+    total = int(lc.sum())
+    if total == 0:
+        stats.empty_builds = n_to
+        return ([_empty_shard(eps, n_leaves, pool, build_kwargs)
+                 for _ in range(n_to)],
+                np.full((n_to - 1,), -np.inf, np.float64), stats)
+    glive = np.concatenate([d.live_keys() for d in shards])
+    offs = np.concatenate([[0], np.cumsum(lc)])
+    cuts = np.empty((n_to + 1,), np.int64)
+    cuts[0], cuts[-1] = 0, total
+    for t in range(1, n_to):
+        p = min(round(total * t / n_to), total)
+        if 0 < p < total:
+            # snap to the start of the equal-key run so a duplicate run
+            # never straddles a shard seam (the shard_bounds invariant).
+            p = int(np.searchsorted(glive, glive[p], side="left"))
+        cuts[t] = p
+    cuts = np.maximum.accumulate(cuts)
+    splits = np.asarray([glive[cuts[t] - 1] if cuts[t] > 0 else -np.inf
+                         for t in range(1, n_to)], np.float64)
+
+    new_shards = []
+    for t in range(n_to):
+        lo, hi = int(cuts[t]), int(cuts[t + 1])
+        if hi <= lo:
+            new_shards.append(_empty_shard(eps, n_leaves, pool,
+                                           build_kwargs))
+            stats.empty_builds += 1
+            continue
+        over = [s for s in range(n_from)
+                if lc[s] > 0 and offs[s] < hi and offs[s + 1] > lo]
+        stats.pieces += len(over)
+        counts = {s: int(min(offs[s + 1], hi) - max(offs[s], lo))
+                  for s in over}
+        s_star = max(over, key=lambda s: counts[s])
+        a_lo = int(max(offs[s_star], lo))
+        a_hi = int(min(offs[s_star + 1], hi))
+        # A whole-shard anchor is consumed as-is; a partial one is cut out
+        # of a clone so sibling destinations keep their own pieces.
+        anchor = shards[s_star] if counts[s_star] == int(lc[s_star]) \
+            else shards[s_star].clone()
+        if a_lo > offs[s_star]:
+            anchor.shed_prefix(float(glive[a_lo - 1]))
+        if a_hi < offs[s_star + 1]:
+            anchor.shed_suffix(float(glive[a_hi - 1]))
+        rb0 = anchor.rebuilds
+        for seg_lo, seg_hi in ((lo, a_lo), (a_hi, hi)):
+            if seg_hi > seg_lo:
+                anchor.insert_batch(glive[seg_lo:seg_hi])
+                stats.delta_merges += 1
+                stats.moved_keys += seg_hi - seg_lo
+        stats.leaf_refits += anchor.rebuilds - rb0
+        new_shards.append(anchor)
+    return new_shards, splits, stats
+
+
+def reshard_sharded(idx, mesh, axis: str | None = None):
+    """Elastic N->M reshard of a live ``ShardedDynamicIndex`` onto
+    ``mesh`` without a from-scratch rebuild (see :func:`_reshard_pieces`).
+    The input index is consumed.  Returns (new index, ReshardStats)."""
+    from .distributed import ShardedDynamicIndex
+    axis = axis or idx.axis
+    n_to = mesh.shape[axis]
+    shards, splits, stats = _reshard_pieces(
+        idx.shards, n_to, eps=idx.eps, n_leaves=idx.n_leaves, pool=idx.pool,
+        build_kwargs=idx.build_kwargs)
+    out = ShardedDynamicIndex(
+        mesh=mesh, axis=axis, splits=splits, shards=shards, eps=idx.eps,
+        n_leaves=idx.n_leaves, pool=idx.pool,
+        rebalance_ratio=idx.rebalance_ratio,
+        rebalance_skew=idx.rebalance_skew,
+        migrate_headroom_factor=idx.migrate_headroom_factor,
+        build_kwargs=idx.build_kwargs)
+    out._init_maintenance()
+    return out, stats
+
+
+def restore_sharded(store: SnapshotStore, mesh, axis: str = "data", *,
+                    step: int | None = None, on_corrupt: str = "fallback"):
+    """Restore a ``ShardedDynamicIndex`` from the newest verifiable
+    snapshot in ``store`` (or exactly ``step`` when given), resharding to
+    ``mesh``'s width when it differs from the snapshot's shard count.
+
+    ``on_corrupt`` decides what a damaged snapshot costs:
+      * ``"fallback"`` (default): a snapshot failing verification anywhere
+        is skipped and the next-older one is tried (recorded in
+        ``report.skipped``); raises :class:`SnapshotCorruption` when none
+        survive.
+      * ``"raise"``: the newest (or requested) snapshot must verify.
+      * ``"quarantine"``: torn manifests / global files still fall back,
+        but a snapshot whose *shard files* are damaged restores anyway —
+        each damaged shard becomes a trivial empty shard listed in
+        ``report.quarantined`` and ``index.quarantined``, and queries
+        routed to its range answer found=False (degraded serving).
+
+    Returns (index, :class:`RestoreReport`)."""
+    if on_corrupt not in ("fallback", "raise", "quarantine"):
+        raise ValueError(f"unknown on_corrupt={on_corrupt!r}")
+    report = RestoreReport()
+    candidates = [step] if step is not None else \
+        list(reversed(store.steps()))
+    if not candidates:
+        raise SnapshotError(f"no snapshots in {store.directory}")
+    last_err = None
+    for cand in candidates:
+        try:
+            idx, rep = _restore_one(store, cand, mesh, axis, on_corrupt)
+            rep.skipped = report.skipped
+            return idx, rep
+        except SnapshotCorruption as e:
+            last_err = e
+            report.skipped.append((cand, str(e)))
+            if on_corrupt == "raise" or step is not None:
+                raise
+    raise SnapshotCorruption(
+        f"no verifiable snapshot among steps "
+        f"{sorted(c for c in candidates)}: last error: {last_err}")
+
+
+def _restore_one(store: SnapshotStore, step: int, mesh, axis: str,
+                 on_corrupt: str):
+    import jax.numpy as jnp
+    from .distributed import ShardedDynamicIndex
+    manifest = store.read_manifest(step)
+    if manifest.get("kind") != KIND_SHARDED:
+        raise SnapshotCorruption(
+            f"step {step}: kind {manifest.get('kind')!r} is not "
+            f"{KIND_SHARDED!r}")
+    meta = manifest["meta"]
+    n_from = int(meta["n_shards"])
+    glob = store.load_file(step, "index.npz", manifest)
+    pool = None
+    if "pool" in meta:
+        pool = _restore_pool(store.load_file(step, "pool.npz", manifest),
+                             meta["pool"])
+    report = RestoreReport(step=step, n_shards_from=n_from,
+                           n_shards=mesh.shape[axis])
+    shards = []
+    for s in range(n_from):
+        sm = meta["shards"][s]
+        try:
+            shards.append(_restore_shard(
+                store.load_file(step, _SHARD_FMT.format(s), manifest),
+                sm, pool))
+        except SnapshotCorruption as e:
+            if on_corrupt != "quarantine":
+                raise
+            shards.append(_empty_shard(
+                float(sm["eps"]), int(sm["n_leaves"]), pool,
+                dict(sm["build_kwargs"])))
+            report.quarantined.append((s, str(e)))
+    quarantined_ids = [s for s, _ in report.quarantined]
+
+    n_to = mesh.shape[axis]
+    if n_to == n_from:
+        splits = np.asarray(glob["splits"], np.float64).copy()
+    else:
+        shards, splits, stats = _reshard_pieces(
+            shards, n_to, eps=float(meta["eps"]),
+            n_leaves=int(meta["n_leaves"]), pool=pool,
+            build_kwargs=dict(meta["build_kwargs"]))
+        report.reshard = stats
+    idx = ShardedDynamicIndex(
+        mesh=mesh, axis=axis, splits=splits, shards=shards,
+        eps=float(meta["eps"]), n_leaves=int(meta["n_leaves"]), pool=pool,
+        rebalance_ratio=meta["rebalance_ratio"],
+        rebalance_skew=float(meta["rebalance_skew"]),
+        migrate_headroom_factor=float(meta["migrate_headroom_factor"]),
+        build_kwargs=dict(meta["build_kwargs"]))
+    for k, v in meta.get("counters", {}).items():
+        if hasattr(idx, k):
+            setattr(idx, k, int(v))
+    idx._init_maintenance()
+    if n_to == n_from:
+        # Same-width restore is verbatim: the counter table recomputed by
+        # _init_maintenance from the round-tripped scalars is bit-identical
+        # to the saved one; skew mutes restore as saved (quarantined rows
+        # re-arm).
+        muted = jnp.asarray(np.asarray(glob["muted"], np.int64))
+        if quarantined_ids:
+            muted = muted.at[jnp.asarray(quarantined_ids)].set(-1)
+        idx._muted = muted
+        idx.quarantined = list(quarantined_ids)
+    else:
+        idx.quarantined = []
+    return idx, report

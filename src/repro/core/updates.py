@@ -433,6 +433,7 @@ class DynamicRMI:
     budget: np.ndarray = None
     rebuilds: int = 0
     deleted: int = 0
+    capacity_shrinks: int = 0           # tier capacity step-downs taken
     # Rebuild re-indexing policy: None (auto) runs Algorithm-1 pool
     # selection only when a leaf refit requires *training* (MLP leaves) —
     # for linear leaves the closed-form segment refit is free, optimal, and
@@ -645,6 +646,63 @@ class DynamicRMI:
             self.delta_dead_count -= int(sdead)
             self.delta_live -= (cut_d - int(sdead))
             self.delta_psum = _psum(ddead)
+
+    def clone(self) -> "DynamicRMI":
+        """Independent handle over the same (immutable) device arrays.
+
+        Mutating methods rebind fields or mutate host numpy in place — the
+        only in-place device-adjacent mutation is ``_rebuild_leaves``
+        assigning ``self.index._iters`` — so a clone needs fresh host
+        containers and a fresh ``RMIIndex`` wrapper, nothing deeper.  The
+        elastic resharder cuts several pieces out of one source shard via
+        clones."""
+        d = replace(self, index=replace(self.index),
+                    n_inserts=self.n_inserts.copy(),
+                    budget=self.budget.copy(),
+                    build_kwargs=dict(self.build_kwargs))
+        d._win = self._win.copy()
+        return d
+
+    def shrink_capacity(self, hysteresis: int = 4) -> bool:
+        """Step either tier's capacity class back down — the inverse of the
+        grow-only policy in ``insert_batch``/``_rebuild_leaves``, for after
+        migration sheds or delete-heavy churn.  Hysteresis band: a tier
+        shrinks only when its capacity is ≥ ``hysteresis`` × the smallest
+        class that fits, and it steps down to ``hysteresis/2`` × that class
+        — so a shrink always leaves a doubling of headroom and regrowing
+        needs ≥ 2 doublings (no thrash at a class boundary, and a batch
+        smaller than the tier's population can never re-cross one).  Finite
+        entries occupy each tier's prefix, so a shrink is a pure slice:
+        positions, fitted models, error bounds, packed kernel tables
+        (models-only), and f32-exactness are untouched; only the clamped
+        search depth is recomputed for the smaller capacity.  Returns True
+        if any tier shrank."""
+        hold = max(hysteresis // 2, 1)
+        shrank = False
+        idx = self.index
+        cap_b = idx.keys.shape[0]
+        want_b = _capacity(self.base_n) * hold
+        if cap_b >= hysteresis * _capacity(self.base_n) and cap_b > want_b:
+            keys = idx.keys[:want_b]
+            self.base_dead = self.base_dead[:want_b]
+            self.base_psum = jnp.zeros((want_b + 1,), jnp.int32) \
+                if self.base_dead_count == 0 else _psum(self.base_dead)
+            self.index = replace(idx, keys=keys)
+            self.index._iters = clamped_depth(self._win, want_b)
+            self.capacity_shrinks += 1
+            shrank = True
+        cap_d = self.delta_keys.shape[0]
+        nf_d = self.delta_live + self.delta_dead_count
+        want_d = _capacity(nf_d) * hold
+        if cap_d >= hysteresis * _capacity(nf_d) and cap_d > want_d:
+            self.delta_keys = self.delta_keys[:want_d]
+            self.delta_leaf = self.delta_leaf[:want_d]
+            self.delta_dead = self.delta_dead[:want_d]
+            self.delta_psum = jnp.zeros((want_d + 1,), jnp.int32) \
+                if self.delta_dead_count == 0 else _psum(self.delta_dead)
+            self.capacity_shrinks += 1
+            shrank = True
+        return shrank
 
     def flush_delta(self) -> None:
         """Merge every live delta entry into the base tier now, refitting

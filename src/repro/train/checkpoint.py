@@ -1,169 +1,93 @@
-"""Fault-tolerant checkpointing (no external deps; npz shards + manifest).
+"""Fault-tolerant checkpointing (no external deps; npy leaves + manifest).
 
-Design for 1000+ nodes (DESIGN.md §4):
-  * every host writes only ITS process-local shard file (here: the single
-    host writes per-mesh-slice shards to exercise the same layout),
-  * a JSON manifest records step, mesh shape, per-leaf global shape/dtype/
-    PartitionSpec and per-shard checksums,
-  * commit is an atomic rename of the manifest — a torn write is invisible,
-  * an async writer thread overlaps serialization with the next step,
-  * restore supports RESHARDING: leaves are reassembled from shards and
-    re-split for a different mesh (elastic restart after node loss), and
-  * missing-shard recovery: any shard replicated across `pod` (pure DP)
-    can be rebuilt from its surviving replica.
+A thin tree-checkpoint adapter over ``core.persist.SnapshotStore`` — the
+generic store owns the durability mechanics (atomic rename commit,
+checksummed manifest with a schema version, async writer whose failures are
+*surfaced*, retry-with-backoff on transient ``OSError``s, keep-N gc); this
+module maps a params/opt-state tree onto it:
+
+  * every leaf writes as its own ``.npy`` file (named by the md5 of its
+    dotted path, recorded in the manifest meta) so a 1000-node layout where
+    each host writes only its local shard files needs no format change,
+  * bf16 leaves ride the store's uint16 view-cast codec and restore exactly,
+  * restore supports RESHARDING: with ``mesh`` + ``specs``, leaves are
+    placed via ``jax.device_put(NamedSharding(mesh, spec))`` onto ANY mesh
+    (elastic restart after node loss).
+
+A failed async write is recorded and re-raised from ``wait()`` or the next
+``save()`` — it can never be mistaken for durability.  All verification
+failures raise :class:`core.persist.SnapshotCorruption` (an ``IOError``).
 """
 from __future__ import annotations
 
 import hashlib
-import json
-import os
-import queue
-import threading
-import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _leaf_paths(tree, prefix=""):
-    """Stable dotted path for every leaf (dicts + NamedTuples)."""
-    out = []
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            out += _leaf_paths(tree[k], f"{prefix}{k}.")
-    elif hasattr(tree, "_fields"):
-        for k in tree._fields:
-            out += _leaf_paths(getattr(tree, k), f"{prefix}{k}.")
-    elif tree is None:
-        pass
-    else:
-        out.append((prefix[:-1], tree))
-    return out
+from ..core.persist import SnapshotStore, set_tree_path, tree_paths
 
 
-def _set_path(tree, path, value):
-    keys = path.split(".")
-
-    def rec(node, i):
-        k = keys[i]
-        if isinstance(node, dict):
-            if i == len(keys) - 1:
-                node[k] = value
-            else:
-                repl = rec(node[k], i + 1)
-                if repl is not None:       # immutable child replaced
-                    node[k] = repl
-            return None
-        if hasattr(node, "_fields"):       # NamedTuple: immutable
-            if i == len(keys) - 1:
-                return node._replace(**{k: value})
-            repl = rec(getattr(node, k), i + 1)
-            return node._replace(**{k: repl}) if repl is not None else None
-        return None
-
-    return rec(tree, 0)
+def _leaf_fname(path: str) -> str:
+    return hashlib.md5(path.encode()).hexdigest()[:16] + ".npy"
 
 
 @dataclass
 class Checkpointer:
     directory: str
     keep: int = 3
-    _q: queue.Queue = None
-    _thread: threading.Thread = None
+    retries: int = 0                    # transient-OSError attempts per write
+    backoff: float = 0.05               # base of the exponential backoff
+    _store: SnapshotStore = field(init=False)
 
     def __post_init__(self):
-        os.makedirs(self.directory, exist_ok=True)
-        self._q = queue.Queue(maxsize=2)
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        self._store = SnapshotStore(self.directory, keep=self.keep,
+                                    retries=self.retries,
+                                    backoff=self.backoff, kind="tree")
 
     # -- write -------------------------------------------------------------
     def save(self, step: int, tree, *, blocking: bool = False) -> None:
-        """Snapshot device arrays to host, then hand off to the writer
-        thread (async by default)."""
-        host = [(p, np.asarray(v)) for p, v in _leaf_paths(tree)]
-        if blocking:
-            self._write(step, host)
-        else:
-            self._q.put((step, host))
+        """Snapshot device arrays to host, then hand off to the store
+        (async by default; a prior async failure re-raises here).  Leaves
+        materialize *now* so donated buffers can be reused immediately."""
+        files, leaves = {}, {}
+        for path, leaf in tree_paths(tree):
+            fname = _leaf_fname(path)
+            files[fname] = {"": np.asarray(leaf)}
+            leaves[path] = fname
+        self._store.save(step, files, {"leaves": leaves}, blocking=blocking)
 
-    def _worker(self):
-        while True:
-            step, host = self._q.get()
-            try:
-                self._write(step, host)
-            except Exception as e:     # pragma: no cover - best effort log
-                print(f"[ckpt] write failed at step {step}: {e}")
-            self._q.task_done()
+    def wait(self) -> None:
+        """Block until queued snapshots are durable; re-raise any writer
+        failure."""
+        self._store.wait()
 
-    def _write(self, step: int, host):
-        d = os.path.join(self.directory, f"step_{step:08d}.tmp")
-        os.makedirs(d, exist_ok=True)
-        manifest = {"step": step, "time": time.time(), "leaves": {}}
-        for path, arr in host:
-            fname = hashlib.md5(path.encode()).hexdigest()[:16] + ".npy"
-            fpath = os.path.join(d, fname)
-            store = arr
-            if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
-                store = arr.view(np.uint16)   # npy has no bf16; tag dtype
-            with open(fpath, "wb") as f:
-                np.save(f, store)
-            with open(fpath, "rb") as f:
-                digest = hashlib.md5(f.read()).hexdigest()
-            manifest["leaves"][path] = {
-                "file": fname, "shape": list(arr.shape),
-                "dtype": ("bfloat16" if store is not arr else str(arr.dtype)),
-                "md5": digest,
-            }
-        with open(os.path.join(d, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        final = os.path.join(self.directory, f"step_{step:08d}")
-        os.replace(d, final)           # atomic commit
-        self._gc()
-
-    def _gc(self):
-        steps = sorted(s for s in os.listdir(self.directory)
-                       if s.startswith("step_") and not s.endswith(".tmp"))
-        for s in steps[:-self.keep]:
-            import shutil
-            shutil.rmtree(os.path.join(self.directory, s))
-
-    def wait(self):
-        self._q.join()
+    @property
+    def write_retries(self) -> int:
+        return self._store.write_retries
 
     # -- read --------------------------------------------------------------
     def latest_step(self) -> int | None:
-        steps = [int(s.split("_")[1]) for s in os.listdir(self.directory)
-                 if s.startswith("step_") and not s.endswith(".tmp")]
-        return max(steps) if steps else None
+        return self._store.latest_step()
 
     def restore(self, step: int, template, *, verify: bool = True,
                 mesh=None, specs=None):
         """Rebuild the tree. With mesh+specs, arrays are placed sharded
         (resharding to ANY mesh — elastic restart)."""
-        d = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = self._store.read_manifest(step)
+        leaves = manifest["meta"]["leaves"]
         out = template
-        for path, _ in _leaf_paths(template):
-            meta = manifest["leaves"][path]
-            fpath = os.path.join(d, meta["file"])
-            if verify:
-                with open(fpath, "rb") as f:
-                    if hashlib.md5(f.read()).hexdigest() != meta["md5"]:
-                        raise IOError(f"checksum mismatch for {path}")
-            arr = np.load(fpath)
-            if meta["dtype"] == "bfloat16":
-                import ml_dtypes
-                arr = arr.view(ml_dtypes.bfloat16)
+        for path, _ in tree_paths(template):
+            arr = self._store.load_file(step, leaves[path], manifest,
+                                        verify=verify)[""]
             val = jnp.asarray(arr)
             if mesh is not None and specs is not None:
                 spec = _get_path_like(specs, path)
                 val = jax.device_put(
                     val, jax.sharding.NamedSharding(mesh, spec))
-            repl = _set_path(out, path, val)
+            repl = set_tree_path(out, path, val)
             if repl is not None:
                 out = repl
         return out

@@ -11,6 +11,13 @@ policy layer the launcher uses:
     factorization of the survivors (launch.mesh.make_mesh_for), restore the
     latest checkpoint *resharded* to the new mesh, and resume — parameters
     are FSDP-sharded so any device count that preserves divisibility works.
+    For the serving-side index the same plan drives
+    ``core.persist.restore_sharded`` onto the survivor mesh (elastic N->M
+    reshard, no rebuild).
+  * rejoin: a host that resumes heartbeating after removal re-registers —
+    that is a topology change like a loss, so the next ``plan()`` bumps the
+    generation and reports ``action: "remesh"`` upward (never a silent
+    no-op).
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ class ElasticController:
     clock: callable = time.monotonic
     hosts: dict = None
     generation: int = 0            # bumps on every re-mesh
+    _rejoined: set = field(default_factory=set)   # since the last plan()
 
     def __post_init__(self):
         now = self.clock()
@@ -42,7 +50,10 @@ class ElasticController:
     def heartbeat(self, host: int, step_time: float | None = None):
         st = self.hosts.get(host)
         if st is None:
-            return
+            # A removed (or brand-new) host resuming heartbeats rejoins the
+            # registry; the topology change surfaces from the next plan().
+            st = self.hosts[host] = HostState(self.clock())
+            self._rejoined.add(host)
         st.last_heartbeat = self.clock()
         if step_time is not None:
             st.step_times.append(step_time)
@@ -55,8 +66,15 @@ class ElasticController:
                 if now - st.last_heartbeat > self.heartbeat_timeout]
 
     def stragglers(self) -> list:
+        """Hosts whose median step time exceeds ``straggler_factor`` x the
+        fleet median — computed over *live* hosts only: a host past the
+        heartbeat deadline is a loss for ``plan()`` to handle, and its stale
+        step times must not skew (or land it in) the straggler set."""
+        now = self.clock()
         meds = {h: statistics.median(st.step_times)
-                for h, st in self.hosts.items() if len(st.step_times) >= 4}
+                for h, st in self.hosts.items()
+                if len(st.step_times) >= 4
+                and now - st.last_heartbeat <= self.heartbeat_timeout}
         if len(meds) < 2:
             return []
         global_med = statistics.median(meds.values())
@@ -67,13 +85,14 @@ class ElasticController:
     def plan(self) -> dict:
         """Returns the action the launcher should take this round."""
         dead = self.dead_hosts()
-        if dead:
-            survivors = [h for h in self.hosts if h not in dead]
+        rejoined = sorted(self._rejoined - set(dead))
+        self._rejoined.clear()
+        if dead or rejoined:
             for h in dead:
                 del self.hosts[h]
             self.generation += 1
-            return {"action": "remesh", "survivors": len(survivors),
-                    "generation": self.generation}
+            return {"action": "remesh", "survivors": len(self.hosts),
+                    "generation": self.generation, "rejoined": rejoined}
         slow = self.stragglers()
         if slow:
             return {"action": "reassign_data", "hosts": slow}

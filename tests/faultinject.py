@@ -1,0 +1,106 @@
+"""Deterministic fault injection for the persist layer (not a test module
+— the recovery suites in test_persist.py / test_runtime.py drive it).
+
+Two fault surfaces:
+
+* **Write-time** (:class:`FaultInjector`): a context manager that swaps
+  ``repro.core.persist._write_bytes`` — the single seam every snapshot byte
+  passes through — for an injecting wrapper.  It can kill the writer
+  mid-snapshot after N successful file writes (optionally leaving a
+  half-written file, like a real crash), raise a bounded number of
+  transient ``OSError``s (exercising the per-file retry/backoff path), or
+  fail every write.
+
+* **At-rest** (:func:`tear_manifest` / :func:`flip_byte` /
+  :func:`drop_file`): damage a *committed* snapshot the way disks and
+  operators do — truncate the manifest mid-JSON, flip bytes inside a shard
+  file, delete a shard file — to exercise checksum detection, latest-
+  complete fallback, and quarantined degraded serving.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import persist
+
+
+class WriteCrash(RuntimeError):
+    """Simulated hard death of the writing process mid-snapshot (not an
+    OSError on purpose: it must bypass the transient-retry path, like a
+    SIGKILL would)."""
+
+
+class FaultInjector:
+    """Monkeypatch ``persist._write_bytes`` inside a ``with`` block.
+
+    kill_after=N      raise WriteCrash instead of performing the (N+1)-th
+                      file write; with partial=True, first flush half the
+                      bytes (a torn file a crash can leave behind)
+    transient_errors=N  raise OSError for the first N write calls, then
+                      write normally (the retry path must absorb these)
+    fail_always=True  every write raises OSError (surfaced-error path)
+    """
+
+    def __init__(self, kill_after: int | None = None, partial: bool = False,
+                 transient_errors: int = 0, fail_always: bool = False):
+        self.kill_after = kill_after
+        self.partial = partial
+        self.transient_errors = transient_errors
+        self.fail_always = fail_always
+        self.writes = 0         # successful file writes
+        self.raised = 0         # injected failures
+
+    def __enter__(self):
+        self._orig = persist._write_bytes
+
+        def inject(path: str, data: bytes) -> None:
+            if self.fail_always:
+                self.raised += 1
+                raise OSError(f"injected permanent failure on {path}")
+            if self.raised < self.transient_errors:
+                self.raised += 1
+                raise OSError(f"injected transient failure on {path}")
+            if self.kill_after is not None and \
+                    self.writes >= self.kill_after:
+                if self.partial:
+                    self._orig(path, data[:max(len(data) // 2, 1)])
+                self.raised += 1
+                raise WriteCrash(f"killed before writing {path}")
+            self._orig(path, data)
+            self.writes += 1
+
+        persist._write_bytes = inject
+        return self
+
+    def __exit__(self, *exc):
+        persist._write_bytes = self._orig
+        return False
+
+
+def step_dir(store: persist.SnapshotStore, step: int) -> str:
+    return os.path.join(store.directory, persist._STEP_FMT.format(step))
+
+
+def tear_manifest(store: persist.SnapshotStore, step: int) -> None:
+    """Truncate a committed snapshot's manifest mid-JSON."""
+    path = os.path.join(step_dir(store, step), "manifest.json")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(size // 2, 1))
+
+
+def flip_byte(store: persist.SnapshotStore, step: int, fname: str,
+              offset: int = 128) -> None:
+    """Flip one byte inside a committed snapshot file."""
+    path = os.path.join(step_dir(store, step), fname)
+    offset = min(offset, os.path.getsize(path) - 1)
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def drop_file(store: persist.SnapshotStore, step: int, fname: str) -> None:
+    """Delete a file out of a committed snapshot."""
+    os.remove(os.path.join(step_dir(store, step), fname))

@@ -1,0 +1,617 @@
+"""Durability + recovery suite for core/persist.py.
+
+Three layers:
+  * single-process fault-injection tests (tests/faultinject.py drives the
+    ``_write_bytes`` seam and damages committed snapshots at rest):
+    surfaced async errors, per-file retry/backoff, torn-manifest and
+    flipped-byte fallback, quarantined degraded serving, edge-case
+    round-trips (empty / delta-only / all-tombstone / n==0 / pool);
+  * multi-device subprocess scripts (conftest.run_mesh_script, like the
+    other mesh suites): bit-exact kill/restore mid-churn on 1/2/4/8-device
+    meshes on BOTH find paths, and elastic N->M restore (1<->2 quick,
+    4->8 / 8->2 slow) asserting the no-full-rebuild counters;
+  * a SIGKILL smoke: a churning process is killed for real mid-async-save,
+    then a second process restores resharded 4->2 and must reproduce the
+    exact finds recorded before the kill.
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+import faultinject as fi
+from repro.core import persist
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from conftest import run_mesh_script  # noqa: E402
+
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _small_index(seed=3, n=3000, churn=True, **kw):
+    from repro.core import distributed
+    rng = np.random.default_rng(seed)
+    base = f32keys(rng.lognormal(0, 0.8, n) * 1e3)
+    idx = distributed.ShardedDynamicIndex.build(
+        jnp.asarray(base), _mesh1(), n_leaves=16, eps=0.7, **kw)
+    if churn:
+        fresh = np.setdiff1d(
+            f32keys(rng.lognormal(0, 0.8, 4 * n) * 1e3), base)
+        idx.insert_batch(fresh[:400])
+        idx.delete_batch(rng.choice(base, 200, replace=False))
+    return idx, rng
+
+
+def _expect(idx, rng, extra=()):
+    live = idx.live_keys()
+    q = rng.permutation(np.concatenate(
+        [rng.choice(live, 300), np.asarray(extra, np.float64)]))
+    return q, np.searchsorted(live, q, "left"), np.searchsorted(live, q,
+                                                                "right")
+
+
+def _check(idx, q, lo, hi, use_kernel=False):
+    f, r = idx.find(jnp.asarray(q), use_kernel=use_kernel)
+    np.testing.assert_array_equal(np.asarray(r), lo)
+    np.testing.assert_array_equal(np.asarray(f), hi > lo)
+
+
+# ---------------------------------------------------------------------------
+# Store-level fault injection.
+# ---------------------------------------------------------------------------
+def test_async_write_failure_surfaces():
+    """A failed async write is re-raised from wait()/next save(), never
+    swallowed (the old Checkpointer printed and moved on)."""
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        with fi.FaultInjector(fail_always=True):
+            store.save(1, {"a.npy": {"": np.arange(4.0)}})
+            with pytest.raises(persist.SnapshotError):
+                store.wait()
+        # the error is consumed once; the store stays usable
+        store.save(2, {"a.npy": {"": np.arange(4.0)}}, blocking=True)
+        assert store.steps() == [2]
+
+
+def test_transient_write_errors_retry_with_backoff():
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d, retries=3, backoff=0.001)
+        with fi.FaultInjector(transient_errors=2) as inj:
+            store.save(1, {"a.npy": {"": np.arange(4.0)}}, blocking=True)
+            assert inj.raised == 2
+        assert store.write_retries == 2
+        assert store.steps() == [1]
+        # retries exhausted -> the failure propagates
+        with fi.FaultInjector(transient_errors=50):
+            with pytest.raises(OSError):
+                store.save(2, {"a.npy": {"": np.arange(4.0)}},
+                           blocking=True)
+        assert store.steps() == [1]
+
+
+def test_kill_mid_write_commits_nothing():
+    """A writer killed mid-shard leaves only a .tmp directory: the torn
+    snapshot is invisible and restore falls back to the prior one."""
+    idx, rng = _small_index()
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx.insert_batch(np.asarray([1.5, 2.5]))
+        with fi.FaultInjector(kill_after=1, partial=True):
+            with pytest.raises(fi.WriteCrash):
+                persist.snapshot_sharded(store, 2, idx, blocking=True)
+        assert store.steps() == [1]
+        assert any(s.endswith(".tmp") for s in os.listdir(d))
+        idx2, rep = persist.restore_sharded(store, _mesh1())
+        assert rep.step == 1
+        _check(idx2, q, lo, hi)
+
+
+def test_torn_manifest_falls_back():
+    idx, rng = _small_index()
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx.insert_batch(np.asarray([7.25]))
+        persist.snapshot_sharded(store, 2, idx, blocking=True)
+        fi.tear_manifest(store, 2)
+        idx2, rep = persist.restore_sharded(store, _mesh1())
+        assert rep.step == 1 and len(rep.skipped) == 1
+        assert rep.skipped[0][0] == 2
+        _check(idx2, q, lo, hi)
+        with pytest.raises(persist.SnapshotCorruption):
+            persist.restore_sharded(store, _mesh1(), on_corrupt="raise")
+
+
+def test_flipped_byte_detected_fallback_and_quarantine():
+    idx, rng = _small_index()
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx.insert_batch(np.asarray([3.75]))
+        persist.snapshot_sharded(store, 2, idx, blocking=True)
+        fi.flip_byte(store, 2, "shard_00000.npz")
+        # default: checksum catches it, the older snapshot serves
+        idx2, rep = persist.restore_sharded(store, _mesh1())
+        assert rep.step == 1
+        _check(idx2, q, lo, hi)
+        # explicit step + corruption -> raise, never silently accept
+        with pytest.raises(persist.SnapshotCorruption):
+            persist.restore_sharded(store, _mesh1(), step=2)
+        # quarantine: newest snapshot serves degraded — the damaged shard
+        # becomes a trivial empty shard answering found=False
+        idx3, rep3 = persist.restore_sharded(store, _mesh1(),
+                                             on_corrupt="quarantine")
+        assert rep3.step == 2 and [s for s, _ in rep3.quarantined] == [0]
+        assert idx3.quarantined == [0]
+        f, r = idx3.find(jnp.asarray(q), use_kernel=False)
+        assert not bool(np.asarray(f).any())
+        np.testing.assert_array_equal(np.asarray(r), 0)
+        # the quarantined range keeps accepting writes (re-feed path)
+        idx3.insert_batch(q[:50])
+        f, _ = idx3.find(jnp.asarray(q[:50]), use_kernel=False)
+        assert bool(np.asarray(f).all())
+
+
+def test_dropped_shard_file_falls_back():
+    idx, rng = _small_index()
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx.delete_batch(q[:20])
+        persist.snapshot_sharded(store, 2, idx, blocking=True)
+        fi.drop_file(store, 2, "shard_00000.npz")
+        idx2, rep = persist.restore_sharded(store, _mesh1())
+        assert rep.step == 1
+        _check(idx2, q, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot edge cases.
+# ---------------------------------------------------------------------------
+def _roundtrip(idx, probes):
+    lv = idx.live_keys()
+    lo = np.searchsorted(lv, probes, "left")
+    hi = np.searchsorted(lv, probes, "right")
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx2, _ = persist.restore_sharded(store, _mesh1())
+    _check(idx2, probes, lo, hi)
+    np.testing.assert_array_equal(idx2.live_keys(), lv)
+    return idx2
+
+
+def test_edge_empty_index_roundtrip():
+    from repro.core import distributed
+    idx = distributed.ShardedDynamicIndex.build(
+        jnp.zeros((0,), jnp.float64), _mesh1(), n_leaves=8, eps=0.7)
+    idx2 = _roundtrip(idx, np.asarray([0.0, 1.0, -3.5]))
+    # a restored empty index accepts its first inserts
+    idx2.insert_batch(np.asarray([4.0, 2.0, 8.0]))
+    _check(idx2, np.asarray([2.0, 3.0, 8.0]), np.asarray([0, 1, 2]),
+           np.asarray([1, 1, 3]))
+
+
+def test_edge_delta_only_shard_roundtrip():
+    from repro.core import distributed
+    idx = distributed.ShardedDynamicIndex.build(
+        jnp.zeros((0,), jnp.float64), _mesh1(), n_leaves=8, eps=0.7)
+    keys = f32keys(np.random.default_rng(5).uniform(0, 100, 500))
+    idx.insert_batch(keys)          # base tier still empty on any shard
+    # rebuilds may have flushed some of the delta; force a delta-resident
+    # remainder by inserting again
+    idx.insert_batch(keys[:0])
+    probes = np.concatenate([keys[::7], keys[::11] + 0.25])
+    _roundtrip(idx, probes)
+
+
+def test_edge_all_tombstone_roundtrip():
+    idx, rng = _small_index(churn=False)
+    keys = idx.live_keys()
+    idx.delete_batch(keys)          # everything dead, storage still full
+    assert idx.total_live == 0
+    idx2 = _roundtrip(idx, keys[::5])
+    f, r = idx2.find(jnp.asarray(keys[::5]), use_kernel=False)
+    assert not bool(np.asarray(f).any())
+
+
+def test_edge_pool_roundtrip():
+    from repro.core import reuse, synth
+    pool = reuse.build_pool(synth.generate_pool(0.9, limit=50),
+                            kind="linear")
+    idx, rng = _small_index(pool=pool)
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 1, idx, blocking=True)
+        idx2, _ = persist.restore_sharded(store, _mesh1())
+    assert idx2.pool is not None
+    assert idx2.pool.trained_count == pool.trained_count
+    _check(idx2, q, lo, hi)
+    idx2.insert_batch(q[:100] + 0.125)      # pool-backed rebuilds still run
+
+
+def test_bf16_and_f64_npy_viewcast_roundtrip():
+    """bf16 leaves ride the uint16 view-cast codec and restore exactly,
+    next to f64 leaves, through both the raw store and the Checkpointer."""
+    import ml_dtypes
+    from repro.train.checkpoint import Checkpointer
+    rng = np.random.default_rng(0)
+    bf = jnp.asarray(rng.normal(size=(33,)).astype(np.float32),
+                     jnp.bfloat16)
+    f64 = jnp.asarray(rng.normal(size=(17,)))
+    tree = {"w": {"bf": bf, "f64": f64}}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(3, tree, blocking=True)
+        out = ck.restore(3, {"w": {"bf": jnp.zeros_like(bf),
+                                   "f64": jnp.zeros_like(f64)}})
+    assert out["w"]["bf"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]["bf"]).view(np.uint16),
+        np.asarray(bf).view(np.uint16))
+    assert out["w"]["f64"].dtype == jnp.float64
+    np.testing.assert_array_equal(np.asarray(out["w"]["f64"]),
+                                  np.asarray(f64))
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        store.save(1, {"x.npz": {"bf": np.asarray(bf), "f": np.asarray(f64)}},
+                   blocking=True)
+        got = store.load_file(1, "x.npz")
+    assert got["bf"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(got["bf"].view(np.uint16),
+                                  np.asarray(bf).view(np.uint16))
+
+
+def test_capacity_shrink_hysteresis():
+    """Shedding most of a shard (the migration/reshard donor path keeps the
+    +inf-padded capacity) strands storage; shrink_capacity steps both tiers
+    down to the hysteresis class, answers stay exact, and an immediate
+    small batch cannot climb back across."""
+    from repro.core import updates
+    rng = np.random.default_rng(11)
+    keys = f32keys(rng.lognormal(0, 0.8, 30_000) * 1e3)
+    d = updates.DynamicRMI.build(jnp.asarray(keys), eps=0.7, n_leaves=32,
+                                 kind="linear")
+    cap0 = d.index.keys.shape[0]
+    d.shed_suffix(float(keys[999]))         # donor half of a migration
+    assert d.index.keys.shape[0] == cap0, "shed must not reallocate"
+    assert d.shrink_capacity() is True
+    assert d.capacity_shrinks >= 1
+    want = 2 * updates._capacity(d.base_n)  # hysteresis: 2x the tight class
+    assert d.index.keys.shape[0] == want
+    assert d.index.keys.shape[0] < cap0
+    live = np.asarray(d.live_keys())
+    q = rng.permutation(np.concatenate([rng.choice(live, 300),
+                                        keys[-8:]]))
+    f, r = d.find(jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(r),
+                                  np.searchsorted(live, q, "left"))
+    np.testing.assert_array_equal(
+        np.asarray(f),
+        np.searchsorted(live, q, "right") > np.searchsorted(live, q, "left"))
+    # a <=128-key batch can never re-cross the class the shrink chose
+    fresh = np.setdiff1d(
+        f32keys(rng.lognormal(0, 0.8, 5_000) * 1e3), keys)[:128]
+    d.insert_batch(fresh)
+    assert not d.shrink_capacity(), "fresh headroom must not re-shrink"
+    assert d.index.keys.shape[0] == want
+
+
+# ---------------------------------------------------------------------------
+# Elastic-controller integration: confirmed host loss -> restore resharded
+# to the survivors.
+# ---------------------------------------------------------------------------
+def test_host_loss_triggers_restore_to_survivors():
+    from repro.train.elastic import ElasticController
+    t = [0.0]
+    ctl = ElasticController(n_hosts=2, heartbeat_timeout=10.0,
+                            clock=lambda: t[0])
+    idx, rng = _small_index()
+    q, lo, hi = _expect(idx, rng)
+    with tempfile.TemporaryDirectory() as d:
+        store = persist.SnapshotStore(d)
+        persist.snapshot_sharded(store, 5, idx, blocking=True)
+        t[0] = 20.0
+        ctl.heartbeat(0, step_time=1.0)     # host 1 stays silent
+        plan = ctl.plan()
+        assert plan["action"] == "remesh" and plan["survivors"] == 1
+        assert ctl.generation == 1
+        # the launcher's response: restore the index resharded onto the
+        # survivor mesh (1 host here — any width works, see the mesh
+        # scripts for real N->M)
+        mesh = jax.make_mesh((plan["survivors"],), ("data",))
+        idx2, rep = persist.restore_sharded(store, mesh)
+        assert rep.n_shards == plan["survivors"]
+        _check(idx2, q, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: bit-exact kill/restore mid-churn (subprocess per mesh
+# size), both find paths.
+# ---------------------------------------------------------------------------
+_SNAP_SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed, persist
+
+ndev = %(ndev)d
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+rng = np.random.default_rng(13 + 7 * ndev)
+base = f32keys(rng.lognormal(0, 0.8, 8_000) * 1e3)
+fresh = np.setdiff1d(f32keys(rng.lognormal(0, 0.8, 60_000) * 1e3), base)
+mesh = jax.make_mesh((ndev,), ("data",))
+idx = distributed.ShardedDynamicIndex.build(
+    jnp.asarray(base), mesh, n_leaves=32, eps=0.7)
+idx.insert_batch(fresh[:900])
+idx.delete_batch(rng.choice(base, 250, replace=False))
+
+# expected answers are pinned to the snapshot instant
+live = idx.live_keys()
+q = rng.permutation(np.concatenate(
+    [rng.choice(live, 500), fresh[-16:],
+     np.asarray(idx.splits, np.float64) if idx.n_shards > 1
+     else np.zeros(0)]))
+lo = np.searchsorted(live, q, side="left")
+hi = np.searchsorted(live, q, side="right")
+
+with tempfile.TemporaryDirectory() as dd:
+    store = persist.SnapshotStore(dd)
+    persist.snapshot_sharded(store, 7, idx, blocking=False)
+    # churn continues while the async writer runs: the snapshot must have
+    # decoupled from every mutable buffer at the save() call
+    idx.insert_batch(fresh[900:1400])
+    idx.delete_batch(rng.choice(live, 200, replace=False))
+    store.wait()
+
+    # a later snapshot dies mid-write -> only step 7 is committed
+    orig = persist._write_bytes
+    calls = [0]
+    def killer(path, data):
+        if calls[0] >= 2:
+            raise RuntimeError("simulated crash")
+        calls[0] += 1
+        orig(path, data)
+    persist._write_bytes = killer
+    try:
+        persist.snapshot_sharded(store, 8, idx, blocking=True)
+        raise SystemExit("crash injection did not fire")
+    except RuntimeError:
+        pass
+    finally:
+        persist._write_bytes = orig
+    assert store.steps() == [7], store.steps()
+
+    idx2, rep = persist.restore_sharded(store, mesh)
+    assert rep.step == 7 and rep.n_shards_from == ndev
+
+    # the recomputed device counter table is bit-identical to the saved one
+    glob = store.load_file(7, "index.npz")
+    np.testing.assert_array_equal(np.asarray(idx2._counts), glob["counts"])
+    np.testing.assert_array_equal(np.asarray(idx2._muted), glob["muted"])
+
+    for uk in (False, True):
+        f, r = idx2.find(jnp.asarray(q), use_kernel=uk)
+        np.testing.assert_array_equal(np.asarray(r), lo)
+        np.testing.assert_array_equal(np.asarray(f), hi > lo)
+
+    # the restored index keeps serving through fresh churn
+    idx2.insert_batch(fresh[1400:1800])
+    lv = idx2.live_keys()
+    qq = rng.choice(lv, 300)
+    f, r = idx2.find(jnp.asarray(qq), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(r),
+                                  np.searchsorted(lv, qq, "left"))
+print("PERSIST_OK ndev=%(ndev)d")
+"""
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("ndev", [1, 2])
+def test_snapshot_restore_bit_exact_small_mesh(ndev):
+    run_mesh_script(_SNAP_SCRIPT % {"ndev": ndev}, f"PERSIST_OK ndev={ndev}")
+
+
+@pytest.mark.kernel
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [4, 8])
+def test_snapshot_restore_bit_exact_large_mesh(ndev):
+    run_mesh_script(_SNAP_SCRIPT % {"ndev": ndev}, f"PERSIST_OK ndev={ndev}")
+
+
+# ---------------------------------------------------------------------------
+# Elastic N->M restore (split and merge), no from-scratch rebuild.
+# ---------------------------------------------------------------------------
+_RESHARD_SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed, persist
+
+nfrom, nto = %(nfrom)d, %(nto)d
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+rng = np.random.default_rng(29 + nfrom + 31 * nto)
+base = f32keys(rng.lognormal(0, 0.8, 9_000) * 1e3)
+fresh = np.setdiff1d(f32keys(rng.lognormal(0, 0.8, 60_000) * 1e3), base)
+mesh_from = jax.make_mesh((nfrom,), ("data",),
+                          devices=jax.devices()[:nfrom])
+mesh_to = jax.make_mesh((nto,), ("data",), devices=jax.devices()[:nto])
+idx = distributed.ShardedDynamicIndex.build(
+    jnp.asarray(base), mesh_from, n_leaves=32, eps=0.7)
+idx.insert_batch(fresh[:1200])
+idx.delete_batch(rng.choice(base, 300, replace=False))
+live = idx.live_keys()
+q = rng.permutation(np.concatenate([rng.choice(live, 600), fresh[-16:]]))
+lo = np.searchsorted(live, q, side="left")
+hi = np.searchsorted(live, q, side="right")
+
+with tempfile.TemporaryDirectory() as dd:
+    store = persist.SnapshotStore(dd)
+    persist.snapshot_sharded(store, 1, idx, blocking=True)
+    idx2, rep = persist.restore_sharded(store, mesh_to)
+    st = rep.reshard
+    assert st is not None and st.n_from == nfrom and st.n_to == nto
+    # the no-rebuild contract: every non-empty new shard is an anchor piece
+    # cut out by shed (zero refits) plus delta-riding merges; only seam
+    # leaves refit, nothing rebuilds from scratch
+    assert st.full_rebuilds == 0, st
+    assert st.pieces <= nfrom + nto - 1, st    # interval-overlap bound
+    total_leaves = nto * 32
+    assert st.leaf_refits < total_leaves, st
+    for uk in (False, True):
+        f, r = idx2.find(jnp.asarray(q), use_kernel=uk)
+        np.testing.assert_array_equal(np.asarray(r), lo)
+        np.testing.assert_array_equal(np.asarray(f), hi > lo)
+    if nto >= 4 * nfrom:
+        # a wide split strands the donor's pow2 capacity in every piece;
+        # the first cold restack's shrink sweep must reclaim it (and the
+        # finds above were answered post-shrink, so answers survived it)
+        assert idx2.capacity_shrinks >= 1, idx2.capacity_shrinks
+    # immediately serves fresh churn on the new width
+    idx2.insert_batch(fresh[1200:1600])
+    idx2.delete_batch(rng.choice(idx2.live_keys(), 150, replace=False))
+    lv = idx2.live_keys()
+    qq = rng.choice(lv, 300)
+    f, r = idx2.find(jnp.asarray(qq), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(r),
+                                  np.searchsorted(lv, qq, "left"))
+print("RESHARD_OK %(nfrom)d->%(nto)d")
+"""
+
+
+def _run_reshard(nfrom, nto):
+    run_mesh_script(
+        _RESHARD_SCRIPT % {"nfrom": nfrom, "nto": nto,
+                           "ndev": max(nfrom, nto)},
+        f"RESHARD_OK {nfrom}->{nto}")
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("nfrom,nto", [(1, 2), (2, 1)])
+def test_reshard_restore_small(nfrom, nto):
+    _run_reshard(nfrom, nto)
+
+
+@pytest.mark.kernel
+@pytest.mark.slow
+@pytest.mark.parametrize("nfrom,nto", [(4, 8), (8, 2), (1, 8)])
+def test_reshard_restore_large(nfrom, nto):
+    _run_reshard(nfrom, nto)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL smoke: a real kill -9 mid-async-save, then restore resharded
+# 4->2 in a fresh process.
+# ---------------------------------------------------------------------------
+_KILL_SCRIPT = r"""
+import os, signal
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed, persist
+
+out = os.environ["PERSIST_SMOKE_DIR"]
+
+def f32keys(raw):
+    return np.unique(np.sort(raw).astype(np.float32)).astype(np.float64)
+
+rng = np.random.default_rng(41)
+base = f32keys(rng.lognormal(0, 0.8, 6_000) * 1e3)
+fresh = np.setdiff1d(f32keys(rng.lognormal(0, 0.8, 40_000) * 1e3), base)
+mesh = jax.make_mesh((4,), ("data",))
+idx = distributed.ShardedDynamicIndex.build(
+    jnp.asarray(base), mesh, n_leaves=32, eps=0.7)
+idx.insert_batch(fresh[:700])
+idx.delete_batch(rng.choice(base, 200, replace=False))
+
+store = persist.SnapshotStore(out)
+persist.snapshot_sharded(store, 1, idx, blocking=True)
+live1 = idx.live_keys()
+
+idx.insert_batch(fresh[700:1100])
+live2 = idx.live_keys()
+q = rng.permutation(np.concatenate([rng.choice(live2, 400), fresh[-16:]]))
+# expected answers for BOTH possible surviving snapshots, written before
+# the kill so the parent can check whichever one committed
+np.savez(os.path.join(out, "expected.npz"), q=q,
+         lo1=np.searchsorted(live1, q, "left"),
+         hi1=np.searchsorted(live1, q, "right"),
+         lo2=np.searchsorted(live2, q, "left"),
+         hi2=np.searchsorted(live2, q, "right"))
+
+persist.snapshot_sharded(store, 2, idx, blocking=False)   # async...
+os.kill(os.getpid(), signal.SIGKILL)                      # ...and die
+"""
+
+_RESTORE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed, persist
+
+out = os.environ["PERSIST_SMOKE_DIR"]
+exp = np.load(os.path.join(out, "expected.npz"))
+store = persist.SnapshotStore(out)
+mesh = jax.make_mesh((2,), ("data",))
+idx, rep = persist.restore_sharded(store, mesh)
+assert rep.n_shards_from == 4 and rep.n_shards == 2
+assert rep.reshard is not None and rep.reshard.full_rebuilds == 0
+tag = {1: ("lo1", "hi1"), 2: ("lo2", "hi2")}[rep.step]
+lo, hi = exp[tag[0]], exp[tag[1]]
+for uk in (False, True):
+    f, r = idx.find(jnp.asarray(exp["q"]), use_kernel=uk)
+    np.testing.assert_array_equal(np.asarray(r), lo)
+    np.testing.assert_array_equal(np.asarray(f), hi > lo)
+print("KILL_RESTORE_OK step=%d" % rep.step)
+"""
+
+
+@pytest.mark.kernel
+def test_sigkill_restore_reshard_smoke():
+    """Save under churn, SIGKILL the process for real, restore 4->2 in a
+    fresh interpreter, and require bit-exact finds against answers the
+    victim recorded before dying."""
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ, PYTHONPATH="src", PERSIST_SMOKE_DIR=d)
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run([sys.executable, "-c", _KILL_SCRIPT],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == -signal.SIGKILL, \
+            (proc.returncode, proc.stderr[-2000:])
+        # step 1 must have survived whatever the kill did to step 2
+        store = persist.SnapshotStore(d)
+        assert 1 in store.steps()
+        proc = subprocess.run([sys.executable, "-c", _RESTORE_SCRIPT],
+                              env=env, capture_output=True, text=True,
+                              timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        assert "KILL_RESTORE_OK" in proc.stdout, proc.stdout[-2000:]

@@ -76,6 +76,61 @@ def test_elastic_controller_policies():
     assert ctl.generation == 1
 
 
+def test_elastic_rejoin_and_stale_stragglers():
+    """A removed host that resumes heartbeats re-registers and surfaces a
+    remesh (never a silent no-op); a timed-out host's stale step times
+    drop out of the straggler computation."""
+    t = [0.0]
+    ctl = ElasticController(n_hosts=4, heartbeat_timeout=10.0,
+                            clock=lambda: t[0])
+    for h in range(4):
+        for _ in range(6):
+            ctl.heartbeat(h, step_time=1.0)
+    # host 2 dies
+    t[0] = 20.0
+    for h in (0, 1, 3):
+        ctl.heartbeat(h, step_time=1.0)
+    plan = ctl.plan()
+    assert plan["action"] == "remesh" and plan["survivors"] == 3
+    assert ctl.generation == 1 and plan["rejoined"] == []
+    # ...and comes back: the rejoin is a topology change like a loss
+    ctl.heartbeat(2, step_time=1.0)
+    plan = ctl.plan()
+    assert plan["action"] == "remesh" and plan["survivors"] == 4
+    assert plan["rejoined"] == [2]
+    assert ctl.generation == 2
+    assert ctl.plan()["action"] == "none"       # steady state again
+    # a host that stops heartbeating while holding the worst step times
+    # must not land in (or skew) the straggler set
+    for _ in range(20):
+        ctl.heartbeat(0, step_time=9.0)
+    t[0] = 40.0
+    for h in (1, 2, 3):
+        ctl.heartbeat(h, step_time=1.0)
+    assert ctl.stragglers() == []               # 0 is a loss, not a straggler
+    assert ctl.dead_hosts() == [0]
+
+
+def test_checkpoint_write_failure_surfaces_and_retries():
+    """An async write failure re-raises from wait(); transient OSErrors are
+    absorbed by the retry knob and counted."""
+    import faultinject as fi
+    x = {"w": jnp.arange(8.0)}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        with fi.FaultInjector(fail_always=True):
+            ck.save(1, x)
+            with pytest.raises(IOError):
+                ck.wait()
+        assert ck.latest_step() is None
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, retries=2, backoff=0.001)
+        with fi.FaultInjector(transient_errors=2):
+            ck.save(1, x, blocking=True)
+        assert ck.write_retries == 2
+        assert ck.latest_step() == 1
+
+
 def test_microbatch_equivalence():
     """grad-accumulated step == single-batch step (same loss, ~same params)."""
     cfg = reduced("qwen3-4b")
