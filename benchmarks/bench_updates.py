@@ -418,28 +418,28 @@ def bench_recover(n_values=(1 << 14, 1 << 16), eps: float = 0.7,
 
 
 def _sharded_rows(n_shards: int, n: int) -> list[dict]:
-    """Collect the sharded rows from a forced-device-count subprocess
-    (harness.worker_rows — the host-device count locks at first jax
+    """Sharded rows via the shared forced-device-count worker call
+    (harness.worker_suite — the host-device count locks at first jax
     init)."""
     from . import harness
-    return harness.worker_rows("benchmarks.bench_updates",
-                               "--sharded-worker", n_shards, ["--n", n])
+    return harness.worker_suite("benchmarks.bench_updates",
+                                "--sharded-worker", n_shards, n)
 
 
 def _restack_rows_worker(n_devices: int, n: int) -> list[dict]:
-    """Collect the restack/migration sweep from a forced-device-count
-    subprocess (shard counts 2/4/8 share one 8-device worker)."""
+    """Restack/migration sweep rows (shard counts 2/4/8 share one
+    8-device worker)."""
     from . import harness
-    return harness.worker_rows("benchmarks.bench_updates",
-                               "--restack-worker", n_devices, ["--n", n])
+    return harness.worker_suite("benchmarks.bench_updates",
+                                "--restack-worker", n_devices, n)
 
 
 def _recover_rows_worker(n_devices: int, n: int) -> list[dict]:
-    """Collect the durability sweep from a forced-device-count subprocess
-    (snapshot / restore / restore-resharded-to-2)."""
+    """Durability sweep rows (snapshot / restore /
+    restore-resharded-to-2)."""
     from . import harness
-    return harness.worker_rows("benchmarks.bench_updates",
-                               "--recover-worker", n_devices, ["--n", n])
+    return harness.worker_suite("benchmarks.bench_updates",
+                                "--recover-worker", n_devices, n)
 
 
 def quick_rows(n: int = 1 << 15) -> list[dict]:

@@ -32,6 +32,16 @@ _ROOT = Path(__file__).resolve().parent.parent
 _ROW_KEYS = {
     "BENCH_updates.json": {"op", "impl", "n_keys", "ns_per_op", "detail"},
     "BENCH_lookup.json": {"variant", "n_keys", "path", "ns_per_query"},
+    "BENCH_serve.json": {
+        "workload",
+        "tenants",
+        "offered_qps",
+        "achieved_qps",
+        "p50_ms",
+        "p99_ms",
+        "p999_ms",
+        "detail",
+    },
 }
 
 _ENTRY_KEYS = {"sha", "suite", "mode", "date", "rows"}

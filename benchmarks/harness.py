@@ -94,6 +94,35 @@ def worker_rows(module: str, flag: str, n_devices: int, argv: list,
         return []
 
 
+def worker_suite(module: str, flag: str, n_devices: int, n: int,
+                 timeout: int = 3600) -> list:
+    """The one-knob ``--n``-sized worker call shared by the bench suites
+    (sharded/restack/recover rows of bench_updates, the serve suite): one
+    place owns the forced-device-count re-exec convention instead of a
+    per-suite wrapper each."""
+    return worker_rows(module, flag, n_devices, ["--n", n], timeout=timeout)
+
+
+def poisson_arrivals(rate_qps: float, duration_s: float,
+                     seed: int = 0) -> np.ndarray:
+    """Open-loop Poisson arrival times in [0, duration_s): exponential
+    inter-arrival gaps at ``rate_qps``, cumulatively summed.  Open-loop
+    means the offered load never backs off when the server lags — queueing
+    delay shows up in the measured latency instead of silently throttling
+    the generator — which is what an SLO benchmark must measure."""
+    rng = np.random.default_rng(seed)
+    out = []
+    t = 0.0
+    chunk = max(int(rate_qps * duration_s * 1.25) + 16, 16)
+    while t < duration_s:
+        gaps = rng.exponential(1.0 / rate_qps, size=chunk)
+        ts = t + np.cumsum(gaps)
+        out.append(ts)
+        t = float(ts[-1])
+    ts = np.concatenate(out)
+    return ts[ts < duration_s]
+
+
 def pools(eps: float = 0.9):
     """Cached (linear, mlp) pools; pre-train time reported separately."""
     if eps not in _POOLS:

@@ -96,8 +96,15 @@ def pack_root(root_kind: str, params, route_scale: float = 1.0) -> jax.Array:
     differs per table — the sharded dynamic path stacks shards with
     different ``route_n`` under one statically-traced kernel — can pack
     scale = kernel_route_n / shard_route_n and trace a single kernel with
-    ``route_n = kernel_route_n``.  Routing runs in f32 either way and every
-    final position is seam-verified, so the fold never changes results.
+    ``route_n = kernel_route_n``.  The same fold generalizes per *tenant*
+    (serve.frontend): a tenant built with ``L_t`` leaves packs
+    scale = L_t / tenant_route_n, its leaf tables re-pad to the widest
+    tenant's lane count (:func:`pad_packed_leaves`), and one kernel traced
+    with static ``n_leaves = route_n = max_t L_t`` serves every tenant —
+    routing overshoot past ``L_t - 1`` lands on a replicated last leaf,
+    i.e. the same window the tenant's own clip would have produced.
+    Routing runs in f32 either way and every final position is
+    seam-verified, so the fold never changes results.
     """
     s = jnp.float64(route_scale)
     blk = jnp.zeros((ROOT_ROWS, 128), jnp.float32)
@@ -126,6 +133,25 @@ def pack_leaves(w1, b1, w2, b2, err_lo, err_hi):
     for row, a in ((0, b2), (1, err_lo), (2, err_hi)):
         vec = vec.at[row, :L].set(a.astype(jnp.float32))
     return mat, vec
+
+
+def pad_packed_leaves(mat, vec, n_live: int, lp_to: int):
+    """Re-pad packed lane-major leaf tables (``pack_leaves`` layout, lane
+    count on the last axis) to a wider lane count, replicating the last
+    *live* leaf into every lane past ``n_live - 1``.
+
+    This is the per-tenant half of the ``route_scale`` fold: a tenant with
+    ``L_t = n_live`` leaves stacked under a kernel traced with a wider
+    static ``n_leaves`` can see routing buckets in ``[L_t, n_leaves - 1]``
+    (its packed scale maps predictions past the end there, where its own
+    trace would have clipped to ``L_t - 1``).  Replicated lanes carry the
+    last leaf's params *and* error bounds, so an overshot bucket yields the
+    exact window the tenant's own clip produces — downstream search and
+    seam verification then match bit-for-bit.  Leading axes (e.g. a shard
+    stack) broadcast through.
+    """
+    lane = jnp.minimum(jnp.arange(lp_to), max(n_live - 1, 0))
+    return mat[..., lane], vec[..., lane]
 
 
 def _route_window(root, mat, vec, q, *, n_keys: int, n_leaves: int, lp: int,

@@ -1,2 +1,20 @@
-"""Serving runtime: prefill + decode steps, paged KV cache with learned
-page-table option."""
+"""Serving runtime.
+
+Two serving surfaces live here:
+
+* ``serve.frontend`` — the async batched index front-end: request queue ->
+  adaptive batcher -> one stacked multi-tenant ``shard_map`` dispatch ->
+  response scatter.  The batcher coalesces requests up to a configurable
+  latency budget (measured from the oldest queued request, with an early
+  cut at the batch-size cap) and pads the live batch to the pow2
+  ``kernels.lookup.capacity_class`` widths, so after warmup the jitted
+  dispatch sees only pow2 query shapes and the hot path never retraces —
+  batch-size variation changes pad *contents*, not shapes.  Dispatches are
+  double-buffered (up to ``ServeConfig.pipeline_depth`` batches in flight:
+  batch k+1 stages and dispatches while batch k computes), and
+  insert/delete requests interleave with finds in the same batches, riding
+  the dirty-row slice cache so mutations cost O(touched shards + touched
+  tenants).
+* ``serve.step`` — LM prefill + decode steps, paged KV cache with the
+  learned page-table option.
+"""

@@ -1,0 +1,505 @@
+"""Async batched serving front-end for sharded dynamic indexes.
+
+Pipeline (the latency-budget / capacity-class contract)::
+
+    submit() -> request queue -> AdaptiveBatcher -> TenantPack.find -> scatter
+                                     |                    |
+                          coalesce up to the        one stacked shard_map
+                          latency budget (or        dispatch over every
+                          the batch-size cap)       tenant, padded to pow2
+                                                    capacity classes
+
+* **Coalescing**: requests wait at most ``ServeConfig.latency_budget_s``
+  measured from the *oldest* queued request; a batch also cuts early when
+  the queued key count reaches ``max_batch``.  Batching trades that bounded
+  queueing delay for one dispatch amortized over every caller in the
+  window.
+* **Capacity-class padding**: the live batch pads to
+  ``kernels.lookup.capacity_class`` widths (pow2, 128 floor), so the jitted
+  stacked dispatch sees only pow2 query shapes — after warmup the hot path
+  **never retraces**; batch-size variation changes pad contents, not
+  shapes.  (``core.distributed.TRACE_COUNTS`` exposes the trace counter
+  the guard tests pin.)
+* **Multi-tenant stacked dispatch**: N independent ``ShardedDynamicIndex``
+  tenants answer in one ``shard_map`` program
+  (``core.distributed._tenant_stacked_find_fn``).  Tenants of different
+  build sizes share the single trace: tiers pad to cross-tenant max
+  capacity classes, leaf tables pad to the widest tenant with the last
+  live leaf replicated (``lookup.pad_packed_leaves``), and per-tenant
+  routing rescales ride the data — the traced ``route_n`` scalars on the
+  jnp path, the ``pack_root(route_scale=...)`` fold on the kernel path.
+* **Double-buffered dispatch**: up to ``pipeline_depth`` batches stay in
+  flight; while batch k executes on device, the loop coalesces, stages
+  (``jax.device_put``) and dispatches batch k+1, so the device never
+  idles between batches.  Results resolve (one host sync per batch) and
+  scatter back to each caller's future.
+* **Find/update interleaving**: insert/delete requests coalesce into the
+  same batches; they apply *before* the batch's finds dispatch (finds
+  observe every update coalesced with them).  Mutations ride the PR 5
+  dirty-row slice cache twice over — each tenant restacks only its dirty
+  shard rows, and the tenant stack rewrites only the mutated tenants'
+  rows (donated row scatters, true in-place writes).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import distributed as dist_mod
+from ..kernels.lookup import capacity_class, pad_packed_leaves
+
+Array = jax.Array
+
+
+@dataclass
+class ServeConfig:
+    """Front-end knobs (see module docstring for the contract)."""
+    latency_budget_s: float = 2e-3    # max coalesce wait from oldest request
+    max_batch: int = 4096             # early-cut key-count cap per batch
+    batch_floor: int = 128            # capacity-class floor for query rows
+    pipeline_depth: int = 2           # batches in flight (double-buffered)
+
+
+class Request:
+    """Future returned by ``BatchingFrontend.submit_*``."""
+    __slots__ = ("tenant", "kind", "keys", "arrival", "done_at", "found",
+                 "rank", "error", "_event")
+
+    def __init__(self, tenant: int, kind: str, keys: np.ndarray,
+                 arrival: float):
+        self.tenant = tenant
+        self.kind = kind                  # "find" | "insert" | "delete"
+        self.keys = keys
+        self.arrival = arrival
+        self.done_at = None               # completion time (frontend clock)
+        self.found = None
+        self.rank = None
+        self.error = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        """Block until served.  Finds return ``(found, rank)`` numpy
+        arrays; updates return ``None`` once applied."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request not served within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        if self.kind == "find":
+            return self.found, self.rank
+        return None
+
+
+class AdaptiveBatcher:
+    """Pure coalescing policy — no threads, injectable clock, so the
+    deadline semantics are unit-testable without wall-clock flakes.
+
+    A batch becomes ready when the *oldest* pending request has waited the
+    latency budget, or the queued key count reaches ``max_batch``.
+    """
+
+    def __init__(self, latency_budget_s: float, max_batch: int,
+                 clock=time.monotonic):
+        self.latency_budget_s = float(latency_budget_s)
+        self.max_batch = int(max_batch)
+        self.clock = clock
+        self._pending: list[Request] = []
+        self._n_keys = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def offer(self, req: Request) -> None:
+        self._pending.append(req)
+        self._n_keys += req.keys.size
+
+    def deadline(self) -> float | None:
+        """Absolute time the current batch must cut at (None when empty)."""
+        if not self._pending:
+            return None
+        return self._pending[0].arrival + self.latency_budget_s
+
+    def ready(self, now: float | None = None) -> bool:
+        if not self._pending:
+            return False
+        if self._n_keys >= self.max_batch:
+            return True
+        return (self.clock() if now is None else now) >= self.deadline()
+
+    def cut(self) -> list[Request]:
+        batch, self._pending, self._n_keys = self._pending, [], 0
+        return batch
+
+
+class TenantPack:
+    """N tenants' stacked per-shard state, padded to cross-tenant max
+    capacity classes and maintained incrementally: ``find`` refreshes only
+    the rows of tenants whose own slice cache changed (donated row
+    scatters), and re-assembles cold only when a cross-tenant capacity
+    class crosses a pow2."""
+
+    def __init__(self, tenants: list, *, use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+        if not tenants:
+            raise ValueError("TenantPack needs at least one tenant")
+        mesh, axis = tenants[0].mesh, tenants[0].axis
+        kinds = {t.shards[0].index.leaf_kind for t in tenants}
+        if any(t.mesh is not mesh or t.axis != axis for t in tenants):
+            raise ValueError("tenants must share one mesh and axis")
+        if len(kinds) != 1:
+            raise ValueError(f"tenants must share one leaf kind: {kinds}")
+        f32 = all(t.f32_exact for t in tenants)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and f32
+        elif use_kernel and not f32:
+            raise ValueError(
+                "use_kernel=True with a tenant key space that is not "
+                "f32-exact: the kernel's f32 search cannot distinguish "
+                "f32-colliding keys")
+        self.tenants = tenants
+        self.mesh, self.axis = mesh, axis
+        self.use_kernel = bool(use_kernel)
+        self.interpret = interpret if interpret is None else bool(interpret)
+        self.leaf_kind = kinds.pop()
+        self.n_leaves = max(t.n_leaves for t in tenants)
+        # Common packed lane count: tenants re-pad to the widest tenant's
+        # 128-multiple (pack_leaves layout).
+        self._lp = -(-self.n_leaves // 128) * 128
+        self._st: dict | None = None
+        self._geom = None
+        self._fps: list | None = None     # per-tenant identity fingerprints
+        self.pack_full = 0                # cold tenant-stack assemblies
+        self.pack_rows = 0                # tenant rows rewritten in place
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def n_shards(self) -> int:
+        return self.tenants[0].n_shards
+
+    # -- assembly ----------------------------------------------------------
+    @staticmethod
+    def _fingerprint(st: dict) -> tuple:
+        """Identity snapshot of one tenant's stacked arrays.  Holding the
+        refs keeps ids stable; comparison is pure ``is`` checks, so a
+        tenant whose slice cache was untouched costs O(1) per batch."""
+        leaves = jax.tree.leaves((st["root"], st["leaves"], st["packed"]))
+        return tuple(st[k] for k in
+                     dist_mod.ShardedDynamicIndex._ROW_KEYS) + \
+            (st["offs"], st["splits"], st["iters"]) + tuple(leaves)
+
+    def _tenant_row(self, t, st: dict, bcap: int, dcap: int) -> dict:
+        """One tenant's (S, ...) slice set padded to the cross-tenant
+        geometry — the unit of incremental tenant restacking."""
+        L, lt = self.n_leaves, t.n_leaves
+        padv = lambda a, c, v: jnp.pad(
+            a, ((0, 0), (0, c - a.shape[1])), constant_values=v)
+        pade = lambda a, c: jnp.pad(
+            a, ((0, 0), (0, c - a.shape[1])) + ((0, 0),) * (a.ndim - 2),
+            mode="edge")
+        row = dict(
+            splits=st["splits"],
+            offs=st["offs"],
+            # Per-tenant routing rescale as data: the stacked trace routes
+            # with static n_leaves = max_t L_t, so a tenant built at L_t
+            # scales its frozen per-shard route_n by L / L_t (overshoot
+            # past L_t - 1 lands on the replicated last leaf below).
+            route_n=st["route_n"] * (jnp.float64(L) / jnp.float64(lt)),
+            base=padv(st["base"], bcap, jnp.inf),
+            bdead=padv(st["bdead"], bcap, False),
+            bpsum=pade(st["bpsum"], bcap + 1),
+            dk=padv(st["dk"], dcap, jnp.inf),
+            ddead=padv(st["ddead"], dcap, False),
+            dpsum=pade(st["dpsum"], dcap + 1),
+            root=st["root"],
+            leaves=jax.tree.map(lambda a: pade(a, L), st["leaves"]),
+            err_lo=pade(st["err_lo"], L),
+            err_hi=pade(st["err_hi"], L))
+        if self.use_kernel:
+            kroot, kmat, kvec = t._packed_stack(st)
+            kmat, kvec = pad_packed_leaves(kmat, kvec, lt, self._lp)
+            row["kroot"], row["kmat"], row["kvec"] = kroot, kmat, kvec
+        return row
+
+    _STACK_KEYS = ("splits", "offs", "route_n", "base", "bdead", "bpsum",
+                   "dk", "ddead", "dpsum", "err_lo", "err_hi")
+
+    def _refresh(self) -> dict:
+        sts = [t._stacked() for t in self.tenants]
+        if self.use_kernel:
+            for t, st in zip(self.tenants, sts):
+                t._packed_stack(st)
+        bcap = max(st["bcap"] for st in sts)
+        dcap = max(st["dcap"] for st in sts)
+        fps = [self._fingerprint(st) for st in sts]
+        geom = (bcap, dcap)
+        if self._st is None or geom != self._geom:
+            rows = [self._tenant_row(t, st, bcap, dcap)
+                    for t, st in zip(self.tenants, sts)]
+            stack = lambda k: jnp.stack([r[k] for r in rows])
+            self._st = {k: stack(k) for k in self._STACK_KEYS}
+            tmap = lambda k: jax.tree.map(lambda *a: jnp.stack(a),
+                                          *[r[k] for r in rows])
+            self._st["root"] = tmap("root")
+            self._st["leaves"] = tmap("leaves")
+            if self.use_kernel:
+                for k in ("kroot", "kmat", "kvec"):
+                    self._st[k] = stack(k)
+            self._geom = geom
+            self.pack_full += 1
+        else:
+            stale = [i for i, fp in enumerate(fps)
+                     if not all(a is b for a, b in zip(fp, self._fps[i]))
+                     or len(fp) != len(self._fps[i])]
+            for i in stale:
+                row = self._tenant_row(self.tenants[i], sts[i], bcap, dcap)
+                idx = jnp.asarray([i])
+                for k in self._STACK_KEYS + (
+                        ("kroot", "kmat", "kvec") if self.use_kernel
+                        else ()):
+                    self._st[k] = dist_mod.scatter_rows_donated(
+                        self._st[k], idx, row[k][None])
+                scat = lambda dst, r: dist_mod.scatter_rows_donated(
+                    dst, idx, r[None])
+                self._st["root"] = jax.tree.map(scat, self._st["root"],
+                                                row["root"])
+                self._st["leaves"] = jax.tree.map(scat, self._st["leaves"],
+                                                  row["leaves"])
+                self.pack_rows += 1
+        self._fps = fps
+        self._st["iters"] = max(st["iters"] for st in sts)
+        return self._st
+
+    # -- dispatch ----------------------------------------------------------
+    def find(self, qmat) -> tuple[Array, Array]:
+        """One stacked dispatch: ``qmat`` is (n_tenants, qcap) f64 with
+        finite pads (qcap a multiple of the shard count; callers pad to
+        ``capacity_class`` widths to stay on the warm trace).  Returns
+        (found, rank) as (n_tenants, qcap) device arrays — asynchronous,
+        so callers can overlap the next batch's staging."""
+        st = self._refresh()
+        qmat = jnp.asarray(qmat, jnp.float64)
+        T, qcap = qmat.shape
+        if T != self.n_tenants or qcap % self.n_shards:
+            raise ValueError(f"bad query matrix {qmat.shape}: want "
+                             f"({self.n_tenants}, k*{self.n_shards})")
+        fn = dist_mod._tenant_stacked_find_fn(
+            self.mesh, self.axis, n_tenants=self.n_tenants,
+            n_leaves=self.n_leaves, leaf_kind=self.leaf_kind,
+            iters=st["iters"], use_kernel=self.use_kernel,
+            interpret=self.interpret)
+        tables = (st["kroot"], st["kmat"], st["kvec"]) if self.use_kernel \
+            else (st["root"], st["leaves"], st["err_lo"], st["err_hi"])
+        return fn(st["splits"], st["offs"], st["route_n"], st["base"],
+                  st["bdead"], st["bpsum"], st["dk"], st["ddead"],
+                  st["dpsum"], tables, qmat)
+
+
+@dataclass
+class FrontendStats:
+    batches: int = 0              # stacked dispatches
+    queries: int = 0              # live find keys served
+    updates: int = 0              # insert/delete keys applied
+    padded_slots: int = 0         # pad lanes dispatched (wasted work)
+    qcaps: set = field(default_factory=set)   # capacity classes seen
+
+    @property
+    def pad_fraction(self) -> float:
+        tot = self.queries + self.padded_slots
+        return self.padded_slots / tot if tot else 0.0
+
+
+class _InFlight:
+    __slots__ = ("found", "rank", "plan")
+
+    def __init__(self, found, rank, plan):
+        self.found, self.rank, self.plan = found, rank, plan
+
+
+class BatchingFrontend:
+    """The serving loop: a dispatcher thread drains the request queue
+    through the batcher into stacked dispatches (module docstring).  Use
+    as a context manager, or ``start()``/``stop()`` explicitly."""
+
+    def __init__(self, tenants: list, *, use_kernel: bool | None = None,
+                 interpret: bool | None = None,
+                 config: ServeConfig | None = None, clock=time.monotonic):
+        self.config = config or ServeConfig()
+        self.pack = TenantPack(tenants, use_kernel=use_kernel,
+                               interpret=interpret)
+        self.stats = FrontendStats()
+        self.clock = clock
+        self.batcher = AdaptiveBatcher(self.config.latency_budget_s,
+                                       self.config.max_batch, clock)
+        self._cond = threading.Condition()
+        self._inflight: deque[_InFlight] = deque()
+        self._stop = False
+        self._thread: threading.Thread | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "BatchingFrontend":
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-frontend", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    __enter__ = start
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def warmup(self, batch_sizes=(1,)) -> None:
+        """Trace the stacked dispatch for each capacity class the given
+        live batch sizes land in (plus the floor), so steady-state serving
+        never pays a trace.  Call before opening the queue to traffic."""
+        for n in {capacity_class(int(n), self.config.batch_floor)
+                  for n in batch_sizes} | {self.config.batch_floor}:
+            qcap = max(n, self.pack.n_shards)
+            found, rank = self.pack.find(
+                jnp.zeros((self.pack.n_tenants, qcap), jnp.float64))
+            jax.block_until_ready((found, rank))
+
+    # -- submission --------------------------------------------------------
+    def _submit(self, tenant: int, kind: str, keys) -> Request:
+        if self._thread is None:
+            raise RuntimeError("frontend not started")
+        if not 0 <= int(tenant) < self.pack.n_tenants:
+            raise ValueError(f"unknown tenant {tenant}")
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if kind == "find" and not np.all(np.isfinite(keys)):
+            raise ValueError("queries must be finite")
+        req = Request(int(tenant), kind, keys, self.clock())
+        with self._cond:
+            self.batcher.offer(req)
+            self._cond.notify_all()
+        return req
+
+    def submit_find(self, tenant: int, keys) -> Request:
+        return self._submit(tenant, "find", keys)
+
+    def submit_insert(self, tenant: int, keys) -> Request:
+        return self._submit(tenant, "insert", keys)
+
+    def submit_delete(self, tenant: int, keys) -> Request:
+        return self._submit(tenant, "delete", keys)
+
+    def lookup(self, tenant: int, keys, timeout: float | None = 60.0):
+        """Synchronous convenience: submit one find and wait."""
+        return self.submit_find(tenant, keys).result(timeout)
+
+    # -- the serving loop --------------------------------------------------
+    def _collect(self) -> list | None:
+        """Block for the next batch: wait for a first request, then
+        coalesce until the batcher's deadline (or size cap).  Returns None
+        on shutdown with nothing pending."""
+        with self._cond:
+            while not len(self.batcher):
+                if self._stop:
+                    return None
+                self._cond.wait(timeout=0.05)
+            while not self._stop and not self.batcher.ready():
+                dl = self.batcher.deadline()
+                self._cond.wait(timeout=max(dl - self.clock(), 0.0))
+            return self.batcher.cut()
+
+    def _apply_updates(self, batch: list) -> None:
+        """Mutations coalesced into this batch apply before its finds
+        dispatch — each tenant's dirty-row slice cache (and the tenant
+        stack above it) then refreshes O(touched) at assembly."""
+        for req in batch:
+            if req.kind == "find":
+                continue
+            try:
+                tenant = self.pack.tenants[req.tenant]
+                if req.kind == "insert":
+                    tenant.insert_batch(req.keys)
+                else:
+                    tenant.delete_batch(req.keys)
+                self.stats.updates += req.keys.size
+            except Exception as e:          # noqa: BLE001 — fail the caller
+                req.error = e
+            req.done_at = self.clock()
+            req._event.set()
+
+    def _dispatch(self, batch: list) -> _InFlight | None:
+        finds = [r for r in batch if r.kind == "find"]
+        if not finds:
+            return None
+        counts = [0] * self.pack.n_tenants
+        plan = []                       # (req, tenant, start, stop)
+        for r in finds:
+            t = r.tenant
+            plan.append((r, t, counts[t], counts[t] + r.keys.size))
+            counts[t] += r.keys.size
+        qcap = capacity_class(max(counts), self.config.batch_floor)
+        qcap = max(qcap, self.pack.n_shards)
+        qmat = np.zeros((self.pack.n_tenants, qcap), np.float64)
+        for r, t, a, b in plan:
+            qmat[t, a:b] = r.keys
+        live = sum(counts)
+        self.stats.batches += 1
+        self.stats.queries += live
+        self.stats.padded_slots += qmat.size - live
+        self.stats.qcaps.add(qcap)
+        # Stage host->device explicitly, then dispatch asynchronously: with
+        # pipeline_depth > 1 this batch's transfer and compute overlap the
+        # previous batch's compute and the next batch's coalescing.
+        found, rank = self.pack.find(jax.device_put(qmat))
+        return _InFlight(found, rank, plan)
+
+    def _resolve(self, inf: _InFlight) -> None:
+        found = np.asarray(inf.found)       # one host sync per batch
+        rank = np.asarray(inf.rank)
+        now = self.clock()
+        for req, t, a, b in inf.plan:
+            req.found = found[t, a:b]
+            req.rank = rank[t, a:b]
+            req.done_at = now
+            req._event.set()
+
+    def _fail(self, batch: list, err: Exception) -> None:
+        for req in batch:
+            if not req._event.is_set():
+                req.error = err
+                req.done_at = self.clock()
+                req._event.set()
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                break
+            try:
+                self._apply_updates(batch)
+                inf = self._dispatch(batch)
+            except Exception as e:          # noqa: BLE001 — fail the batch
+                self._fail(batch, e)
+                continue
+            if inf is not None:
+                self._inflight.append(inf)
+            while len(self._inflight) >= self.config.pipeline_depth or \
+                    (self._inflight and not len(self.batcher)):
+                self._resolve(self._inflight.popleft())
+        while self._inflight:
+            self._resolve(self._inflight.popleft())

@@ -25,6 +25,20 @@ def _updates_doc():
     }
 
 
+def _serve_doc():
+    row = {"workload": "point", "tenants": 2, "offered_qps": 500.0,
+           "achieved_qps": 480.0, "p50_ms": 4.1, "p99_ms": 9.9,
+           "p999_ms": 15.0, "detail": "reqs=500"}
+    return {
+        "meta": {"duration_s": 1.0},
+        "rows": [dict(row)],
+        "trajectory": [
+            {"sha": "abc1234", "suite": "serve", "mode": "interpret/CPU",
+             "date": "2026-08-08", "rows": [dict(row)]},
+        ],
+    }
+
+
 def _write(tmp_path, doc, name="BENCH_updates.json"):
     p = tmp_path / name
     p.write_text(json.dumps(doc))
@@ -52,6 +66,23 @@ def test_schema_violations_caught(tmp_path):
     doc = _updates_doc()
     doc["trajectory"][0]["date"] = "today"
     assert check_bench.check_schema(Path("BENCH_updates.json"), doc)
+
+
+def test_serve_doc_passes(tmp_path):
+    p = _write(tmp_path, _serve_doc(), name="BENCH_serve.json")
+    assert check_bench.check_file(p) == []
+
+
+def test_serve_schema_violations_caught(tmp_path):
+    doc = _serve_doc()
+    del doc["rows"][0]["p999_ms"]
+    errs = check_bench.check_schema(Path("BENCH_serve.json"), doc)
+    assert any("p999_ms" in e for e in errs)
+
+    doc = _serve_doc()
+    del doc["trajectory"][0]["rows"][0]["achieved_qps"]
+    errs = check_bench.check_schema(Path("BENCH_serve.json"), doc)
+    assert any("achieved_qps" in e for e in errs)
 
 
 def test_duplicate_trajectory_key_caught(tmp_path):
