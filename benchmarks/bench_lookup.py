@@ -121,6 +121,78 @@ def bench(sizes: list[int], eps: float = 0.9) -> list[dict]:
     return rows
 
 
+def _time_range(fn, q_lo, q_hi) -> float:
+    import jax
+    jax.block_until_ready(fn(q_lo, q_hi))       # compile / warm
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.time()
+        jax.block_until_ready(fn(q_lo, q_hi))
+        times.append(time.time() - t0)
+    return float(np.median(times)) / q_lo.shape[0] * 1e9
+
+
+def bench_range(sizes: list[int], eps: float = 0.9) -> list[dict]:
+    """YCSB-style point/range/mixed mixes over the dynamic two-tier index.
+
+    Per size: a churned DynamicRMI (batched inserts + tombstones so the
+    delta tier and live-rank prefix sums are exercised) timed under three
+    mixes —
+
+      point   100% point lookups (YCSB-C)
+      range   100% range lookups (YCSB-E's scan op)
+      mixed   95% range / 5% point (YCSB-E's default mix)
+
+    each on both lookup paths (jnp / pallas-interpret).  ns_per_query is
+    per *operation* (a range op routes two endpoints but counts once).
+    """
+    import jax.numpy as jnp
+    from repro.core.updates import DynamicRMI
+
+    rows: list[dict] = []
+    rng = np.random.default_rng(11)
+    for n in sizes:
+        keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+        keys = np.unique(keys.astype(np.float32)).astype(np.float64)
+        dyn = DynamicRMI.build(jnp.asarray(keys), n_leaves=1024,
+                               kind="linear")
+        extra = np.unique((rng.lognormal(0, 0.7, n // 8) * 1e6)
+                          .astype(np.float32)).astype(np.float64)
+        extra = np.setdiff1d(extra, keys)
+        dyn.insert_batch(jnp.asarray(extra))
+        dyn.delete_batch(jnp.asarray(rng.choice(keys, n // 16,
+                                                replace=False)))
+        live = dyn.live_keys()
+        qp = jnp.asarray(rng.choice(live, Q))
+        q_lo = np.asarray(rng.choice(live, Q))
+        q_hi = (q_lo * (1.0 + rng.uniform(0.0, 0.01, Q))).astype(
+            np.float32).astype(np.float64)
+        q_lo, q_hi = jnp.asarray(q_lo), jnp.asarray(q_hi)
+        # verify once per size against the flat live-array oracle
+        lf = np.asarray(live)
+        el = np.searchsorted(lf, np.asarray(q_lo), side="left")
+        eh = np.maximum(np.searchsorted(lf, np.asarray(q_hi), side="right"),
+                        el)
+        for use_kernel, path in ((False, "jnp-window-clamped"),
+                                 (True, "pallas-interpret")):
+            rl, rh = dyn.find_range(q_lo, q_hi, use_kernel=use_kernel)
+            assert (np.array_equal(np.asarray(rl), el)
+                    and np.array_equal(np.asarray(rh), eh)), path
+            t_point = _time(
+                lambda qq, uk=use_kernel: dyn.find(qq, use_kernel=uk)[1], qp)
+            t_range = _time_range(
+                lambda a, b, uk=use_kernel: dyn.find_range(
+                    a, b, use_kernel=uk), q_lo, q_hi)
+            for mix, ns in (("point", t_point), ("range", t_range),
+                            ("mixed", 0.95 * t_range + 0.05 * t_point)):
+                rows.append({"variant": "DynamicRMI", "mix": mix,
+                             "n_keys": int(live.shape[0]), "path": path,
+                             "ns_per_query": round(ns, 1)})
+                print(f"DynamicRMI n={int(live.shape[0]):>8d} "
+                      f"{mix:6s} {path:20s} {ns:10.0f} ns/op")
+    return rows
+
+
 def bench_distributed(n: int, n_shards: int) -> list[dict]:
     """Sharded-service rows on an ``n_shards``-device CPU mesh (kernel vs
     jnp per-shard path).  Must run in a process whose XLA host-device count
@@ -186,6 +258,11 @@ def main() -> None:
              "(correctness-grade); jnp rows are the XLA serving path. "
              "Distributed rows run the sharded service on a "
              "forced-host-device CPU mesh.")
+    harness.append_bench(
+        args.out, "lookup-range", bench_range(args.sizes),
+        note="YCSB-style point/range/mixed mixes over the churned dynamic "
+             "two-tier index; ns_per_query is per operation (a range op "
+             "routes both endpoints in one fused pass but counts once).")
 
 
 if __name__ == "__main__":

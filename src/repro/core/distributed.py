@@ -896,6 +896,64 @@ class ShardedDynamicIndex:
                          st["dpsum"], tables, q)
         return found[:Q], rank[:Q]
 
+    def find_range(self, q_lo, q_hi, *, use_kernel: bool | None = None,
+                   interpret: bool | None = None) -> tuple[Array, Array]:
+        """(rank_lo, rank_hi) global live ranks of the inclusive key ranges
+        ``[q_lo[i], q_hi[i]]``, one ``shard_map`` dispatch: both endpoint
+        arrays are concatenated and streamed through the same capacity-
+        bucketed ``_routed_exchange`` as :meth:`find`, each endpoint's
+        owning shard answers with BOTH its leftmost and rightmost local
+        live rank (the fused range kernel or the jnp two-tier range tail),
+        and the origin composes global ranks from the counter-table
+        offsets — a range spanning shard seams needs no extra round trips
+        because rank_lo rides the lo endpoint's shard and rank_hi the hi
+        endpoint's.  A ``hi`` inside a duplicate run that *starts* a shard
+        routes to that run's owning shard (runs never straddle seams —
+        ``shard_bounds`` snaps to run starts), so its rightmost rank
+        already counts every earlier shard through ``offs``.  rank_hi is
+        clamped to rank_lo: degenerate ranges (lo > hi, tombstoned
+        singletons, fully out-of-range) come back empty, never
+        negative-width.  ``live_keys()[rank_lo:rank_hi]`` is the range's
+        content.  Path-selection contract mirrors :meth:`find`."""
+        ql = jnp.asarray(q_lo, jnp.float64)
+        qh = jnp.asarray(q_hi, jnp.float64)
+        if ql.shape != qh.shape:
+            raise ValueError("find_range endpoint arrays must pair up")
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
+        elif use_kernel and not self.f32_exact:
+            raise ValueError(
+                "use_kernel=True on a sharded key space that is not "
+                "f32-exact: the kernel's f32 search cannot distinguish "
+                "f32-colliding keys")
+        st = self._stacked()
+        Q = ql.shape[0]
+        qp = -(-max(Q, 1) // self.n_shards) * self.n_shards
+        if qp != Q:
+            ql = jnp.pad(ql, (0, qp - Q))    # 0.0 pads; sliced off below
+            qh = jnp.pad(qh, (0, qp - Q))
+        fn = _sharded_dynamic_range_fn(
+            self.mesh, self.axis, n_leaves=self.n_leaves,
+            leaf_kind=st["leaf_kind"], iters=st["iters"],
+            use_kernel=bool(use_kernel),
+            interpret=interpret if interpret is None else bool(interpret))
+        tables = self._packed_stack(st) if use_kernel else \
+            (st["root"], st["leaves"], st["err_lo"], st["err_hi"])
+        rl, rr = fn(st["splits"], st["offs"], st["route_n"], st["base"],
+                    st["bdead"], st["bpsum"], st["dk"], st["ddead"],
+                    st["dpsum"], tables, jnp.concatenate([ql, qh]))
+        rank_lo = rl[:qp][:Q]
+        return rank_lo, jnp.maximum(rr[qp:][:Q], rank_lo)
+
+    def gather_range(self, rank_lo, rank_hi) -> list[np.ndarray]:
+        """Materialize :meth:`find_range` spans: per-range sorted live keys
+        (host numpy — the global live array is assembled once and
+        sliced)."""
+        live = self.live_keys()
+        lo = np.asarray(rank_lo).ravel()
+        hi = np.asarray(rank_hi).ravel()
+        return [live[int(a):int(b)] for a, b in zip(lo, hi)]
+
 
 @functools.lru_cache(maxsize=64)
 def _sharded_dynamic_find_fn(mesh: Mesh, axis: str, *, n_leaves: int,
@@ -965,11 +1023,78 @@ def _sharded_dynamic_find_fn(mesh: Mesh, axis: str, *, n_leaves: int,
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_dynamic_range_fn(mesh: Mesh, axis: str, *, n_leaves: int,
+                              leaf_kind: str, iters: int, use_kernel: bool,
+                              interpret: bool | None):
+    """Jitted shard_map program for ``ShardedDynamicIndex.find_range``.
+
+    The local query row is the concatenation [lo endpoints | hi endpoints];
+    every routed endpoint is answered with BOTH its leftmost and rightmost
+    local live rank (payload columns), and the caller keeps the left
+    column for lo slots and the right column for hi slots.  Answering both
+    sides unconditionally keeps the exchange single-round and the kernel
+    single-pass (``dynamic_range_pallas`` with q_lo == q_hi routes each
+    endpoint once per key tile)."""
+    n_shards = mesh.shape[axis]
+
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+
+        def local_range(tables, route_n, base, bdead, bpsum, dk, ddead,
+                        dpsum, q):
+            kroot, kmat, kvec = tables
+            return kernel_ops.range_lookup(
+                q, q, kroot, kmat, kvec, base, bdead, bpsum, dk, ddead,
+                dpsum, n_leaves=n_leaves, route_n=n_leaves,
+                root_kind="linear", leaf_kind=leaf_kind, iters=iters,
+                interpret=interpret)
+    else:
+        from . import updates as updates_mod
+
+        def local_range(tables, route_n, base, bdead, bpsum, dk, ddead,
+                        dpsum, q):
+            root, leaves, elo, ehi = tables
+            b = jnp.clip((rmi_mod.models.linear_predict(root, q)
+                          * n_leaves / route_n).astype(jnp.int32),
+                         0, n_leaves - 1)
+            lo, hi = updates_mod.leaf_window(leaves, elo, ehi, b, q,
+                                             base.shape[0], leaf_kind)
+            return updates_mod.two_tier_range_answer(
+                base, bpsum, dk, dpsum, q, q, lo, hi, iters)
+
+    def shard_fn(splits, offs, route_n, base, bdead, bpsum, dk, ddead,
+                 dpsum, tables, q_local):
+        def answer(rq, live):
+            # Same +inf exchange-pad masking as the point path: pads take a
+            # member key so they never blow the sparse seam budget, and
+            # their answers are zeroed here.
+            member = jnp.where(jnp.isfinite(base[0][0]), base[0][0], 0.0)
+            qm = jnp.where(live, rq, member)
+            rlo, rhi = local_range(jax.tree.map(lambda a: a[0], tables),
+                                   route_n[0], base[0], bdead[0], bpsum[0],
+                                   dk[0], ddead[0], dpsum[0], qm)
+            rlo = jnp.where(live, rlo.astype(jnp.int32) + offs[0], 0)
+            rhi = jnp.where(live, rhi.astype(jnp.int32) + offs[0], 0)
+            return jnp.stack([rlo, rhi], axis=-1)
+
+        rlo, rhi = _routed_exchange(axis, n_shards, splits, q_local,
+                                    q_local.shape[0], answer, (0, 0))
+        return rlo, rhi
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)), check_vma=True)
+    return jax.jit(fn)
+
+
 # Trace-time counters for the serving retrace guard: the shard_map bodies
 # below bump their key when (re)traced, so tests can pin "zero hot-path
 # retraces across varying live batch sizes after warmup" exactly the way
 # tests/test_updates.py pins the no-host-loop contract.
-TRACE_COUNTS = {"tenant_find": 0}
+TRACE_COUNTS = {"tenant_find": 0, "tenant_range": 0}
 
 
 @functools.lru_cache(maxsize=32)
@@ -1051,6 +1176,77 @@ def _tenant_stacked_find_fn(mesh: Mesh, axis: str, *, n_tenants: int,
             founds.append(found.astype(bool))
             ranks.append(rank)
         return jnp.stack(founds), jnp.stack(ranks)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(None, axis), P(None, axis), P(None, axis),
+                  P(None, axis), P(None, axis), P(None, axis),
+                  P(None, axis), P(None, axis), P(None, axis),
+                  P(None, axis)),
+        out_specs=(P(None, axis), P(None, axis)), check_vma=True)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=32)
+def _tenant_stacked_range_fn(mesh: Mesh, axis: str, *, n_tenants: int,
+                             n_leaves: int, leaf_kind: str, iters: int,
+                             use_kernel: bool, interpret: bool | None):
+    """Range-query sibling of :func:`_tenant_stacked_find_fn` for the serve
+    front-end's ``"range"`` request kind: each tenant's query row is the
+    concatenation [lo endpoints | hi endpoints] (the
+    :func:`_sharded_dynamic_range_fn` layout), answered per shard with
+    both boundary ranks and returned as (rank_lo_row, rank_hi_row)
+    matrices.  Same padding/rescale tricks, same zero-retrace contract
+    (``TRACE_COUNTS["tenant_range"]``)."""
+    n_shards = mesh.shape[axis]
+
+    if use_kernel:
+        from ..kernels import ops as kernel_ops
+
+        def local_range(tables, route_n, base, bdead, bpsum, dk, ddead,
+                        dpsum, q):
+            kroot, kmat, kvec = tables
+            return kernel_ops.range_lookup(
+                q, q, kroot, kmat, kvec, base, bdead, bpsum, dk, ddead,
+                dpsum, n_leaves=n_leaves, route_n=n_leaves,
+                root_kind="linear", leaf_kind=leaf_kind, iters=iters,
+                interpret=interpret)
+    else:
+        from . import updates as updates_mod
+
+        def local_range(tables, route_n, base, bdead, bpsum, dk, ddead,
+                        dpsum, q):
+            root, leaves, elo, ehi = tables
+            b = jnp.clip((rmi_mod.models.linear_predict(root, q)
+                          * n_leaves / route_n).astype(jnp.int32),
+                         0, n_leaves - 1)
+            lo, hi = updates_mod.leaf_window(leaves, elo, ehi, b, q,
+                                             base.shape[0], leaf_kind)
+            return updates_mod.two_tier_range_answer(
+                base, bpsum, dk, dpsum, q, q, lo, hi, iters)
+
+    def shard_fn(splits, offs, route_n, base, bdead, bpsum, dk, ddead,
+                 dpsum, tables, q):
+        TRACE_COUNTS["tenant_range"] += 1
+        rlos, rhis = [], []
+        for t in range(n_tenants):
+            def answer(rq, live, t=t):
+                member = jnp.where(jnp.isfinite(base[t, 0, 0]),
+                                   base[t, 0, 0], 0.0)
+                qm = jnp.where(live, rq, member)
+                rlo, rhi = local_range(
+                    jax.tree.map(lambda a: a[t][0], tables),
+                    route_n[t, 0], base[t, 0], bdead[t, 0], bpsum[t, 0],
+                    dk[t, 0], ddead[t, 0], dpsum[t, 0], qm)
+                rlo = jnp.where(live, rlo.astype(jnp.int32) + offs[t, 0], 0)
+                rhi = jnp.where(live, rhi.astype(jnp.int32) + offs[t, 0], 0)
+                return jnp.stack([rlo, rhi], axis=-1)
+
+            rlo, rhi = _routed_exchange(axis, n_shards, splits[t], q[t],
+                                        q[t].shape[0], answer, (0, 0))
+            rlos.append(rlo)
+            rhis.append(rhi)
+        return jnp.stack(rlos), jnp.stack(rhis)
 
     fn = jax.shard_map(
         shard_fn, mesh=mesh,

@@ -325,6 +325,44 @@ def _find_jit(root, leaves, err_lo, err_hi, base_keys, base_dead, base_psum,
     return two_tier_answer(base_keys, base_psum, dk, dpsum, q, lo, hi, iters)
 
 
+def two_tier_range_answer(base_keys, base_psum, dk, dpsum, q_lo, q_hi,
+                          lo, hi, iters: int):
+    """:func:`two_tier_answer` generalized to an endpoint pair — the
+    two-tier range tail shared by :func:`_range_find_jit` and the sharded
+    per-shard jnp path (``core.distributed``).  ``rank_lo`` counts live
+    keys < q_lo (leftmost boundary: the learned route + verified window
+    search, exactly the point path); ``rank_hi`` counts live keys <= q_hi
+    (rightmost boundary under duplicates: the side='right' searchsorted
+    the point path already pays for its duplicate-run hit test).  rank_hi
+    is clamped to rank_lo, so degenerate ranges (q_lo > q_hi, a tombstoned
+    singleton, fully out-of-range windows) return an empty [lo, lo) span
+    rather than a negative width.  ``lo``/``hi`` are q_lo's error-bound
+    window.  Returns (rank_lo, rank_hi)."""
+    blo = rmi_mod.verified_search(base_keys, q_lo, lo, hi, iters=iters)
+    bhi = jnp.searchsorted(base_keys, q_hi, side="right").astype(jnp.int32)
+    dlo = jnp.searchsorted(dk, q_lo, side="left").astype(jnp.int32)
+    dhi = jnp.searchsorted(dk, q_hi, side="right").astype(jnp.int32)
+    rank_lo = (blo - base_psum[blo]) + (dlo - dpsum[dlo])
+    rank_hi = (bhi - base_psum[bhi]) + (dhi - dpsum[dhi])
+    return rank_lo, jnp.maximum(rank_hi, rank_lo)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "root_kind", "leaf_kind", "n_leaves", "route_n", "iters"))
+def _range_find_jit(root, leaves, err_lo, err_hi, base_keys, base_dead,
+                    base_psum, dk, ddead, dpsum, q_lo, q_hi, *,
+                    root_kind: str, leaf_kind: str, n_leaves: int,
+                    route_n: int, iters: int):
+    """f64 oracle of the fused range kernel (``ops.range_lookup``): route
+    q_lo, window-search its left boundary, exact right boundary of q_hi,
+    live-rank both.  Returns (rank_lo, rank_hi)."""
+    n = base_keys.shape[0]
+    b = rmi_mod.root_buckets(root_kind, root, q_lo, n_leaves, route_n)
+    lo, hi = leaf_window(leaves, err_lo, err_hi, b, q_lo, n, leaf_kind)
+    return two_tier_range_answer(base_keys, base_psum, dk, dpsum, q_lo, q_hi,
+                                 lo, hi, iters)
+
+
 @functools.partial(jax.jit, static_argnames=("root_kind", "n_leaves",
                                              "route_n"))
 def _routed_buckets(root_kind: str, root, keys: Array, n_leaves: int,
@@ -894,6 +932,48 @@ class DynamicRMI:
             leaf_kind=idx.leaf_kind, n_leaves=idx.n_leaves,
             route_n=self.route_n, iters=idx.search_iters)
         return found, rank
+
+    def find_range(self, q_lo: Array, q_hi: Array, *,
+                   use_kernel: bool | None = None) -> tuple[Array, Array]:
+        """(rank_lo, rank_hi) live ranks of the inclusive key ranges
+        ``[q_lo[i], q_hi[i]]``: rank_lo is the leftmost live rank of q_lo,
+        rank_hi the rightmost live rank of q_hi (duplicates included,
+        tombstones excluded), so ``live_keys()[rank_lo:rank_hi]`` is
+        exactly the range's content (:meth:`gather_range`).  rank_hi is
+        clamped to rank_lo — degenerate ranges come back empty, never
+        negative-width.  Path selection matches :meth:`find`."""
+        idx = self.index
+        ql = jnp.asarray(q_lo, jnp.float64)
+        qh = jnp.asarray(q_hi, jnp.float64)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
+        elif use_kernel and not self.f32_exact:
+            raise ValueError(
+                "use_kernel=True on a key space that is not f32-exact: the "
+                "kernel's f32 search cannot distinguish f32-colliding keys")
+        if use_kernel:
+            from ..kernels import ops as kernel_ops
+            root, mat, vec = idx.packed_tables()
+            return kernel_ops.range_lookup(
+                ql, qh, root, mat, vec, idx.keys, self.base_dead,
+                self.base_psum, self.delta_keys, self.delta_dead,
+                self.delta_psum, n_leaves=idx.n_leaves, route_n=self.route_n,
+                root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
+                iters=idx.search_iters)
+        return _range_find_jit(
+            idx.root, idx.leaves, idx.err_lo, idx.err_hi, idx.keys,
+            self.base_dead, self.base_psum, self.delta_keys, self.delta_dead,
+            self.delta_psum, ql, qh, root_kind=idx.root_kind,
+            leaf_kind=idx.leaf_kind, n_leaves=idx.n_leaves,
+            route_n=self.route_n, iters=idx.search_iters)
+
+    def gather_range(self, rank_lo, rank_hi) -> list[np.ndarray]:
+        """Materialize :meth:`find_range` spans: per-range sorted live keys
+        (host numpy — ``live_keys()`` is computed once and sliced)."""
+        live = self.live_keys()
+        lo = np.asarray(rank_lo).ravel()
+        hi = np.asarray(rank_hi).ravel()
+        return [live[int(a):int(b)] for a, b in zip(lo, hi)]
 
     def live_keys(self) -> np.ndarray:
         """Sorted live keys across both tiers (host numpy; ``find``'s rank

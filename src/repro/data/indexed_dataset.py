@@ -108,6 +108,50 @@ class IndexedDataset:
             offsets[mask] = np.asarray(rank)
         return shard_of, offsets
 
+    def locate_range(self, lo_keys: np.ndarray, hi_keys: np.ndarray
+                     ) -> list[tuple[int, np.ndarray]]:
+        """Batch slicing: resolve inclusive key ranges ``[lo, hi]`` to
+        their live sample keys — the pipeline's "fetch every sample in a
+        key window" primitive (contiguous corpus slices, time windows).
+        Each range runs through the owning shards' ``find_range`` (batched
+        per shard), and a range spanning shard boundaries stitches the
+        per-shard slices in shard order.  Returns, per input range, a list
+        of (shard_id, keys) pieces; tombstoned samples are excluded and
+        degenerate ranges (lo > hi, fully out-of-range) come back empty.
+        """
+        lo = np.asarray(lo_keys, np.float64)
+        hi = np.asarray(hi_keys, np.float64)
+        if lo.shape != hi.shape:
+            raise ValueError("locate_range endpoint arrays must pair up")
+        if not (np.all(np.isfinite(lo)) and np.all(np.isfinite(hi))):
+            raise ValueError("range endpoints must be finite")
+        bounds = np.asarray(self.boundaries)
+        ns = len(self.shards)
+        # A range touches every shard from lo's owner through hi's owner.
+        s_lo = np.clip(np.searchsorted(bounds, lo, side="left"), 0, ns - 1)
+        s_hi = np.clip(np.searchsorted(bounds, hi, side="left"), 0, ns - 1)
+        s_hi = np.maximum(s_hi, s_lo)
+        # One batched find_range per touched shard; a spanning range clamps
+        # its endpoints to the shard's live span (interior shards are taken
+        # whole — clamping to member keys keeps every endpoint finite, so
+        # the +inf capacity padding never enters the rank algebra).
+        pieces: list[dict] = [dict() for _ in range(lo.shape[0])]
+        for sid in range(ns):
+            rid = np.flatnonzero((s_lo <= sid) & (sid <= s_hi))
+            if rid.size == 0:
+                continue
+            dyn = self.shards[sid].dyn
+            live = dyn.live_keys()
+            if live.size == 0:
+                continue
+            ql = np.where(s_lo[rid] == sid, lo[rid], live[0])
+            qh = np.where(s_hi[rid] == sid, hi[rid], live[-1])
+            rl, rh = dyn.find_range(jnp.asarray(ql), jnp.asarray(qh))
+            for r, a, b in zip(rid, np.asarray(rl), np.asarray(rh)):
+                pieces[r][sid] = live[int(a):int(b)]
+        return [[(sid, piece[sid]) for sid in sorted(piece)
+                 if piece[sid].size] for piece in pieces]
+
     @property
     def mean_reuse(self) -> float:
         return float(np.mean([s.reuse_fraction for s in self.shards])) \

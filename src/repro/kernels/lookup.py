@@ -189,11 +189,19 @@ def _route_window(root, mat, vec, q, *, n_keys: int, n_leaves: int, lp: int,
 
 
 def _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j, *,
-                       n_keys: int, tile: int, tile_iters: int):
+                       n_keys: int, tile: int, tile_iters: int,
+                       right: bool = False):
     """Stage 4, shared by every lookup kernel: window-clamped branchless
     search of query tile ``q`` restricted to key tile ``j``, min-merged into
     the revisited output block (left boundaries compose across tiles because
-    positions increase with j)."""
+    positions increase with j).
+
+    ``right=True`` searches the *right* boundary (first position with
+    key > q — the rightmost-rank side of a range endpoint).  The min-merge
+    composes identically: the first tile containing a key > q yields the
+    winning candidate, tiles whose clipped window is entirely <= q converge
+    to l == thi (invalid candidate), and +inf capacity padding compares > q
+    for every finite query, so pads never shift a right boundary either."""
     lo = lo_ref[...].reshape(TQ)
     hi = hi_ref[...].reshape(TQ)
     base = j * tile
@@ -206,7 +214,7 @@ def _tile_search_merge(keys_ref, q, lo_ref, hi_ref, out_ref, j, *,
         active = h2 - l > 0
         mid = (l + h2) // 2
         kv = jnp.take(keys, jnp.clip(mid, 0, tile - 1))
-        below = kv < q
+        below = kv <= q if right else kv < q
         nl = jnp.where(below, mid + 1, l)
         nh = jnp.where(below, h2, mid)
         return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
@@ -322,6 +330,29 @@ def lookup_pallas(queries, root, mat, vec, keys, *, n_leaves: int,
 # arithmetic are O(Q) gathers in the jitted ops wrapper
 # (``ops.dynamic_index_lookup``) — the kernel owns everything logarithmic.
 # ---------------------------------------------------------------------------
+def _full_probe(dk, q, *, nd: int, d_iters: int, right: bool = False):
+    """Full-depth branchless search of the VMEM-resident delta tier (pure
+    jnp on values — shared by the dynamic point and range kernel bodies).
+    The tier is sorted ascending and +inf padded, so both boundaries of a
+    finite query always land within the live prefix (``kv <= q`` is False
+    at every +inf pad)."""
+    dl = jnp.zeros((TQ,), jnp.int32)
+    dh = jnp.full((TQ,), nd, jnp.int32)
+
+    def dbody(_, lh):
+        l, h2 = lh
+        active = h2 - l > 0
+        mid = (l + h2) // 2
+        kv = jnp.take(dk, jnp.clip(mid, 0, nd - 1))
+        below = kv <= q if right else kv < q
+        nl = jnp.where(below, mid + 1, l)
+        nh = jnp.where(below, h2, mid)
+        return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+    dl, _ = jax.lax.fori_loop(0, d_iters, dbody, (dl, dh))
+    return dl
+
+
 def _dynamic_lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, dkeys_ref,
                            keys_ref, out_ref, dout_ref, lo_ref, hi_ref, *,
                            n_keys: int, n_leaves: int, lp: int, tile: int,
@@ -342,23 +373,8 @@ def _dynamic_lookup_kernel(root_ref, mat_ref, vec_ref, q_ref, dkeys_ref,
         out_ref[...] = hi.reshape(out_ref.shape)
 
         # ---- delta probe: full-depth search of the VMEM-resident tier ---
-        # (sorted ascending, +inf padded, so the left boundary of a finite
-        # query is always within the live prefix).
-        dk = dkeys_ref[...].reshape(nd)
-        dl = jnp.zeros((TQ,), jnp.int32)
-        dh = jnp.full((TQ,), nd, jnp.int32)
-
-        def dbody(_, lh):
-            l, h2 = lh
-            active = h2 - l > 0
-            mid = (l + h2) // 2
-            kv = jnp.take(dk, jnp.clip(mid, 0, nd - 1))
-            below = kv < q
-            nl = jnp.where(below, mid + 1, l)
-            nh = jnp.where(below, h2, mid)
-            return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
-
-        dl, _ = jax.lax.fori_loop(0, d_iters, dbody, (dl, dh))
+        dl = _full_probe(dkeys_ref[...].reshape(nd), q, nd=nd,
+                         d_iters=d_iters)
         dout_ref[...] = dl.reshape(dout_ref.shape)
 
     # ---- base tier: window-clamped search within key tile j -------------
@@ -440,6 +456,130 @@ def dynamic_lookup_pallas(queries, root, mat, vec, keys, delta_keys, *,
         interpret=interpret,
     )(root, mat, vec, pad1(queries), dkp.reshape(1, 8, nd // 8), kp)
     return out.reshape(-1)[:Q], dout.reshape(-1)[:Q]
+
+
+# ---------------------------------------------------------------------------
+# Fused range kernel: both endpoints of [lo, hi] routed in ONE tile pass.
+# The lo endpoint uses the point path's left-bound search; the hi endpoint
+# runs the mirrored right-bound search (first position with key > q, i.e.
+# the rightmost rank under duplicate keys — see _tile_search_merge's
+# ``right`` flag for why the min-merge composes identically).  Each key tile
+# is streamed through VMEM once and searched twice, so a range lookup costs
+# one kernel invocation and the same HBM traffic as a single point lookup.
+# Both candidates are window-clamped and seam-verified by the ops wrapper
+# (``ops.range_lookup``) exactly like the point path.
+# ---------------------------------------------------------------------------
+def _dynamic_range_kernel(root_ref, mat_ref, vec_ref, qlo_ref, qhi_ref,
+                          dkeys_ref, keys_ref,
+                          blo_ref, bhi_ref, dlo_ref, dhi_ref,
+                          llo_ref, lhi_ref, rlo_ref, rhi_ref, *,
+                          n_keys: int, n_leaves: int, lp: int, tile: int,
+                          tile_iters: int, nd: int, d_iters: int,
+                          route_n: int, root_kind: str, leaf_kind: str):
+    j = pl.program_id(1)
+    ql = qlo_ref[...].reshape(TQ)
+    qh = qhi_ref[...].reshape(TQ)
+
+    @pl.when(j == 0)
+    def _():
+        root = root_ref[...].reshape(ROOT_ROWS, 128)
+        mat = mat_ref[...].reshape(3 * H * lp)
+        vec = vec_ref[...].reshape(8 * lp)
+        lo, hi = _route_window(
+            root, mat, vec, ql, n_keys=n_keys, n_leaves=n_leaves, lp=lp,
+            route_n=route_n, root_kind=root_kind, leaf_kind=leaf_kind)
+        llo_ref[...] = lo.reshape(llo_ref.shape)
+        lhi_ref[...] = hi.reshape(lhi_ref.shape)
+        blo_ref[...] = hi.reshape(blo_ref.shape)
+        lo, hi = _route_window(
+            root, mat, vec, qh, n_keys=n_keys, n_leaves=n_leaves, lp=lp,
+            route_n=route_n, root_kind=root_kind, leaf_kind=leaf_kind)
+        rlo_ref[...] = lo.reshape(rlo_ref.shape)
+        rhi_ref[...] = hi.reshape(rhi_ref.shape)
+        bhi_ref[...] = hi.reshape(bhi_ref.shape)
+
+        # ---- delta probes: left bound of lo, right bound of hi ----------
+        dk = dkeys_ref[...].reshape(nd)
+        dlo_ref[...] = _full_probe(dk, ql, nd=nd, d_iters=d_iters) \
+            .reshape(dlo_ref.shape)
+        dhi_ref[...] = _full_probe(dk, qh, nd=nd, d_iters=d_iters,
+                                   right=True).reshape(dhi_ref.shape)
+
+    # ---- base tier: both endpoints searched within key tile j -----------
+    _tile_search_merge(keys_ref, ql, llo_ref, lhi_ref, blo_ref, j,
+                       n_keys=n_keys, tile=tile, tile_iters=tile_iters)
+    _tile_search_merge(keys_ref, qh, rlo_ref, rhi_ref, bhi_ref, j,
+                       n_keys=n_keys, tile=tile, tile_iters=tile_iters,
+                       right=True)
+
+
+def dynamic_range_pallas(q_lo, q_hi, root, mat, vec, keys, delta_keys, *,
+                         n_leaves: int, route_n: int | None = None,
+                         root_kind: str = "linear",
+                         leaf_kind: str = "linear",
+                         iters: int | None = None, tile: int | None = None,
+                         interpret: bool = True):
+    """(base_lo, base_hi, delta_lo, delta_hi) of range endpoint pairs.
+
+    base_lo/delta_lo are the left boundaries of ``q_lo`` (leftmost rank
+    under duplicates — identical semantics to the point path); base_hi/
+    delta_hi are the *right* boundaries of ``q_hi`` (first position whose
+    key compares > q_hi, i.e. rightmost rank).  Both endpoints ride the
+    same grid pass, so each key tile is fetched from HBM exactly once.
+    """
+    Q = q_lo.shape[0]
+    assert q_hi.shape[0] == Q, "endpoint arrays must pair up"
+    S = keys.shape[0]
+    lp = mat.shape[1]
+    q_pad = -(-Q // TQ) * TQ
+    if route_n is None:
+        route_n = S
+    if tile is None:
+        tile = min(TILE_MAX, _pow2ceil(max(S, 128)))
+    assert tile % 128 == 0, "key tile must be a multiple of 128 lanes"
+    s_pad = -(-S // tile) * tile
+    nk = s_pad // tile
+    if iters is None:
+        iters = full_iters(S)
+    tile_iters = min(iters, full_iters(tile))
+
+    dkp = pad_delta(delta_keys)
+    nd = dkp.shape[0]
+    d_iters = full_iters(nd)
+
+    pad1 = lambda a: jnp.pad(a.astype(jnp.float32), (0, q_pad - Q)) \
+        .reshape(-1, 8, TQ // 8)
+    kp = jnp.pad(keys.astype(jnp.float32), (0, s_pad - S),
+                 constant_values=jnp.inf).reshape(nk, 8, tile // 8)
+
+    kern = functools.partial(
+        _dynamic_range_kernel, n_keys=S, n_leaves=n_leaves, lp=lp, tile=tile,
+        tile_iters=tile_iters, nd=nd, d_iters=d_iters, route_n=route_n,
+        root_kind=root_kind, leaf_kind=leaf_kind)
+    qspec = pl.BlockSpec((1, 8, TQ // 8), lambda i, j: (i, 0, 0))
+    blo, bhi, dlo, dhi = pl.pallas_call(
+        kern,
+        grid=(q_pad // TQ, nk),
+        in_specs=[
+            pl.BlockSpec((ROOT_ROWS, 128), lambda i, j: (0, 0)),      # root
+            pl.BlockSpec((3 * H, lp), lambda i, j: (0, 0)),           # mat
+            pl.BlockSpec((8, lp), lambda i, j: (0, 0)),               # vec
+            qspec,                                                    # q_lo
+            qspec,                                                    # q_hi
+            pl.BlockSpec((1, 8, nd // 8), lambda i, j: (0, 0, 0)),    # delta
+            pl.BlockSpec((1, 8, tile // 8), lambda i, j: (j, 0, 0)),  # keys
+        ],
+        out_specs=[qspec, qspec, qspec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad // TQ, 8, TQ // 8), jnp.int32)
+            for _ in range(4)
+        ],
+        scratch_shapes=[pltpu.VMEM((8, TQ // 8), jnp.int32)   # lo window x2,
+                        for _ in range(4)],                   # hi window x2
+        interpret=interpret,
+    )(root, mat, vec, pad1(q_lo), pad1(q_hi), dkp.reshape(1, 8, nd // 8), kp)
+    flat = lambda a: a.reshape(-1)[:Q]
+    return flat(blo), flat(bhi), flat(dlo), flat(dhi)
 
 
 # ---------------------------------------------------------------------------

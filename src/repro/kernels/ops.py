@@ -107,27 +107,33 @@ def index_lookup(queries, root, mat, vec, keys, *, n_leaves: int,
                              interpret=interpret, seam_budget=seam_budget)
 
 
-def _seam_fix(r, kf, qf, seam_budget: int):
+def _seam_fix(r, kf, qf, seam_budget: int, right: bool = False):
     """Seam verification in f32 space (kernel semantics). Misses are rare —
     boundary queries outside their leaf's window, or queries routed to a
     sentinel (empty-leaf) window deeper than the clamped search depth — so
     the fallback re-searches only the invalid positions (compacted to a
     static ``seam_budget``); the dense full-Q re-search runs only if the
-    miss count exceeds the budget."""
+    miss count exceeds the budget.  ``right=True`` checks the mirrored
+    right-boundary invariant (kf[r-1] <= q < kf[r]) for the range kernel's
+    hi endpoints, with a side='right' searchsorted fallback."""
     n = kf.shape[0]
     rc = jnp.clip(r, 0, n - 1)
-    valid = ((r == 0) | (kf[jnp.clip(r - 1, 0, n - 1)] < qf)) & \
-            ((r == n) | (kf[rc] >= qf))
+    side = "right" if right else "left"
+    prev = kf[jnp.clip(r - 1, 0, n - 1)]
+    if right:
+        valid = ((r == 0) | (prev <= qf)) & ((r == n) | (kf[rc] > qf))
+    else:
+        valid = ((r == 0) | (prev < qf)) & ((r == n) | (kf[rc] >= qf))
     n_bad = jnp.sum(~valid)
     budget = min(seam_budget, qf.shape[0])
 
     def _sparse(_):
         idx = jnp.nonzero(~valid, size=budget, fill_value=0)[0]
-        sub = jnp.searchsorted(kf, qf[idx], side="left").astype(r.dtype)
+        sub = jnp.searchsorted(kf, qf[idx], side=side).astype(r.dtype)
         return r.at[idx].set(jnp.where(valid[idx], r[idx], sub))
 
     def _dense(_):
-        full = jnp.searchsorted(kf, qf, side="left").astype(r.dtype)
+        full = jnp.searchsorted(kf, qf, side=side).astype(r.dtype)
         return jnp.where(valid, r, full)
 
     def _fix(_):
@@ -270,3 +276,62 @@ def _dynamic_lookup_jit(queries, root, mat, vec, keys, base_dead, base_psum,
     # Live rank across both tiers: positions minus tombstones left of them.
     rank = (pos - base_psum[pos]) + (dpos - dpsum[dpos])
     return base_hit | delta_hit, rank, pos, dpos
+
+
+def range_lookup(q_lo, q_hi, root, mat, vec, keys, base_dead, base_psum,
+                 delta_keys, delta_dead, delta_psum, *, n_leaves: int,
+                 route_n: int, root_kind: str = "linear",
+                 leaf_kind: str = "linear", iters: int | None = None,
+                 tile: int | None = None, interpret: bool | None = None,
+                 seam_budget: int = 1024):
+    """Fused two-tier range answer: (rank_lo, rank_hi) live ranks of the
+    inclusive key range ``[q_lo, q_hi]`` — rank_lo counts live keys < q_lo
+    (leftmost rank under duplicates), rank_hi counts live keys <= q_hi
+    (rightmost rank), so the range holds exactly rank_hi - rank_lo live
+    entries.  One Pallas pass routes BOTH endpoints (lookup.
+    dynamic_range_pallas), each boundary is seam-verified with its own
+    side, and rank_hi is clamped to rank_lo so degenerate inputs (lo > hi,
+    a tombstoned singleton, a fully out-of-range window) return an empty
+    range instead of a negative width.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if iters is None:
+        if isinstance(vec, jax.core.Tracer):
+            iters = _lookup.full_iters(keys.shape[0])
+        else:
+            import numpy as np
+            L = min(n_leaves, vec.shape[1])
+            vec_np = np.asarray(vec)
+            iters = _lookup.search_iters(vec_np[1, :L], vec_np[2, :L],
+                                         keys.shape[0])
+    return _range_lookup_jit(q_lo, q_hi, root, mat, vec, keys, base_psum,
+                             delta_keys, delta_psum, n_leaves=n_leaves,
+                             route_n=route_n, root_kind=root_kind,
+                             leaf_kind=leaf_kind, iters=iters, tile=tile,
+                             interpret=interpret, seam_budget=seam_budget)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_leaves", "route_n", "root_kind", "leaf_kind", "iters", "tile",
+    "interpret", "seam_budget"))
+def _range_lookup_jit(q_lo, q_hi, root, mat, vec, keys, base_psum,
+                      delta_keys, delta_psum, *, n_leaves, route_n,
+                      root_kind, leaf_kind, iters, tile, interpret,
+                      seam_budget):
+    blo, bhi, dlo, dhi = _lookup.dynamic_range_pallas(
+        q_lo, q_hi, root, mat, vec, keys, delta_keys, n_leaves=n_leaves,
+        route_n=route_n, root_kind=root_kind, leaf_kind=leaf_kind,
+        iters=iters, tile=tile, interpret=interpret)
+    kf = keys.astype(jnp.float32)
+    qlf = q_lo.astype(jnp.float32)
+    qhf = q_hi.astype(jnp.float32)
+    # Seam-verify each base boundary with its own side; the delta probes ran
+    # at full depth over the VMEM-sized tier so they are already exact.
+    blo = _seam_fix(blo, kf, qlf, seam_budget)
+    bhi = _seam_fix(bhi, kf, qhf, seam_budget, right=True)
+    nd = _lookup.pad_delta(delta_keys).shape[0]
+    dpsum = jnp.pad(delta_psum, (0, nd + 1 - delta_psum.shape[0]),
+                    mode="edge")
+    rank_lo = (blo - base_psum[blo]) + (dlo - dpsum[dlo])
+    rank_hi = (bhi - base_psum[bhi]) + (dhi - dpsum[dhi])
+    return rank_lo, jnp.maximum(rank_hi, rank_lo)

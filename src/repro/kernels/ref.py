@@ -66,6 +66,20 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
     nk = -(-S // tile)
     kp = jnp.pad(kf, (0, nk * tile - S), constant_values=jnp.inf)
 
+    lo, hi = _route_window_ref(q, root, mat, vec, n_leaves=n_leaves,
+                               route_n=route_n, root_kind=root_kind,
+                               leaf_kind=leaf_kind, S=S, lp=lp)
+    return _tiled_window_search(q, kp, lo, hi, S=S, tile=tile,
+                                tile_iters=tile_iters)
+
+
+def _route_window_ref(q, root, mat, vec, *, n_leaves: int, route_n: int,
+                      root_kind: str, leaf_kind: str, S: int, lp: int):
+    """The kernels' stages 1-3, mirrored: root routing -> leaf predict ->
+    error-bound window clamped to [0, S].  Same f32 op ordering as
+    ``lookup._route_window``."""
+    from . import lookup as _lk
+
     if root_kind == "linear":
         rpred = root[0, 0] * q + root[3, 0]
     else:
@@ -87,15 +101,15 @@ def lookup_ref(queries, root, mat, vec, keys, *, n_leaves: int,
 
     lo = jnp.clip(jnp.floor(pred + row(vecf, 1)), 0, S - 1).astype(jnp.int32)
     hi = jnp.clip(jnp.ceil(pred + row(vecf, 2)) + 1.0, 1, S).astype(jnp.int32)
-    return _tiled_window_search(q, kp, lo, hi, S=S, tile=tile,
-                                tile_iters=tile_iters)
+    return lo, hi
 
 
 def _tiled_window_search(q, kp, lo, hi, *, S: int, tile: int,
-                         tile_iters: int):
+                         tile_iters: int, right: bool = False):
     """The kernels' stage 4, mirrored: per-key-tile clamped branchless
     search with min-merge across tiles.  ``kp`` is the +inf-padded f32 key
-    array (length a ``tile`` multiple)."""
+    array (length a ``tile`` multiple).  ``right=True`` mirrors the range
+    kernel's right-boundary search (first position with key > q)."""
     nk = kp.shape[0] // tile
     out = hi
     for j in range(nk):
@@ -109,7 +123,7 @@ def _tiled_window_search(q, kp, lo, hi, *, S: int, tile: int,
             active = h2 - l > 0
             mid = (l + h2) // 2
             kv = jnp.take(ktile, jnp.clip(mid, 0, tile - 1))
-            below = kv < q
+            below = kv <= q if right else kv < q
             nl = jnp.where(below, mid + 1, l)
             nh = jnp.where(below, h2, mid)
             return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
@@ -208,6 +222,90 @@ def dynamic_lookup_ref(queries, root, mat, vec, keys, delta_keys, *,
 
     dl, _ = jax.lax.fori_loop(0, _lk.full_iters(nd), dbody, (dl, dh))
     return out, dl
+
+
+def dynamic_range_ref(q_lo, q_hi, root, mat, vec, keys, delta_keys, *,
+                      n_leaves: int, route_n: int | None = None,
+                      root_kind: str = "linear", leaf_kind: str = "linear",
+                      iters: int | None = None,
+                      tile: int | None = None) -> tuple:
+    """Oracle for lookup.dynamic_range_pallas: (base_lo, base_hi, delta_lo,
+    delta_hi).  Left boundary of ``q_lo`` and right boundary of ``q_hi``
+    against both tiers, with the same routing/window/tiled-search f32 op
+    ordering as the fused kernel — bit-identical in interpret mode."""
+    from . import lookup as _lk
+
+    ql = q_lo.astype(jnp.float32)
+    qh = q_hi.astype(jnp.float32)
+    kf = keys.astype(jnp.float32)
+    S = kf.shape[0]
+    lp = mat.shape[1]
+    if route_n is None:
+        route_n = S
+    if tile is None:
+        tile = min(_lk.TILE_MAX, _lk._pow2ceil(max(S, 128)))
+    if iters is None:
+        iters = _lk.full_iters(S)
+    tile_iters = min(iters, _lk.full_iters(tile))
+    nk = -(-S // tile)
+    kp = jnp.pad(kf, (0, nk * tile - S), constant_values=jnp.inf)
+
+    win = lambda q: _route_window_ref(
+        q, root, mat, vec, n_leaves=n_leaves, route_n=route_n,
+        root_kind=root_kind, leaf_kind=leaf_kind, S=S, lp=lp)
+    lo, hi = win(ql)
+    blo = _tiled_window_search(ql, kp, lo, hi, S=S, tile=tile,
+                               tile_iters=tile_iters)
+    lo, hi = win(qh)
+    bhi = _tiled_window_search(qh, kp, lo, hi, S=S, tile=tile,
+                               tile_iters=tile_iters, right=True)
+
+    dk = _lk.pad_delta(delta_keys)
+    nd = dk.shape[0]
+
+    def probe(q, right):
+        dl = jnp.zeros(q.shape, jnp.int32)
+        dh = jnp.full(q.shape, nd, jnp.int32)
+
+        def dbody(_, lh):
+            l, h2 = lh
+            active = h2 - l > 0
+            mid = (l + h2) // 2
+            kv = jnp.take(dk, jnp.clip(mid, 0, nd - 1))
+            below = kv <= q if right else kv < q
+            nl = jnp.where(below, mid + 1, l)
+            nh = jnp.where(below, h2, mid)
+            return (jnp.where(active, nl, l), jnp.where(active, nh, h2))
+
+        dl, _ = jax.lax.fori_loop(0, _lk.full_iters(nd), dbody, (dl, dh))
+        return dl
+
+    return blo, bhi, probe(ql, False), probe(qh, True)
+
+
+def dynamic_range_find_ref(q_lo, q_hi, keys, base_psum, delta_keys,
+                           delta_psum) -> tuple:
+    """Oracle for ops.range_lookup's (rank_lo, rank_hi): exact searchsorted
+    boundaries (side='left' for lo, side='right' for hi) composed through
+    the two-tier live-rank algebra, with rank_hi clamped to rank_lo so
+    degenerate ranges (lo > hi, tombstoned singletons, fully out-of-range)
+    collapse to an empty [rank_lo, rank_lo) window."""
+    from . import lookup as _lk
+
+    kf = keys.astype(jnp.float32)
+    qlf = q_lo.astype(jnp.float32)
+    qhf = q_hi.astype(jnp.float32)
+    blo = jnp.searchsorted(kf, qlf, side="left").astype(jnp.int32)
+    bhi = jnp.searchsorted(kf, qhf, side="right").astype(jnp.int32)
+    df = _lk.pad_delta(delta_keys)
+    nd = df.shape[0]
+    dlo = jnp.searchsorted(df, qlf, side="left").astype(jnp.int32)
+    dhi = jnp.searchsorted(df, qhf, side="right").astype(jnp.int32)
+    dpsum = jnp.pad(delta_psum, (0, nd + 1 - delta_psum.shape[0]),
+                    mode="edge")
+    rank_lo = (blo - base_psum[blo]) + (dlo - dpsum[dlo])
+    rank_hi = (bhi - base_psum[bhi]) + (dhi - dpsum[dhi])
+    return rank_lo, jnp.maximum(rank_hi, rank_lo)
 
 
 def dynamic_find_ref(queries, keys, base_dead, base_psum, delta_keys,

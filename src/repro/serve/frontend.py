@@ -39,6 +39,18 @@ Pipeline (the latency-budget / capacity-class contract)::
   dirty-row slice cache twice over — each tenant restacks only its dirty
   shard rows, and the tenant stack rewrites only the mutated tenants'
   rows (donated row scatters, true in-place writes).
+* **Range requests** (``submit_range``): the ``"range"`` kind answers
+  inclusive key ranges ``[lo, hi]`` with global live ranks
+  ``(rank_lo, rank_hi)`` — leftmost rank of ``lo``, rightmost rank of
+  ``hi`` under duplicates, tombstones excluded, ``rank_hi`` clamped so
+  degenerate ranges come back empty.  Ranges coalesce into the same
+  batches as point finds but dispatch through their own stacked program
+  (``core.distributed._tenant_stacked_range_fn``) on a [lo block | hi
+  block] query row with its own capacity class.  Both endpoints of every
+  pair count toward the ``max_batch`` early-cut, so one scan-heavy caller
+  can't starve the coalescer.  Every request kind — finds, ranges, and
+  mutations — rejects non-finite keys at submit (a NaN/±inf insert would
+  poison the sorted delta tier, whose pad sentinel is ``+inf``).
 """
 from __future__ import annotations
 
@@ -69,17 +81,19 @@ class ServeConfig:
 class Request:
     """Future returned by ``BatchingFrontend.submit_*``."""
     __slots__ = ("tenant", "kind", "keys", "arrival", "done_at", "found",
-                 "rank", "error", "_event")
+                 "rank", "rank_lo", "rank_hi", "error", "_event")
 
     def __init__(self, tenant: int, kind: str, keys: np.ndarray,
                  arrival: float):
         self.tenant = tenant
-        self.kind = kind                  # "find" | "insert" | "delete"
-        self.keys = keys
+        self.kind = kind          # "find" | "range" | "insert" | "delete"
+        self.keys = keys          # (n,) keys; ranges carry (2, n) endpoints
         self.arrival = arrival
         self.done_at = None               # completion time (frontend clock)
         self.found = None
         self.rank = None
+        self.rank_lo = None
+        self.rank_hi = None
         self.error = None
         self._event = threading.Event()
 
@@ -88,13 +102,16 @@ class Request:
 
     def result(self, timeout: float | None = None):
         """Block until served.  Finds return ``(found, rank)`` numpy
-        arrays; updates return ``None`` once applied."""
+        arrays, ranges return ``(rank_lo, rank_hi)``; updates return
+        ``None`` once applied."""
         if not self._event.wait(timeout):
             raise TimeoutError(f"request not served within {timeout}s")
         if self.error is not None:
             raise self.error
         if self.kind == "find":
             return self.found, self.rank
+        if self.kind == "range":
+            return self.rank_lo, self.rank_hi
         return None
 
 
@@ -304,26 +321,55 @@ class TenantPack:
                   st["bdead"], st["bpsum"], st["dk"], st["ddead"],
                   st["dpsum"], tables, qmat)
 
+    def find_range(self, rmat) -> tuple[Array, Array]:
+        """One stacked range dispatch: ``rmat`` is (n_tenants, 2 * rcap)
+        f64 laid out [lo endpoints | hi endpoints] per row (rcap a multiple
+        of the shard count, finite pads).  Returns (rank_lo, rank_hi) as
+        (n_tenants, rcap) device arrays with rank_hi clamped to rank_lo —
+        same asynchrony contract as :meth:`find`."""
+        st = self._refresh()
+        rmat = jnp.asarray(rmat, jnp.float64)
+        T, w = rmat.shape
+        if T != self.n_tenants or w % (2 * self.n_shards):
+            raise ValueError(f"bad range matrix {rmat.shape}: want "
+                             f"({self.n_tenants}, 2*k*{self.n_shards})")
+        fn = dist_mod._tenant_stacked_range_fn(
+            self.mesh, self.axis, n_tenants=self.n_tenants,
+            n_leaves=self.n_leaves, leaf_kind=self.leaf_kind,
+            iters=st["iters"], use_kernel=self.use_kernel,
+            interpret=self.interpret)
+        tables = (st["kroot"], st["kmat"], st["kvec"]) if self.use_kernel \
+            else (st["root"], st["leaves"], st["err_lo"], st["err_hi"])
+        rl, rr = fn(st["splits"], st["offs"], st["route_n"], st["base"],
+                    st["bdead"], st["bpsum"], st["dk"], st["ddead"],
+                    st["dpsum"], tables, rmat)
+        rcap = w // 2
+        rank_lo = rl[:, :rcap]
+        return rank_lo, jnp.maximum(rr[:, rcap:], rank_lo)
+
 
 @dataclass
 class FrontendStats:
     batches: int = 0              # stacked dispatches
     queries: int = 0              # live find keys served
+    ranges: int = 0               # live range pairs served
     updates: int = 0              # insert/delete keys applied
     padded_slots: int = 0         # pad lanes dispatched (wasted work)
     qcaps: set = field(default_factory=set)   # capacity classes seen
 
     @property
     def pad_fraction(self) -> float:
-        tot = self.queries + self.padded_slots
+        tot = self.queries + 2 * self.ranges + self.padded_slots
         return self.padded_slots / tot if tot else 0.0
 
 
 class _InFlight:
-    __slots__ = ("found", "rank", "plan")
+    __slots__ = ("found", "rank", "plan", "rank_lo", "rank_hi", "rplan")
 
-    def __init__(self, found, rank, plan):
+    def __init__(self, found, rank, plan, rank_lo=None, rank_hi=None,
+                 rplan=()):
         self.found, self.rank, self.plan = found, rank, plan
+        self.rank_lo, self.rank_hi, self.rplan = rank_lo, rank_hi, rplan
 
 
 class BatchingFrontend:
@@ -370,15 +416,18 @@ class BatchingFrontend:
         self.stop()
 
     def warmup(self, batch_sizes=(1,)) -> None:
-        """Trace the stacked dispatch for each capacity class the given
-        live batch sizes land in (plus the floor), so steady-state serving
-        never pays a trace.  Call before opening the queue to traffic."""
+        """Trace the stacked find AND range dispatches for each capacity
+        class the given live batch sizes land in (plus the floor), so
+        steady-state serving never pays a trace.  Call before opening the
+        queue to traffic."""
         for n in {capacity_class(int(n), self.config.batch_floor)
                   for n in batch_sizes} | {self.config.batch_floor}:
             qcap = max(n, self.pack.n_shards)
             found, rank = self.pack.find(
                 jnp.zeros((self.pack.n_tenants, qcap), jnp.float64))
-            jax.block_until_ready((found, rank))
+            rlo, rhi = self.pack.find_range(
+                jnp.zeros((self.pack.n_tenants, 2 * qcap), jnp.float64))
+            jax.block_until_ready((found, rank, rlo, rhi))
 
     # -- submission --------------------------------------------------------
     def _submit(self, tenant: int, kind: str, keys) -> Request:
@@ -387,8 +436,12 @@ class BatchingFrontend:
         if not 0 <= int(tenant) < self.pack.n_tenants:
             raise ValueError(f"unknown tenant {tenant}")
         keys = np.atleast_1d(np.asarray(keys, np.float64))
-        if kind == "find" and not np.all(np.isfinite(keys)):
-            raise ValueError("queries must be finite")
+        # Every kind validates: a NaN/±inf key in an insert or delete would
+        # poison the sorted delta tier (+inf is the delta pad sentinel, so a
+        # +inf insert silently corrupts every later merge), and a non-finite
+        # range endpoint would walk the rank algebra into capacity padding.
+        if not np.all(np.isfinite(keys)):
+            raise ValueError(f"{kind} keys must be finite")
         req = Request(int(tenant), kind, keys, self.clock())
         with self._cond:
             self.batcher.offer(req)
@@ -397,6 +450,16 @@ class BatchingFrontend:
 
     def submit_find(self, tenant: int, keys) -> Request:
         return self._submit(tenant, "find", keys)
+
+    def submit_range(self, tenant: int, lo_keys, hi_keys) -> Request:
+        """Inclusive key ranges ``[lo, hi]`` -> ``(rank_lo, rank_hi)``
+        global live ranks (module docstring).  Both endpoint arrays count
+        toward the batch key cap."""
+        lo = np.atleast_1d(np.asarray(lo_keys, np.float64))
+        hi = np.atleast_1d(np.asarray(hi_keys, np.float64))
+        if lo.shape != hi.shape:
+            raise ValueError("range endpoint arrays must pair up")
+        return self._submit(tenant, "range", np.stack([lo, hi]))
 
     def submit_insert(self, tenant: int, keys) -> Request:
         return self._submit(tenant, "insert", keys)
@@ -407,6 +470,11 @@ class BatchingFrontend:
     def lookup(self, tenant: int, keys, timeout: float | None = 60.0):
         """Synchronous convenience: submit one find and wait."""
         return self.submit_find(tenant, keys).result(timeout)
+
+    def scan(self, tenant: int, lo_keys, hi_keys,
+             timeout: float | None = 60.0):
+        """Synchronous convenience: submit one range request and wait."""
+        return self.submit_range(tenant, lo_keys, hi_keys).result(timeout)
 
     # -- the serving loop --------------------------------------------------
     def _collect(self) -> list | None:
@@ -428,7 +496,7 @@ class BatchingFrontend:
         dispatch — each tenant's dirty-row slice cache (and the tenant
         stack above it) then refreshes O(touched) at assembly."""
         for req in batch:
-            if req.kind == "find":
+            if req.kind in ("find", "range"):
                 continue
             try:
                 tenant = self.pack.tenants[req.tenant]
@@ -444,39 +512,74 @@ class BatchingFrontend:
 
     def _dispatch(self, batch: list) -> _InFlight | None:
         finds = [r for r in batch if r.kind == "find"]
-        if not finds:
+        rngs = [r for r in batch if r.kind == "range"]
+        if not finds and not rngs:
             return None
-        counts = [0] * self.pack.n_tenants
-        plan = []                       # (req, tenant, start, stop)
-        for r in finds:
-            t = r.tenant
-            plan.append((r, t, counts[t], counts[t] + r.keys.size))
-            counts[t] += r.keys.size
-        qcap = capacity_class(max(counts), self.config.batch_floor)
-        qcap = max(qcap, self.pack.n_shards)
-        qmat = np.zeros((self.pack.n_tenants, qcap), np.float64)
-        for r, t, a, b in plan:
-            qmat[t, a:b] = r.keys
-        live = sum(counts)
+        found = rank = rlo = rhi = None
+        plan, rplan = [], []            # (req, tenant, start, stop)
         self.stats.batches += 1
-        self.stats.queries += live
-        self.stats.padded_slots += qmat.size - live
-        self.stats.qcaps.add(qcap)
-        # Stage host->device explicitly, then dispatch asynchronously: with
-        # pipeline_depth > 1 this batch's transfer and compute overlap the
-        # previous batch's compute and the next batch's coalescing.
-        found, rank = self.pack.find(jax.device_put(qmat))
-        return _InFlight(found, rank, plan)
+        if finds:
+            counts = [0] * self.pack.n_tenants
+            for r in finds:
+                t = r.tenant
+                plan.append((r, t, counts[t], counts[t] + r.keys.size))
+                counts[t] += r.keys.size
+            qcap = capacity_class(max(counts), self.config.batch_floor)
+            qcap = max(qcap, self.pack.n_shards)
+            qmat = np.zeros((self.pack.n_tenants, qcap), np.float64)
+            for r, t, a, b in plan:
+                qmat[t, a:b] = r.keys
+            live = sum(counts)
+            self.stats.queries += live
+            self.stats.padded_slots += qmat.size - live
+            self.stats.qcaps.add(qcap)
+            # Stage host->device explicitly, then dispatch asynchronously:
+            # with pipeline_depth > 1 this batch's transfer and compute
+            # overlap the previous batch's compute and the next batch's
+            # coalescing.
+            found, rank = self.pack.find(jax.device_put(qmat))
+        if rngs:
+            # Ranges ride their own [lo block | hi block] matrix with an
+            # independent capacity class (range traffic is usually far
+            # sparser than point traffic — padding one to the other's
+            # width would double the wasted lanes).
+            rcounts = [0] * self.pack.n_tenants
+            for r in rngs:
+                t = r.tenant
+                n = r.keys.shape[1]
+                rplan.append((r, t, rcounts[t], rcounts[t] + n))
+                rcounts[t] += n
+            rcap = capacity_class(max(rcounts), self.config.batch_floor)
+            rcap = max(rcap, self.pack.n_shards)
+            rmat = np.zeros((self.pack.n_tenants, 2 * rcap), np.float64)
+            for r, t, a, b in rplan:
+                rmat[t, a:b] = r.keys[0]
+                rmat[t, rcap + a:rcap + b] = r.keys[1]
+            rlive = sum(rcounts)
+            self.stats.ranges += rlive
+            self.stats.padded_slots += rmat.size - 2 * rlive
+            self.stats.qcaps.add(rcap)
+            rlo, rhi = self.pack.find_range(jax.device_put(rmat))
+        return _InFlight(found, rank, plan, rlo, rhi, rplan)
 
     def _resolve(self, inf: _InFlight) -> None:
-        found = np.asarray(inf.found)       # one host sync per batch
-        rank = np.asarray(inf.rank)
         now = self.clock()
-        for req, t, a, b in inf.plan:
-            req.found = found[t, a:b]
-            req.rank = rank[t, a:b]
-            req.done_at = now
-            req._event.set()
+        if inf.plan:
+            found = np.asarray(inf.found)   # one host sync per batch
+            rank = np.asarray(inf.rank)
+            for req, t, a, b in inf.plan:
+                req.found = found[t, a:b]
+                req.rank = rank[t, a:b]
+                req.done_at = now
+                req._event.set()
+        if inf.rplan:
+            rlo = np.asarray(inf.rank_lo)
+            rhi = np.asarray(inf.rank_hi)
+            for req, t, a, b in inf.rplan:
+                req.rank_lo = rlo[t, a:b]
+                req.rank_hi = rhi[t, a:b]
+                req.done_at = now
+                req._event.set()
 
     def _fail(self, batch: list, err: Exception) -> None:
         for req in batch:

@@ -24,6 +24,7 @@ import pytest
 
 import repro  # noqa: F401
 from repro.core import pgm, radix_spline, rmi, rmrt
+from repro.kernels import lookup as lookup_mod
 from repro.kernels import ops, ref
 from repro.kernels.lookup import lookup_pallas, rmrt_lookup_pallas
 
@@ -156,6 +157,93 @@ def test_rmrt_differential_mlp(seed):
                             **kw)
     np.testing.assert_array_equal(np.asarray(fixed),
                                   np.searchsorted(keys, q, side="left"))
+
+
+# ---------------------------------------------------------------------------
+# Range lookups: the fused two-endpoint kernel against its independent
+# oracle (bit-exact) and the seam-fixed ops path against the flat live
+# searchsorted truth — under churn, so both tiers and the live-rank
+# algebra are exercised.  rank_lo is the leftmost rank of lo, rank_hi the
+# rightmost rank of hi (duplicate runs included), clamped so degenerate
+# ranges (lo > hi, out-of-range) come back empty.
+# ---------------------------------------------------------------------------
+_RANGE_STATICS = ("n_leaves", "route_n", "root_kind", "leaf_kind", "iters",
+                  "tile")
+_range_kernel = jax.jit(lookup_mod.dynamic_range_pallas,
+                        static_argnames=_RANGE_STATICS + ("interpret",))
+_range_oracle = jax.jit(ref.dynamic_range_ref,
+                        static_argnames=_RANGE_STATICS)
+
+
+def _gen_ranges(rng, keys: np.ndarray):
+    """(lo, hi) endpoint batches (exactly Q pairs, f32-exact): member and
+    midpoint endpoints, duplicate-run-spanning, degenerate lo > hi, and
+    fully out-of-range on both sides."""
+    lo = _gen_queries(rng, keys)
+    span = rng.choice([0.0, 1.0, 16.0], Q) * np.abs(lo) * 0.01
+    hi = (lo + span).astype(np.float32).astype(np.float64)
+    flip = rng.random(Q) < 0.15                     # degenerate lo > hi
+    lo2 = np.where(flip, hi + np.abs(lo) * 0.01, lo)
+    return lo2.astype(np.float32).astype(np.float64), hi
+
+
+def run_range_case(seed: int) -> None:
+    """One generated range-differential case: churned DynamicRMI, assert
+    range kernel == range oracle (bit-exact) and both find_range paths ==
+    flat searchsorted truth over the live set."""
+    from repro.core.updates import DynamicRMI
+
+    p = _case_params(seed)
+    keys = _gen_keys(p["rng"], p["dist"], p["size"])
+    dyn = DynamicRMI.build(jnp.asarray(np.unique(keys)), n_leaves=64,
+                           kind="linear")
+    uniq = np.unique(keys)
+    extra = _gen_keys(p["rng"], p["dist"], p["size"] // 4)
+    dyn.insert_batch(jnp.asarray(np.setdiff1d(extra, keys)))
+    dyn.delete_batch(jnp.asarray(                   # dup-heavy: few uniques
+        p["rng"].choice(uniq, min(p["size"] // 8, uniq.size // 2),
+                        replace=False)))
+    live = np.asarray(dyn.live_keys())
+    lo, hi = _gen_ranges(p["rng"], live)
+    el = np.searchsorted(live, lo, side="left")
+    eh = np.maximum(np.searchsorted(live, hi, side="right"), el)
+
+    idx = dyn.index
+    root, mat, vec = idx.packed_tables()
+    kw = dict(n_leaves=idx.n_leaves, route_n=dyn.route_n,
+              root_kind=idx.root_kind, leaf_kind=idx.leaf_kind,
+              iters=idx.search_iters, tile=p["tile"])
+    ql, qh = jnp.asarray(lo), jnp.asarray(hi)
+    got = _range_kernel(ql, qh, root, mat, vec, idx.keys, dyn.delta_keys,
+                        interpret=True, **kw)
+    want = _range_oracle(ql, qh, root, mat, vec, idx.keys, dyn.delta_keys,
+                         **kw)
+    for g, w, leg in zip(got, want, ("blo", "bhi", "dlo", "dhi")):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w),
+            err_msg=f"kernel!={leg}-oracle seed={seed}")
+
+    for uk in (True, False):
+        rl, rh = dyn.find_range(ql, qh, use_kernel=uk)
+        np.testing.assert_array_equal(
+            np.asarray(rl), el, err_msg=f"rank_lo seed={seed} uk={uk}")
+        np.testing.assert_array_equal(
+            np.asarray(rh), eh, err_msg=f"rank_hi seed={seed} uk={uk}")
+
+
+def test_range_differential_quick():
+    """One full cycle of the generator (every distribution x size combo,
+    churned) — the quick-tier slice of the range sweep."""
+    for seed in range(len(DISTS) * len(SIZES)):
+        run_range_case(seed)
+
+
+@pytest.mark.slow
+def test_range_differential_sweep():
+    """The full generated range sweep across distributions, tree shapes,
+    and endpoint mixes."""
+    for seed in range(N_SWEEP // 4):
+        run_range_case(seed)
 
 
 def _check_builder(name: str, keys: np.ndarray, q: np.ndarray) -> None:

@@ -188,6 +188,11 @@ def test_zero_retraces_after_warmup():
 
 
 def test_submit_validation():
+    """EVERY request kind rejects non-finite keys up front: +inf is the
+    delta-tier pad sentinel, so a non-finite insert would silently corrupt
+    later merges and a non-finite range endpoint would walk the rank
+    algebra into the capacity padding (regression: the guard used to cover
+    only finds)."""
     tenants, _, _ = _build_tenants()
     fe = BatchingFrontend(tenants)
     with pytest.raises(RuntimeError):       # not started
@@ -195,10 +200,90 @@ def test_submit_validation():
     with fe:
         with pytest.raises(ValueError):
             fe.submit_find(2, [1.0])        # unknown tenant
-        with pytest.raises(ValueError):
-            fe.submit_find(0, [np.inf])     # non-finite query
+        for bad in (np.inf, -np.inf, np.nan):
+            with pytest.raises(ValueError):
+                fe.submit_find(0, [bad])
+            with pytest.raises(ValueError):
+                fe.submit_insert(0, [1.0, bad])
+            with pytest.raises(ValueError):
+                fe.submit_delete(0, [bad])
+            with pytest.raises(ValueError):
+                fe.submit_range(0, [bad], [1.0])
+            with pytest.raises(ValueError):
+                fe.submit_range(0, [1.0], [bad])
+        with pytest.raises(ValueError):     # endpoint arrays must pair up
+            fe.submit_range(0, [1.0, 2.0], [3.0])
         with pytest.raises(RuntimeError):
             fe.start()                      # double start
+
+
+def _check_range(fe, live, tid, lo, hi, tag):
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    rl, rh = fe.scan(tid, lo, hi)
+    el = np.searchsorted(live[tid], lo, side="left")
+    eh = np.maximum(np.searchsorted(live[tid], hi, side="right"), el)
+    np.testing.assert_array_equal(rl, el, err_msg=tag)
+    np.testing.assert_array_equal(rh, eh, err_msg=tag)
+
+
+def test_frontend_serves_ranges():
+    """Range requests ride the same coalesced dispatch as finds: answers
+    match the flat searchsorted oracle, ranges interleave with finds and
+    updates, and degenerate ranges come back empty (rank_lo == rank_hi)."""
+    tenants, live, fresh = _build_tenants()
+    rng = np.random.default_rng(13)
+    with BatchingFrontend(tenants,
+                          config=ServeConfig(latency_budget_s=1e-3)) as fe:
+        fe.warmup((1, 64))
+        for tid in (0, 1):
+            lo = rng.choice(live[tid], 9)
+            hi = (lo * (1 + rng.uniform(0, 0.02, 9))).astype(
+                np.float32).astype(np.float64)
+            _check_range(fe, live, tid, lo, hi, f"t{tid} fresh")
+        # ranges coalesce with point finds in one batch
+        rreq = fe.submit_range(0, live[0][:4], live[0][8:12])
+        freq = fe.submit_find(1, rng.choice(live[1], 6))
+        rl, rh = rreq.result(timeout=120.0)
+        np.testing.assert_array_equal(
+            rl, np.searchsorted(live[0], live[0][:4], side="left"))
+        np.testing.assert_array_equal(
+            rh, np.searchsorted(live[0], live[0][8:12], side="right"))
+        assert freq.result(timeout=120.0)[0].all()
+        # churn between range batches: answers track the live set
+        ins = fresh[1][:32]
+        fe.submit_insert(1, ins).result(timeout=120.0)
+        live[1] = np.sort(np.concatenate([live[1], ins]))
+        _check_range(fe, live, 1, ins[:8],
+                     (ins[:8] * 1.01).astype(np.float32).astype(np.float64),
+                     "after insert")
+        # degenerates: lo > hi, fully out-of-range low/high
+        span = live[0][-1] - live[0][0]
+        for lo, hi in (([live[0][5]], [live[0][2]]),
+                       ([live[0][0] - span], [live[0][0] - span / 2]),
+                       ([live[0][-1] * 2], [live[0][-1] * 4])):
+            rl, rh = fe.scan(0, lo, hi)
+            assert np.array_equal(rl, rh), (lo, hi, rl, rh)
+        _check_range(fe, live, 0, [live[0][0]], [live[0][-1]], "full span")
+        assert fe.stats.ranges > 0
+
+
+def test_zero_range_retraces_after_warmup():
+    """Range batches get their own capacity classes; once warmup traced
+    them, serving any mix of range batch sizes never retraces."""
+    tenants, live, _ = _build_tenants()
+    rng = np.random.default_rng(17)
+    with BatchingFrontend(tenants,
+                          config=ServeConfig(latency_budget_s=1e-3)) as fe:
+        fe.warmup((1, 200))                 # classes {128, 256}
+        before = dist_mod.TRACE_COUNTS["tenant_range"]
+        for sz in (1, 2, 17, 127, 128, 129, 200, 256):
+            tid = int(rng.integers(2))
+            lo = rng.choice(live[tid], sz)
+            hi = (lo * 1.001).astype(np.float32).astype(np.float64)
+            _check_range(fe, live, tid, lo, hi, f"sz={sz}")
+        delta = dist_mod.TRACE_COUNTS["tenant_range"] - before
+        assert delta == 0, f"range path retraced {delta}x after warmup"
 
 
 def test_tenant_pack_bit_exact_single_device():
@@ -311,6 +396,23 @@ with BatchingFrontend(tenants,
     check(fe, 0, np.concatenate([dels[:8], rng.choice(live[0], 32)]),
           "after delete")
     assert fe.pack.pack_rows >= 1
+
+    # ---- range requests: oracle-exact on the mesh, zero retraces -------
+    rbefore = distributed.TRACE_COUNTS["tenant_range"]
+    for sz in (1, 9, 130):
+        tid = int(rng.integers(2))
+        lo = np.sort(rng.choice(live[tid], sz))
+        hi = (lo * (1 + rng.uniform(0, 0.02, sz))).astype(
+            np.float32).astype(np.float64)
+        rl, rh = fe.scan(tid, lo, hi)
+        el = np.searchsorted(live[tid], lo, side="left")
+        eh = np.maximum(np.searchsorted(live[tid], hi, side="right"), el)
+        np.testing.assert_array_equal(rl, el, err_msg="range sz=%%d" %% sz)
+        np.testing.assert_array_equal(rh, eh, err_msg="range sz=%%d" %% sz)
+    rl, rh = fe.scan(0, [live[0][7]], [live[0][3]])     # degenerate lo > hi
+    assert rl[0] == rh[0]
+    rdelta = distributed.TRACE_COUNTS["tenant_range"] - rbefore
+    assert rdelta == 0, "range path retraced %%d times" %% rdelta
 print("SERVE_OK ndev=%(ndev)d")
 """
 

@@ -8,7 +8,10 @@ matches the brute-force multiset truth on the concatenated live keys
 bit-exactly, including seam/split queries, out-of-range extremes, duplicate
 keys, a delete-all-of-one-shard drain, and a rebalance-triggering skewed
 ingest (keys are f32-exact throughout so the kernel's f32 boundary
-coincides with the f64 truth).
+coincides with the f64 truth).  ``find_range`` rides every churn round
+(seam-spanning, point, and degenerate ranges vs the flat oracle), and a
+dedicated regression pins the rightmost-rank semantics for duplicate runs
+at shard seams.
 """
 import pytest
 
@@ -47,6 +50,29 @@ def check(q, tag):
         np.testing.assert_array_equal(
             np.asarray(f), hi > lo, err_msg="found %%s uk=%%s" %% (tag, uk))
 
+def check_range(tag, n=129):
+    # find_range rides every churn round: rank_lo leftmost / rank_hi
+    # rightmost vs the flat live oracle, seam endpoints included.
+    if live.size == 0:
+        return
+    lo = rng.choice(live, n)
+    if idx.n_shards > 1:                 # seam-spanning + seam endpoints
+        seams = np.asarray(idx.splits, np.float64)
+        lo[:seams.size] = seams
+    hi = (lo * (1 + rng.uniform(0, 0.02, n))).astype(
+        np.float32).astype(np.float64)
+    hi[-8:] = lo[-8:]                    # point ranges (lo == hi)
+    lo[-4:], hi[-4:] = hi[-4:], lo[-4:]  # degenerate lo > hi
+    el = np.searchsorted(live, lo, side="left")
+    eh = np.maximum(np.searchsorted(live, hi, side="right"), el)
+    for uk in (False, True):
+        rl, rh = idx.find_range(jnp.asarray(lo), jnp.asarray(hi),
+                                use_kernel=uk)
+        np.testing.assert_array_equal(
+            np.asarray(rl), el, err_msg="range lo %%s uk=%%s" %% (tag, uk))
+        np.testing.assert_array_equal(
+            np.asarray(rh), eh, err_msg="range hi %%s uk=%%s" %% (tag, uk))
+
 def queries(n=701):                      # odd n: exercises the Q padding
     mem = rng.choice(live, n - 32) if live.size else np.zeros(n - 32)
     seams = np.asarray(idx.splits, np.float64) if idx.n_shards > 1 \
@@ -67,6 +93,7 @@ def oracle_delete(live, batch):
     return live
 
 check(queries(), "fresh")
+check_range("fresh")
 
 # ---- interleaved churn: inserts (incl. duplicates of live keys), deletes
 # (incl. misses), find after every round --------------------------------
@@ -82,6 +109,7 @@ for rnd in range(4):
     idx.delete_batch(dels)
     live = oracle_delete(live, dels)
     check(queries(), "round %%d" %% rnd)
+    check_range("round %%d" %% rnd)
 
 # ---- delete-all-of-one-shard drain ------------------------------------
 if idx.n_shards > 1:
@@ -93,6 +121,7 @@ if idx.n_shards > 1:
         idx.delete_batch(batch)
         live = oracle_delete(live, batch)
     check(queries(), "drain")
+    check_range("drain")
 
 # ---- rebalance-triggering skewed ingest -------------------------------
 span_hi = float(idx.splits[0]) if idx.n_shards > 1 else float(live[0])
@@ -103,6 +132,7 @@ live = np.sort(np.concatenate([live, hot]))
 if idx.n_shards > 1:
     assert idx.rebalances >= 1, "skewed ingest must trigger a rebalance"
 check(queries(), "skew")
+check_range("skew")
 assert idx.total_live == live.size
 print("SHARDED_DYN_OK ndev=%(ndev)d")
 """
@@ -199,3 +229,66 @@ def test_sharded_dynamic_dead_hot_rebuilds_in_place():
     """A delete-heavy workload with balanced shards must clear the dead
     ratio via an in-place rebuild, keeping finds exact afterwards."""
     run_mesh_script(_DEAD_HOT_SCRIPT, "DEAD_HOT_OK")
+
+
+_SEAM_DUP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import distributed
+
+ndev = %(ndev)d
+rng = np.random.default_rng(67)
+base = np.unique(rng.uniform(0, 1e6, 4000).astype(np.float32)) \
+    .astype(np.float64)
+mesh = jax.make_mesh((ndev,), ("data",))
+idx = distributed.ShardedDynamicIndex.build(jnp.asarray(base), mesh,
+                                            n_leaves=64, eps=0.7)
+live = base.copy()
+
+# Grow a duplicate run on each seam key itself: splits snap to run starts,
+# so after these inserts every split value heads a run that ends exactly at
+# its shard boundary (splits[r-1] < run key <= splits[r] routes the whole
+# run, and any hi endpoint equal to it, to shard r).
+splits = np.asarray(idx.splits, np.float64)
+dups = np.repeat(splits, 9)
+idx.insert_batch(dups)
+live = np.sort(np.concatenate([live, dups]))
+
+# hi == seam-run key: the rightmost rank must count EVERY duplicate in the
+# run (an off-by-run answer here means the hi endpoint was routed to the
+# shard past the seam, or the local search used the leftmost bound).
+lo = np.concatenate([splits, np.repeat(live[0], splits.size), live[:2]])
+hi = np.concatenate([splits, splits, live[:2]])
+el = np.searchsorted(live, lo, side="left")
+eh = np.maximum(np.searchsorted(live, hi, side="right"), el)
+for uk in (False, True):
+    rl, rh = idx.find_range(jnp.asarray(lo), jnp.asarray(hi), use_kernel=uk)
+    np.testing.assert_array_equal(np.asarray(rl), el,
+                                  err_msg="seam-dup lo uk=%%s" %% uk)
+    np.testing.assert_array_equal(np.asarray(rh), eh,
+                                  err_msg="seam-dup hi uk=%%s" %% uk)
+    # each seam run is 1 original + 9 duplicates wide
+    w = np.asarray(rh - rl)[:splits.size]
+    np.testing.assert_array_equal(w, np.full(splits.size, 10),
+                                  err_msg="seam run width uk=%%s" %% uk)
+print("SEAM_DUP_OK ndev=%(ndev)d")
+"""
+
+
+@pytest.mark.parametrize("ndev", [2])
+def test_sharded_range_seam_duplicates_small_mesh(ndev):
+    """Regression: a range's hi endpoint equal to a duplicate-run key at a
+    shard seam must return the RIGHTMOST global rank — counting the whole
+    run on the seam-owning shard, not the leftmost bound and not the next
+    shard's zero."""
+    run_mesh_script(_SEAM_DUP_SCRIPT % {"ndev": ndev},
+                    f"SEAM_DUP_OK ndev={ndev}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [4])
+def test_sharded_range_seam_duplicates_large_mesh(ndev):
+    run_mesh_script(_SEAM_DUP_SCRIPT % {"ndev": ndev},
+                    f"SEAM_DUP_OK ndev={ndev}")

@@ -466,6 +466,100 @@ def test_empty_build_accepts_inserts():
     assert d.live_count == ins.size - 10
 
 
+def _range_truth(d, lo, hi):
+    live = d.live_keys()
+    el = np.searchsorted(live, lo, side="left")
+    return el, np.maximum(np.searchsorted(live, hi, side="right"), el)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_find_range_exact_under_churn(use_kernel):
+    """Both find_range paths return (leftmost lo rank, rightmost hi rank)
+    vs the flat live oracle across both tiers — duplicate runs included."""
+    keys = _f32_keys(3000, seed=51, hi=1e6)
+    d = DynamicRMI.build(jnp.asarray(keys), eps=0.7, n_leaves=64,
+                         kind="linear")
+    d.insert_batch(_f32_keys(500, seed=52, lo=1e5, hi=9e5))
+    d.insert_batch(np.repeat(keys[100:110], 5))      # duplicate runs
+    d.delete_batch(keys[400:460])
+    live = d.live_keys()
+    rng = np.random.default_rng(53)
+    lo = rng.choice(live, 300)
+    hi = (lo * (1 + rng.uniform(0, 0.05, 300))).astype(
+        np.float32).astype(np.float64)
+    lo[:10] = hi[:10] = np.repeat(keys[100:105], 2)  # run-point ranges
+    el, eh = _range_truth(d, lo, hi)
+    rl, rh = d.find_range(jnp.asarray(lo), jnp.asarray(hi),
+                          use_kernel=use_kernel)
+    np.testing.assert_array_equal(np.asarray(rl), el)
+    np.testing.assert_array_equal(np.asarray(rh), eh)
+    # gather_range materializes exactly live[rank_lo:rank_hi]
+    for i, seg in zip(range(8), d.gather_range(rl[:8], rh[:8])):
+        np.testing.assert_array_equal(seg, live[el[i]:eh[i]])
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_find_range_degenerates(use_kernel):
+    """Degenerate ranges come back empty (rank_lo == rank_hi) on both
+    paths: lo > hi, fully out-of-range both sides, tombstoned lo == hi,
+    and the n == 0 empty index."""
+    keys = _f32_keys(1000, seed=61, hi=1e5)
+    d = DynamicRMI.build(jnp.asarray(keys), eps=0.7, n_leaves=32,
+                         kind="linear")
+    d.delete_batch(keys[7:8])                        # tombstoned singleton
+    live = d.live_keys()
+    lo = np.asarray([keys[50], -1e9, live[-1] * 2, keys[7], keys[20]])
+    hi = np.asarray([keys[10], -1e8, live[-1] * 4, keys[7], keys[20]])
+    rl, rh = d.find_range(jnp.asarray(lo), jnp.asarray(hi),
+                          use_kernel=use_kernel)
+    rl, rh = np.asarray(rl), np.asarray(rh)
+    el, eh = _range_truth(d, lo, hi)
+    np.testing.assert_array_equal(rl, el)
+    np.testing.assert_array_equal(rh, eh)
+    assert (rl[:4] == rh[:4]).all()                  # all empty...
+    assert rh[4] - rl[4] == 1                        # ...but live point hits
+    assert all(s.size == 0 for s in d.gather_range(rl[:4], rh[:4]))
+
+    empty = DynamicRMI.build(jnp.asarray(np.zeros(0)), eps=0.5,
+                             n_leaves=16, kind="linear")
+    rl, rh = empty.find_range(jnp.asarray([1.0]), jnp.asarray([2.0]),
+                              use_kernel=use_kernel)
+    assert int(rl[0]) == 0 and int(rh[0]) == 0
+
+
+def test_indexed_dataset_locate_range(lin_pool):
+    """Batch slicing through the dataset: ranges spanning shard boundaries
+    stitch per-shard pieces in shard order and match the global oracle
+    under churn; non-finite endpoints are rejected."""
+    from repro.data.indexed_dataset import IndexedDataset
+    ds = IndexedDataset.create(pool=lin_pool, eps=0.9, n_leaves=64)
+    rng = np.random.default_rng(31)
+    allk = _f32_keys(9000, seed=31, hi=3e5)
+    chunks = np.array_split(allk, 3)
+    for c in chunks:
+        ds.add_shard(c)
+    ds.delete_samples(1, rng.choice(chunks[1], 30, replace=False))
+    glob = np.sort(np.concatenate(
+        [ds.shards[s].dyn.live_keys() for s in range(3)]))
+    lo = rng.choice(glob, 8)
+    hi = (lo + rng.uniform(0, 1.5e5, 8)).astype(np.float32) \
+        .astype(np.float64)
+    lo = np.concatenate([lo, [4e5, -10.0, 100.0]])
+    hi = np.concatenate([hi, [5e5, -5.0, 50.0]])     # oor-high / oor-low /
+    res = ds.locate_range(lo, hi)                    # lo > hi
+    for i, (a, b) in enumerate(zip(lo, hi)):
+        want = glob[(glob >= a) & (glob <= b)]
+        got = np.concatenate([p for _, p in res[i]]) if res[i] \
+            else np.zeros(0)
+        np.testing.assert_array_equal(got, want, err_msg=f"range {i}")
+        sids = [s for s, _ in res[i]]
+        assert sids == sorted(sids)
+    with pytest.raises(ValueError):
+        ds.locate_range([np.inf], [1.0])
+    with pytest.raises(ValueError):
+        ds.locate_range([1.0, 2.0], [3.0])
+
+
 def test_indexed_dataset_append_and_delete(lin_pool):
     from repro.data.indexed_dataset import IndexedDataset
     ds = IndexedDataset.create(pool=lin_pool, eps=0.9, n_leaves=64)
