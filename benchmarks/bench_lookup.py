@@ -56,23 +56,24 @@ def bench(sizes: list[int], eps: float = 0.9) -> list[dict]:
     rng = np.random.default_rng(7)
     for n in sizes:
         keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+        # tracelint: ok[f32-cast](f32-exact key synthesis: the roundtrip dedup is the point)
         keys = np.unique(keys.astype(np.float32)).astype(np.float64)
         kj = jnp.asarray(keys)
         q = jnp.asarray(rng.choice(keys, Q))
 
         builds = {
-            "BTree": lambda: btree.build_btree(kj, fanout=16),
-            "RMI": lambda: rmi.build_rmi(kj, 1024, kind="linear"),
-            "RMI-MR": lambda: rmi.build_rmi(kj, 1024, kind="linear",
+            "BTree": lambda kj=kj: btree.build_btree(kj, fanout=16),
+            "RMI": lambda kj=kj: rmi.build_rmi(kj, 1024, kind="linear"),
+            "RMI-MR": lambda kj=kj: rmi.build_rmi(kj, 1024, kind="linear",
                                             pool=lin_pool),
-            "RMI-NN": lambda: rmi.build_rmi(kj, 1024, kind="mlp",
+            "RMI-NN": lambda kj=kj: rmi.build_rmi(kj, 1024, kind="mlp",
                                             train_steps=150),
-            "RMI-NN-MR": lambda: rmi.build_rmi(kj, 1024, kind="mlp",
+            "RMI-NN-MR": lambda kj=kj: rmi.build_rmi(kj, 1024, kind="mlp",
                                                pool=mlp_pool,
                                                train_steps=150),
-            "PGM": lambda: pgm.build_pgm(kj, eps=64),
-            "RS": lambda: radix_spline.build_rs(kj, eps=32),
-            "RMRT": lambda: rmrt.build_rmrt(kj, leaf_cap=4096, fanout=64,
+            "PGM": lambda kj=kj: pgm.build_pgm(kj, eps=64),
+            "RS": lambda kj=kj: radix_spline.build_rs(kj, eps=32),
+            "RMRT": lambda kj=kj: rmrt.build_rmrt(kj, leaf_cap=4096, fanout=64,
                                             kind="linear", pool=lin_pool),
         }
         for name, build in builds.items():
@@ -153,6 +154,7 @@ def bench_range(sizes: list[int], eps: float = 0.9) -> list[dict]:
     rng = np.random.default_rng(11)
     for n in sizes:
         keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+        # tracelint: ok[f32-cast](f32-exact key synthesis: the roundtrip dedup is the point)
         keys = np.unique(keys.astype(np.float32)).astype(np.float64)
         dyn = DynamicRMI.build(jnp.asarray(keys), n_leaves=1024,
                                kind="linear")
@@ -165,6 +167,7 @@ def bench_range(sizes: list[int], eps: float = 0.9) -> list[dict]:
         live = dyn.live_keys()
         qp = jnp.asarray(rng.choice(live, Q))
         q_lo = np.asarray(rng.choice(live, Q))
+        # tracelint: ok[f32-cast](f32-exact range-hi synthesis, same roundtrip)
         q_hi = (q_lo * (1.0 + rng.uniform(0.0, 0.01, Q))).astype(
             np.float32).astype(np.float64)
         q_lo, q_hi = jnp.asarray(q_lo), jnp.asarray(q_hi)
@@ -179,9 +182,10 @@ def bench_range(sizes: list[int], eps: float = 0.9) -> list[dict]:
             assert (np.array_equal(np.asarray(rl), el)
                     and np.array_equal(np.asarray(rh), eh)), path
             t_point = _time(
-                lambda qq, uk=use_kernel: dyn.find(qq, use_kernel=uk)[1], qp)
+                lambda qq, uk=use_kernel, d=dyn: d.find(qq, use_kernel=uk)[1],
+                qp)
             t_range = _time_range(
-                lambda a, b, uk=use_kernel: dyn.find_range(
+                lambda a, b, uk=use_kernel, d=dyn: d.find_range(
                     a, b, use_kernel=uk), q_lo, q_hi)
             for mix, ns in (("point", t_point), ("range", t_range),
                             ("mixed", 0.95 * t_range + 0.05 * t_point)):
@@ -203,6 +207,7 @@ def bench_distributed(n: int, n_shards: int) -> list[dict]:
 
     rng = np.random.default_rng(7)
     keys = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+    # tracelint: ok[f32-cast](f32-exact key synthesis: the roundtrip dedup is the point)
     keys = np.unique(keys.astype(np.float32)).astype(np.float64)
     q = jnp.asarray(rng.choice(keys, Q))
     mesh = jax.make_mesh((n_shards,), ("data",))

@@ -93,7 +93,7 @@ def _drive(frontend, fresh, workload: str, rate: float, duration: float,
     reqs = []
     clock = frontend.clock
     t0 = clock()
-    for i, (dt, kind, tid) in enumerate(zip(arrivals, kinds, tenant_of)):
+    for dt, kind, tid in zip(arrivals, kinds, tenant_of, strict=True):
         sched = t0 + dt
         lag = sched - clock()
         if lag > 0:

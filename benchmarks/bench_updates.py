@@ -67,6 +67,7 @@ def _median(fn) -> float:
 def _keys(n: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     k = np.sort(rng.lognormal(0, 0.7, n) * 1e6)
+    # tracelint: ok[f32-cast](f32-exact key synthesis: the roundtrip dedup is the point)
     return np.unique(k.astype(np.float32)).astype(np.float64)  # f32-exact
 
 
@@ -156,7 +157,7 @@ def bench(n: int = 1 << 17, eps: float = 0.9, n_leaves: int = 8192,
     # ---- rebuild (budget-exhausting storm; merges + forced Algorithm-1
     # pool-reuse refits, reuse_on_rebuild=True) ----------------------------
     storm = ins[:max(n // 4, 2048)]
-    for warm in (True, False):          # first pass primes the jit caches
+    for _warm in (True, False):         # first pass primes the jit caches
         dyn = DynamicRMI.build(jnp.asarray(base), pool=pool, eps=eps,
                                n_leaves=n_leaves, kind="linear",
                                reuse_on_rebuild=True if with_pool else None)
@@ -253,7 +254,8 @@ def bench_sharded(n: int = 1 << 16, n_shards: int = 4,
     for impl, uk in ((f"sharded-{n_shards}-jnp", False),
                      (f"sharded-{n_shards}-pallas", True)):
         jax.block_until_ready(s.find(q, use_kernel=uk))
-        dt = _median(lambda: jax.block_until_ready(s.find(q, use_kernel=uk)))
+        dt = _median(
+            lambda uk=uk: jax.block_until_ready(s.find(q, use_kernel=uk)))
         _row("find-churn", impl, dt / Q * 1e9,
              f"Q={Q} churn={churn.size} tombstones={dels.size} "
              f"live={s.total_live}"
@@ -298,7 +300,7 @@ def bench_restack(n: int = 1 << 16, shard_counts=(2, 4, 8),
             continue
         mesh = Mesh(np.asarray(jax.devices()[:S]), ("data",))
 
-        def _build(**kw):
+        def _build(*, mesh=mesh, **kw):
             return distributed.ShardedDynamicIndex.build(
                 jnp.asarray(base), mesh, n_leaves=n_leaves, eps=eps, **kw)
 
@@ -386,7 +388,7 @@ def bench_recover(n_values=(1 << 14, 1 << 16), eps: float = 0.7,
             persist.snapshot_sharded(store, 0, idx, blocking=True)  # warm
             step = [0]
 
-            def _snap():
+            def _snap(idx=idx, step=step, store=store):
                 step[0] += 1
                 persist.snapshot_sharded(store, step[0], idx,
                                          blocking=True)
@@ -398,13 +400,14 @@ def bench_recover(n_values=(1 << 14, 1 << 16), eps: float = 0.7,
                  f"bytes={nbytes} files={len(list(sd.iterdir()))} "
                  f"keys={nk}")
 
-            dt = _median(lambda: persist.restore_sharded(store, mesh))
+            dt = _median(
+                lambda store=store: persist.restore_sharded(store, mesh))
             _row("restore", f"sharded-{n_shards}", nk, dt / nk * 1e9,
                  f"keys={nk} same-width")
 
             st = [None]
 
-            def _reshard():
+            def _reshard(store=store):
                 _, rep = persist.restore_sharded(store, mesh2)
                 st[0] = rep.reshard
 

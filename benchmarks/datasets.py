@@ -36,7 +36,7 @@ def osm(n=DEFAULT_N, seed=2):
     centers = np.sort(rng.random(n_clusters)) * 1.8e19
     widths = rng.lognormal(30, 2, n_clusters)
     counts = rng.multinomial(n, rng.dirichlet(np.ones(n_clusters) * 0.4))
-    parts = [rng.normal(c, w, k) for c, w, k in zip(centers, widths, counts)]
+    parts = [rng.normal(c, w, k) for c, w, k in zip(centers, widths, counts, strict=True)]
     return np.sort(np.abs(np.concatenate(parts)))
 
 
@@ -46,7 +46,7 @@ def wiki(n=DEFAULT_N, seed=3):
     rates = rng.lognormal(0, 1.5, n_bursts)
     counts = np.maximum((rates / rates.sum() * n).astype(int), 1)
     t, parts = 0.0, []
-    for c, r in zip(counts, rates):
+    for c, r in zip(counts, rates, strict=True):
         parts.append(t + np.cumsum(rng.exponential(1.0 / r, c)))
         t = parts[-1][-1] + rng.exponential(50.0)
     keys = np.concatenate(parts)[:n]

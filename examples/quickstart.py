@@ -52,8 +52,9 @@ print("RMI + RMRT lookups: exact ✓")
 # the Pallas serving kernel (interpret mode on CPU): in-kernel leaf routing
 # over the VMEM-resident tables, search depth clamped to the error window
 root_blk, mat, vec = index.packed_tables()
-r = ops.index_lookup(q.astype(jnp.float32), root_blk, mat, vec,
-                     index.keys.astype(jnp.float32),
+qf = q.astype(jnp.float32)   # tracelint: ok[f32-cast](demo runs at f32 resolution)
+kf = index.keys.astype(jnp.float32)  # tracelint: ok[f32-cast](same demo cast)
+r = ops.index_lookup(qf, root_blk, mat, vec, kf,
                      n_leaves=index.n_leaves, root_kind=index.root_kind,
                      leaf_kind=index.leaf_kind, iters=index.search_iters)
 hit = float(jnp.mean((jnp.abs(keys[jnp.clip(r, 0, index.n-1)] - q)

@@ -1,0 +1,100 @@
+"""tracelint — repo-native static analysis for the lazy-index serving stack.
+
+The load-bearing invariants of this repo (zero retraces after warmup,
+honored buffer donation, one host sync per served batch, f32-exactness on
+kernel paths, VMEM-bounded Pallas kernels) are enforced at *runtime* by
+guards like ``core.distributed.TRACE_COUNTS`` and
+``scatter_rows_donated``'s ``is_deleted()`` assert — which means a
+violation only surfaces when a test happens to exercise it.  This package
+checks the same contracts at *analysis* time, over the AST, so a hot-path
+sync or a donated-buffer reuse fails CI before any workload hits it.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis src benchmarks examples
+    PYTHONPATH=src python -m repro.analysis --list-rules
+    PYTHONPATH=src python -m repro.analysis --vmem-budget 8388608 src
+
+Exit status is non-zero iff any *unsuppressed* finding (or malformed
+pragma) remains.  Findings print as ``path:line: [rule-id] message``.
+
+Rules (one module each under ``repro.analysis.rules``):
+
+``hot-sync``
+    Host synchronization inside the serving hot path.  The hot path is
+    every function reachable — over the project call graph — from the
+    front-end's dispatch/resolve roots (``BatchingFrontend._dispatch``,
+    ``BatchingFrontend._resolve``, ``TenantPack.find``/``find_range``).
+    Flagged constructs: ``np.asarray``/``np.array``/``np.copy`` on device
+    values, ``jax.device_get``, ``jax.block_until_ready`` /
+    ``.block_until_ready()``, ``.item()``/``.tolist()``, and
+    ``int()``/``float()``/``bool()`` of non-trivial expressions
+    (``.shape``/``len()`` metadata access is exempt — it never syncs).
+
+    **The hot-path sync-point contract**: a served batch performs exactly
+    ONE host sync, at result resolution (``BatchingFrontend._resolve``
+    materializing the batch's device arrays after dispatch).  Everything
+    else on the dispatch path must stay asynchronous; host-side *numpy
+    mirrors* (counters and capacity metadata maintained O(touched) by the
+    mutation paths) are read freely but must be annotated where the
+    analyzer cannot see they never touch device buffers.
+
+``retrace``
+    Retrace hazards inside jit-traced code: python branches
+    (``if``/``while``/ternary/``assert``) on traced arguments, host
+    materialization (``numpy`` calls, ``int()``/``float()``/``bool()``,
+    ``.item()``) of traced arguments, shapes computed from traced values,
+    and per-call ``jax.jit`` construction (jit of a lambda, or jit built
+    inside a loop) whose fresh trace cache retraces on every call.
+    Traced contexts are ``@jax.jit``-decorated functions (directly or via
+    ``functools.partial``), functions wrapped by ``jax.jit(f)`` /
+    ``jax.shard_map(f)`` call sites, and defs nested inside those bodies.
+    Arguments named by ``static_argnums``/``static_argnames`` are exempt.
+
+``donation``
+    Donation discipline: for every callable jitted with
+    ``donate_argnums`` (and every thin wrapper that forwards its own
+    parameter into a donated slot, e.g.
+    ``core.distributed.scatter_rows_donated``), a caller must not read
+    the donated buffer after the call — XLA consumed it.  The
+    ``x = f(x, ...)`` same-statement rebind is recognized as the idiom.
+
+``kernel``
+    Pallas kernel constraints at every ``pl.pallas_call`` site: the
+    per-grid-step VMEM footprint — BlockSpec block shapes x dtype width,
+    doubled for the pipeline's double buffering, plus scratch — must fit
+    the configurable budget (default 16 MiB, a TPU core's VMEM); kernel
+    bodies (resolved through ``functools.partial`` and followed into
+    same-module helpers) must not touch f64 or host numpy, nor the
+    disallowed primitives (``sort``/``argsort``/``unique``/``nonzero``/
+    ``searchsorted``/``while_loop`` — none of them lower to TPU Pallas).
+    Dimensions the evaluator cannot bound are skipped (the budget check
+    is then a lower bound) — it still bounds ``min(CONST, ...)`` shapes
+    like the key-tile clamp.
+
+``f32-cast``
+    dtype exactness: casting *key-like* arrays (names matching the key
+    regex: keys/queries/q_lo/q_hi/splits/...) to f32 is only legal inside
+    ``repro.kernels`` (every kernel wrapper sits behind the ``f32_exact``
+    path-selection gate) or inside functions that themselves implement an
+    ``f32_exact`` guard.  Anywhere else an f32 key cast silently merges
+    f32-colliding f64 keys.
+
+Pragma grammar (inline suppression — there is **no** baseline file; every
+suppression is an annotation at the offending line and MUST carry a
+non-empty reason)::
+
+    # tracelint: ok[<rule-id>](<reason>)     — suppress <rule-id> here
+    # sync: ok(<reason>)                     — alias for ok[hot-sync]
+
+A pragma suppresses findings of that rule on any line of the statement it
+annotates (trailing comment) or on the statement directly below it (own
+line).  A pragma with an empty reason, an unknown rule id, or a malformed
+spelling is itself reported (rule id ``pragma``) and cannot be
+suppressed.  The one sanctioned hot-path sync (see contract above) is
+annotated ``# sync: ok(the one host sync per batch: ...)`` at its site in
+``serve/frontend.py``.
+"""
+from .engine import Config, Finding, Project, analyze, main
+
+__all__ = ["Config", "Finding", "Project", "analyze", "main"]

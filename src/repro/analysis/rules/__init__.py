@@ -1,0 +1,16 @@
+"""Rule registry: each rule module exposes a ``RULE`` record
+(``id``, one-line ``doc``, ``check(project)``); the engine iterates
+``RULES`` and owns suppression/rendering."""
+from . import donation, dtype, hostsync, pallas, retrace
+
+RULES = [
+    hostsync.RULE,
+    retrace.RULE,
+    donation.RULE,
+    pallas.RULE,
+    dtype.RULE,
+]
+
+KNOWN_RULE_IDS = {r.id for r in RULES}
+
+__all__ = ["RULES", "KNOWN_RULE_IDS"]

@@ -1,0 +1,226 @@
+"""Shared rule plumbing: the Rule record and small AST utilities."""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    doc: str
+    check: object               # callable(project) -> iterable[Finding]
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``jnp.lax.sort``-style dotted name for Name/Attribute chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def own_body_nodes(func: ast.AST):
+    """Walk a def's subtree, excluding nested def subtrees (those are
+    separate call-graph nodes and would double-report)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+_META_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "nbytes"}
+_META_FUNCS = {"len", "min", "max", "abs", "round", "sorted", "sum",
+               "range", "int", "float", "bool", "str"}
+_HOST_REDUCTIONS = {"max", "min", "sum", "any", "all", "mean", "item",
+                    "tolist", "astype", "copy", "bit_length", "argmax",
+                    "argmin", "nonzero"}
+_SCALAR_ANNOTATIONS = {"int", "float", "bool", "str"}
+
+
+def scalar_env(fn: ast.AST) -> dict:
+    """Host-value environment for :func:`is_metadata_expr`: parameters
+    annotated with a scalar type map to True; every other name maps to
+    the list of expressions assigned to it in the body (a name is then
+    host-valued iff *all* of them are)."""
+    env: dict = {}
+    args = fn.args
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        if isinstance(a.annotation, ast.Name) \
+                and a.annotation.id in _SCALAR_ANNOTATIONS:
+            env[a.arg] = True
+    assigns: dict[str, list] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for name in ast.walk(t):
+                    if isinstance(name, ast.Name):
+                        assigns.setdefault(name.id, []).append(node.value)
+        elif isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Name):
+            assigns.setdefault(node.target.id, []).append(node.value)
+        elif isinstance(node, ast.For):
+            for name in ast.walk(node.target):
+                if isinstance(name, ast.Name):
+                    assigns.setdefault(name.id, []).append(node.iter)
+    for name, exprs in assigns.items():
+        env.setdefault(name, exprs)
+    return env
+
+
+def is_metadata_expr(node: ast.AST, env: dict | None = None,
+                     _stack: frozenset = frozenset()) -> bool:
+    """True when evaluating ``node`` can never force a device->host sync:
+    python constants, scalar-annotated parameters, ``len()``/``math.*``
+    arithmetic, ``.shape``/``.ndim``/``.size``/``.dtype`` metadata, host
+    numpy results (``np.*`` values already live on host — the *call* that
+    made them is judged separately), and reductions/arithmetic over any
+    of those.  A bare untracked Name is *not* metadata — it may hold a
+    device array.  Self-referential assignments resolve optimistically."""
+    env = env or {}
+
+    def rec(n, stack=_stack):
+        return is_metadata_expr(n, env, stack)
+
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        if node.id in _stack:
+            return True
+        got = env.get(node.id)
+        if got is True:
+            return True
+        if isinstance(got, list):
+            stack = _stack | {node.id}
+            return all(rec(e, stack) for e in got)
+        return False
+    if isinstance(node, ast.Attribute):
+        return node.attr in _META_ATTRS or rec(node.value)
+    if isinstance(node, ast.Subscript):
+        return rec(node.value)
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _META_FUNCS:
+            return all(rec(a) for a in node.args)
+        name = dotted(fn)
+        if name and name.split(".")[0] == "math":
+            return all(rec(a) for a in node.args)
+        if name and name.split(".")[0] in {"np", "numpy"}:
+            return True
+        if isinstance(fn, ast.Attribute) and fn.attr in _HOST_REDUCTIONS:
+            return rec(fn.value)
+        return False
+    if isinstance(node, ast.BinOp):
+        return rec(node.left) and rec(node.right)
+    if isinstance(node, (ast.UnaryOp, ast.Starred)):
+        return rec(node.operand if isinstance(node, ast.UnaryOp)
+                   else node.value)
+    if isinstance(node, ast.BoolOp):
+        return all(rec(v) for v in node.values)
+    if isinstance(node, ast.Compare):
+        return rec(node.left) and all(rec(c) for c in node.comparators)
+    if isinstance(node, ast.IfExp):
+        return rec(node.test) and rec(node.body) and rec(node.orelse)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(rec(e) for e in node.elts)
+    return False
+
+
+def module_constants(tree: ast.Module) -> dict:
+    """Top-level ``NAME = <int expr>`` bindings, evaluated where possible
+    (handles the ``TQ = 1024`` / ``TILE_MAX = 1 << 18`` idiom)."""
+    out: dict[str, int] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            val = eval_int(node.value, out)
+            if val is not None:
+                out[node.targets[0].id] = val
+    return out
+
+
+def eval_int(node: ast.AST, env: dict, depth: int = 0) -> int | None:
+    """Best-effort integer evaluation over constants, module/local names
+    in ``env``, arithmetic, and ``min``/``max``.  ``min(KNOWN, unknown)``
+    yields KNOWN as an *upper bound* (that is the conservative direction
+    for a VMEM budget check); unknowns elsewhere yield None."""
+    if depth > 16:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        got = env.get(node.id)
+        if isinstance(got, int):
+            return got
+        if isinstance(got, ast.AST):
+            return eval_int(got, env, depth + 1)
+        return None
+    if isinstance(node, ast.BinOp):
+        lhs = eval_int(node.left, env, depth + 1)
+        rhs = eval_int(node.right, env, depth + 1)
+        if lhs is None or rhs is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Add):
+                return lhs + rhs
+            if isinstance(node.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(node.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(node.op, ast.FloorDiv):
+                return lhs // rhs
+            if isinstance(node.op, ast.Mod):
+                return lhs % rhs
+            if isinstance(node.op, ast.LShift):
+                return lhs << rhs
+            if isinstance(node.op, ast.RShift):
+                return lhs >> rhs
+            if isinstance(node.op, ast.Pow):
+                return lhs ** rhs
+            if isinstance(node.op, ast.BitOr):
+                return lhs | rhs
+            if isinstance(node.op, ast.BitAnd):
+                return lhs & rhs
+        except (ValueError, ZeroDivisionError, OverflowError):
+            return None
+        return None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        val = eval_int(node.operand, env, depth + 1)
+        return -val if val is not None else None
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in {"min", "max"}:
+        vals = [eval_int(a, env, depth + 1) for a in node.args]
+        known = [v for v in vals if v is not None]
+        if not known:
+            return None
+        if node.func.id == "min":
+            # min(KNOWN, unknown) <= KNOWN: a valid upper bound.
+            return min(known)
+        return max(known) if len(known) == len(vals) else None
+    return None
+
+
+def local_env(func: ast.AST, consts: dict) -> dict:
+    """Single-assignment local names layered over module constants, so
+    ``tile = min(TILE_MAX, _pow2ceil(S))`` inside a wrapper resolves to an
+    upper bound at the pallas_call site."""
+    env = dict(consts)
+    counts: dict[str, int] = {}
+    exprs: dict[str, ast.AST] = {}
+    for node in ast.walk(func):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            name = node.targets[0].id
+            counts[name] = counts.get(name, 0) + 1
+            exprs[name] = node.value
+    for name, expr in exprs.items():
+        if counts[name] == 1 and name not in env:
+            env[name] = expr
+    return env

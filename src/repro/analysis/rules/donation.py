@@ -1,0 +1,228 @@
+"""Rule ``donation``: no def-use of a donated buffer after the call.
+
+Donating callables are collected project-wide: any def jitted with
+``donate_argnums`` (decorator or ``jax.jit(f, donate_argnums=...)``
+site), plus thin wrappers that forward one of their own positional
+parameters into a donated slot of another donating callable
+(``scatter_rows_donated(dst, ...) -> _row_scatter_jit(dst, ...)``),
+propagated to a fixpoint.
+
+At each call site of a donating callable, the argument in a donated slot
+is consumed by XLA — its buffer is deleted.  The sanctioned idiom rebinds
+the result over the source in the same statement (``x = f(x, ...)``,
+``self._st[k] = f(self._st[k], ...)``); any *read* of the donated
+expression in a later statement of the same function is flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import finding
+from .common import Rule, dotted, own_body_nodes
+
+_JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _donated_nums(keywords) -> tuple:
+    for kw in keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+    return ()
+
+
+def _collect_donors(project) -> dict:
+    """qual -> set of donated positional indices."""
+    cg = project.callgraph
+    donors: dict[str, set] = {}
+    for f in project.files:
+        # decorator form: @functools.partial(jax.jit, donate_argnums=(0,))
+        for node in ast.walk(f.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if not isinstance(dec, ast.Call):
+                        continue
+                    name = dotted(dec.func)
+                    is_jit = name in _JIT_NAMES or (
+                        name in {"functools.partial", "partial"}
+                        and dec.args and dotted(dec.args[0]) in _JIT_NAMES)
+                    if is_jit:
+                        nums = _donated_nums(dec.keywords)
+                        if nums:
+                            for q, fi in cg.funcs.items():
+                                if fi.node is node:
+                                    donors.setdefault(q, set()).update(nums)
+            # call-site form: jax.jit(f, donate_argnums=...)
+            elif isinstance(node, ast.Call) \
+                    and dotted(node.func) in _JIT_NAMES \
+                    and node.args and isinstance(node.args[0], ast.Name):
+                nums = _donated_nums(node.keywords)
+                if nums:
+                    q = f"{f.module}:{node.args[0].id}"
+                    if q in cg.funcs:
+                        donors.setdefault(q, set()).update(nums)
+    # wrapper propagation to fixpoint: f(p0..) calling donor(p0 in slot)
+    for _ in range(5):
+        grew = False
+        for q, fi in cg.funcs.items():
+            params = [a.arg for a in fi.node.args.posonlyargs
+                      + fi.node.args.args]
+            if params and params[0] == "self":
+                params = params[1:]
+            idx = cg.indexes[fi.module]
+            for node in own_body_nodes(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                for callee in cg._resolve_one(fi, idx, node.func):
+                    nums = donors.get(callee)
+                    if not nums:
+                        continue
+                    for n in nums:
+                        if n < len(node.args) and isinstance(
+                                node.args[n], ast.Name):
+                            try:
+                                slot = params.index(node.args[n].id)
+                            except ValueError:
+                                continue
+                            cur = donors.setdefault(q, set())
+                            if slot not in cur:
+                                cur.add(slot)
+                                grew = True
+        if not grew:
+            break
+    return donors
+
+
+def _stmt_list(fn):
+    """All statement lists in a def (body/orelse/finally blocks)."""
+    out = []
+    for node in ast.walk(fn):
+        for attr in ("body", "orelse", "finalbody"):
+            block = getattr(node, attr, None)
+            if isinstance(block, list) and block \
+                    and isinstance(block[0], ast.stmt):
+                out.append(block)
+    return out
+
+
+def _reads_after(fn, expr_src: str, after_line: int):
+    """First read of ``expr_src`` (by unparse identity) after
+    ``after_line``, stopping at a rebind of it.  ``x.is_deleted()`` is
+    not a read — it is the sanctioned no-copy assertion on the consumed
+    handle."""
+    guard_nodes = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "is_deleted":
+            for sub in ast.walk(node.value):
+                guard_nodes.add(id(sub))
+    events = []     # (line, kind) kind in {read, write}
+    for node in ast.walk(fn):
+        line = getattr(node, "lineno", None)
+        if line is None or line <= after_line:
+            continue
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if _unparse(t) == expr_src:
+                    events.append((line, "write"))
+        elif isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)):
+            if isinstance(getattr(node, "ctx", None), ast.Load) \
+                    and id(node) not in guard_nodes \
+                    and _unparse(node) == expr_src:
+                events.append((line, "read"))
+    events.sort()
+    for line, kind in events:
+        if kind == "write":
+            return None
+        return line
+    return None
+
+
+def _unparse(node) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:       # pragma: no cover - defensive
+        return ""
+
+
+def check(project):
+    cg = project.callgraph
+    donors = _collect_donors(project)
+    if not donors:
+        return
+    for fi in cg.funcs.values():
+        if fi.module.startswith("repro.analysis"):
+            continue
+        idx = cg.indexes[fi.module]
+        for node in own_body_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            callees = cg._resolve_one(fi, idx, node.func)
+            nums = set()
+            for c in callees:
+                nums |= donors.get(c, set())
+            if not nums:
+                continue
+            for n in sorted(nums):
+                if n >= len(node.args):
+                    continue
+                arg = node.args[n]
+                if not isinstance(arg, (ast.Name, ast.Attribute,
+                                        ast.Subscript)):
+                    continue        # fresh temporary: nothing to misuse
+                if isinstance(arg, ast.Name) and _lambda_local(
+                        fi.node, node, arg.id):
+                    continue        # bound by the enclosing lambda: its
+                    # single-expression body has no later statements
+                src = _unparse(arg)
+                # sanctioned: same-statement rebind  x = f(x, ...)
+                stmt = _enclosing_assign(fi.node, node)
+                if stmt is not None and any(
+                        _unparse(t) == src for t in stmt.targets):
+                    continue
+                line = _reads_after(fi.node, src,
+                                    getattr(node, "end_lineno", node.lineno))
+                if line is not None:
+                    callee = callees[0].split(":")[1] if callees else "?"
+                    yield finding(
+                        "donation", fi.file, node,
+                        f"{src!r} is donated to {callee}() (arg {n}) but "
+                        f"read again at line {line} — the buffer is "
+                        f"deleted after donation")
+
+
+def _lambda_local(fn, call, name: str) -> bool:
+    """True when ``call`` sits inside a lambda that binds ``name``."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Lambda):
+            continue
+        params = {a.arg for a in node.args.posonlyargs + node.args.args
+                  + node.args.kwonlyargs}
+        if node.args.vararg:
+            params.add(node.args.vararg.arg)
+        if name not in params:
+            continue
+        for sub in ast.walk(node):
+            if sub is call:
+                return True
+    return False
+
+
+def _enclosing_assign(fn, call):
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for sub in ast.walk(node.value):
+                if sub is call:
+                    return node
+    return None
+
+
+RULE = Rule(
+    id="donation",
+    doc="donated buffer (donate_argnums) read after the donating call",
+    check=check,
+)

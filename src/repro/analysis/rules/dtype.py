@@ -1,0 +1,107 @@
+"""Rule ``f32-cast``: dtype exactness for key arrays.
+
+The index's correctness story depends on keys staying f64 until the
+``f32_exact`` gate proves the f32 roundtrip lossless; an f32 cast of a
+key-like array anywhere else silently merges f32-colliding keys.
+Flagged spellings: ``X.astype(jnp.float32 | np.float32 | "float32")``,
+``jnp.float32(X)`` / ``np.float32(X)``, and
+``jnp.asarray/array(X, dtype=float32)`` where ``X`` mentions a key-like
+identifier (``Config.key_name_re``).  Exempt contexts: modules under
+``Config.f32_cast_ok_modules`` (the kernel boundary — every wrapper sits
+behind the gate) and functions that themselves implement an f32-exactness
+guard (their body references ``f32_exact``/``_f32_exact``/``_delta_f32``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from ..engine import finding
+from .common import Rule, dotted
+
+_F32_NAMES = {"float32", "f32"}
+_GUARD_RE = re.compile(r"\b(_?f32_exact|_delta_f32|_keys_f32_exact)\b")
+
+
+def _is_f32_dtype(node) -> bool:
+    name = dotted(node)
+    if name and name.split(".")[-1] in _F32_NAMES:
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float32"
+
+
+def _mentions_key(node, key_re) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and key_re.search(sub.id):
+            return True
+        if isinstance(sub, ast.Attribute) and key_re.search(sub.attr):
+            return True
+    return False
+
+
+def _guarded(fn_src: str) -> bool:
+    return bool(_GUARD_RE.search(fn_src))
+
+
+def _guard_map(tree) -> dict:
+    """id(node) -> True when the node sits inside a def whose body
+    references an f32-exactness guard."""
+    guards: dict[int, bool] = {}
+
+    def mark(node, guarded):
+        for child in ast.iter_child_nodes(node):
+            g = guarded
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                g = guarded or _guarded(ast.unparse(child))
+            guards[id(child)] = g
+            mark(child, g)
+
+    mark(tree, False)
+    return guards
+
+
+def check(project):
+    key_re = re.compile(project.config.key_name_re)
+    ok_prefixes = project.config.f32_cast_ok_modules
+    for f in project.files:
+        if f.module.startswith("repro.analysis"):
+            continue
+        if any(f.module == p or f.module.startswith(p + ".")
+               for p in ok_prefixes):
+            continue
+        # map each node to its innermost def's guardedness
+        guards = _guard_map(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            hit = None
+            fn = node.func
+            name = dotted(fn)
+            if isinstance(fn, ast.Attribute) and fn.attr == "astype" \
+                    and node.args and _is_f32_dtype(node.args[0]) \
+                    and not isinstance(fn.value, ast.Compare) \
+                    and _mentions_key(fn.value, key_re):
+                # (a Compare receiver is a boolean mask, not keys)
+                hit = fn.value
+            elif name and name.split(".")[-1] == "float32" and node.args \
+                    and _mentions_key(node.args[0], key_re):
+                hit = node.args[0]
+            elif name and name.split(".")[-1] in {"asarray", "array"} \
+                    and node.args and _mentions_key(node.args[0], key_re):
+                for kw in node.keywords:
+                    if kw.arg == "dtype" and _is_f32_dtype(kw.value):
+                        hit = node.args[0]
+            if hit is None or guards.get(id(node), False):
+                continue
+            yield finding(
+                "f32-cast", f, node,
+                f"f32 cast of key-like value {ast.unparse(hit)!r} outside "
+                f"the f32_exact guard/kernel boundary — f32-colliding f64 "
+                f"keys would silently merge")
+
+
+RULE = Rule(
+    id="f32-cast",
+    doc="f32 cast of key arrays outside approved f32_exact guard sites",
+    check=check,
+)

@@ -1,0 +1,88 @@
+"""Rule ``hot-sync``: host synchronization in the serving hot path.
+
+The hot path is the call-graph closure of ``Config.hot_roots`` (the
+front-end dispatch/resolve roots).  Within it, any construct that forces
+a device->host transfer or a stream drain is flagged: numpy
+materialization (``np.asarray``/``np.array``/``np.copy``),
+``jax.device_get``, ``block_until_ready`` (function or method),
+``.item()``/``.tolist()``, and scalar coercions ``int()``/``float()``/
+``bool()`` of non-metadata expressions.  The contract allows exactly one
+such sync per served batch — annotated ``# sync: ok(reason)`` at the
+resolve site; host-side numpy *mirrors* that never hold device buffers
+are likewise annotated where the analyzer cannot prove it.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import finding
+from .common import (Rule, dotted, is_metadata_expr, own_body_nodes,
+                     scalar_env)
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_NUMPY_FUNCS = {"asarray", "array", "copy", "ascontiguousarray"}
+_JAX_SYNC = {"jax.device_get", "jax.block_until_ready"}
+_COERCIONS = {"int", "float", "bool"}
+
+
+def _numpy_aliases(idx) -> set:
+    out = set()
+    for alias, mod in idx.mod_alias.items():
+        if mod == "numpy" or mod.startswith("numpy."):
+            out.add(alias)
+    return out
+
+
+def _scan(fi, idx, f):
+    np_names = _numpy_aliases(idx)
+    env = scalar_env(fi.node)
+    where = f"in hot-path function {fi.qual.split(':')[1]}"
+    for node in own_body_nodes(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = dotted(fn)
+        if isinstance(fn, ast.Attribute):
+            root = name.split(".")[0] if name else None
+            if root in np_names and fn.attr in _NUMPY_FUNCS:
+                yield finding(
+                    "hot-sync", f, node,
+                    f"np.{fn.attr}() materializes a device value on host "
+                    f"{where}")
+                continue
+            if name in _JAX_SYNC:
+                yield finding("hot-sync", f, node, f"{name}() {where}")
+                continue
+            if fn.attr in _SYNC_METHODS \
+                    and not is_metadata_expr(fn.value, env):
+                # method form on a possibly-device value:
+                # x.item() / x.tolist() / x.block_until_ready()
+                yield finding(
+                    "hot-sync", f, node,
+                    f".{fn.attr}() forces a host sync {where}")
+                continue
+        elif isinstance(fn, ast.Name) and fn.id in _COERCIONS:
+            if node.args and not all(is_metadata_expr(a, env)
+                                     for a in node.args):
+                yield finding(
+                    "hot-sync", f, node,
+                    f"{fn.id}() of a non-metadata value syncs if it holds "
+                    f"a device array {where}")
+
+
+def check(project):
+    cg = project.callgraph
+    reach = cg.reachable(project.config.hot_roots)
+    for qual in sorted(reach):
+        fi = cg.funcs[qual]
+        if fi.module.startswith("repro.analysis"):
+            continue
+        yield from _scan(fi, cg.indexes[fi.module], fi.file)
+
+
+RULE = Rule(
+    id="hot-sync",
+    doc="host sync (np.asarray/.item()/int()/block_until_ready) reachable "
+        "from the serve dispatch/resolve roots",
+    check=check,
+)

@@ -1,0 +1,235 @@
+"""Rule ``kernel``: Pallas kernel constraints at every pallas_call site.
+
+Two checks per ``pl.pallas_call``:
+
+* **VMEM budget** — per grid step, the blocks the pipeline keeps resident
+  are every in/out BlockSpec block (double-buffered, so x2) plus VMEM
+  scratch.  Block dims are evaluated against module constants and
+  single-assignment locals of the enclosing wrapper (so
+  ``tile = min(TILE_MAX, _pow2ceil(S))`` bounds to ``TILE_MAX``);
+  BlockSpec dtypes are unknown statically and assumed 4 bytes, scratch
+  dtypes are read from the ``pltpu.VMEM((...), dtype)`` literal.  Dims
+  that cannot be bounded are skipped, making the estimate a *lower*
+  bound — exceeding the budget is definitely real.
+
+* **kernel body** — the kernel callable (resolved through the local
+  ``kern = functools.partial(_kernel, ...)`` idiom and followed into
+  same-module helper functions) must not reference f64
+  (``jnp.float64``/``np.float64``/``astype(...float64)``), host numpy, or
+  the banned primitives (``sort``/``argsort``/``unique``/``nonzero``/
+  ``searchsorted``/``median``/``percentile``/``while_loop``) — none of
+  which lower to TPU Pallas.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import finding
+from .common import Rule, dotted, eval_int, local_env, module_constants
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8, "complex64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+
+_BANNED_ATTRS = {"sort", "argsort", "unique", "nonzero", "searchsorted",
+                 "median", "percentile", "while_loop"}
+_ARRAY_MODULES = {"jnp", "np", "numpy", "lax", "jax"}
+
+
+def _dtype_bytes(node) -> int:
+    name = dotted(node) or (node.value if isinstance(node, ast.Constant)
+                            and isinstance(node.value, str) else "")
+    if name:
+        return _DTYPE_BYTES.get(str(name).split(".")[-1], 4)
+    return 4
+
+
+def _block_shape(spec_call):
+    """BlockSpec((d0, d1), index_map) -> list of dim AST nodes."""
+    shape = None
+    if spec_call.args:
+        shape = spec_call.args[0]
+    for kw in spec_call.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return list(shape.elts)
+    return None
+
+
+def _iter_specs(node):
+    """Flatten a BlockSpec | [BlockSpec, ...] keyword value."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        for e in node.elts:
+            yield from _iter_specs(e)
+    elif isinstance(node, ast.Call) and \
+            (dotted(node.func) or "").endswith("BlockSpec"):
+        yield node
+
+
+def _block_bytes(dims, env, width) -> int:
+    total = width
+    for d in dims:
+        val = eval_int(d, env)
+        if val is not None and val > 0:
+            total *= val
+    return total
+
+
+def _vmem_estimate(call, env, cfg) -> tuple:
+    """(bytes, description) lower-bound VMEM footprint per grid step."""
+    total = 0
+    parts = []
+    for kw in call.keywords:
+        if kw.arg in {"in_specs", "out_specs"}:
+            for spec in _iter_specs(kw.value):
+                dims = _block_shape(spec)
+                if dims is None:
+                    continue
+                b = _block_bytes(dims, env, 4) * cfg.vmem_pipeline_factor
+                total += b
+                parts.append(f"{kw.arg}:{b}")
+        elif kw.arg == "scratch_shapes":
+            items = kw.value.elts \
+                if isinstance(kw.value, (ast.Tuple, ast.List)) else []
+            for item in items:
+                if not (isinstance(item, ast.Call)
+                        and (dotted(item.func) or "").endswith("VMEM")):
+                    continue
+                shape = item.args[0] if item.args else None
+                if not isinstance(shape, (ast.Tuple, ast.List)):
+                    continue
+                width = _dtype_bytes(item.args[1]) \
+                    if len(item.args) > 1 else 4
+                b = _block_bytes(list(shape.elts), env, width)
+                total += b
+                parts.append(f"scratch:{b}")
+    return total, " + ".join(parts)
+
+
+def _module_defs(file) -> dict:
+    out = {}
+    for node in file.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def _resolve_kernel(call, env, defs):
+    """pallas_call's first arg -> kernel def node (through partial)."""
+    if not call.args:
+        return None
+    target = call.args[0]
+    for _ in range(4):
+        if isinstance(target, ast.Name):
+            if target.id in defs:
+                return defs[target.id]
+            target = env.get(target.id)
+        elif isinstance(target, ast.Call) and \
+                dotted(target.func) in {"functools.partial", "partial"} \
+                and target.args:
+            target = target.args[0]
+        else:
+            return None
+    return None
+
+
+def _scan_body(kernel, defs, f, site_line):
+    """Yield findings from the kernel body and same-module helpers."""
+    visited = set()
+    queue = [kernel]
+    while queue:
+        fn = queue.pop()
+        if fn.name in visited:
+            continue
+        visited.add(fn.name)
+        for node in ast.walk(fn):
+            name = dotted(node) if isinstance(
+                node, (ast.Attribute, ast.Name)) else None
+            if isinstance(node, ast.Attribute) and name:
+                root, leaf = name.split(".")[0], name.split(".")[-1]
+                if "float64" in name or leaf == "float64":
+                    yield finding(
+                        "kernel", f, node,
+                        f"f64 reference {name!r} in kernel body "
+                        f"{fn.name!r} (pallas_call at line {site_line})")
+                elif root in {"np", "numpy"}:
+                    yield finding(
+                        "kernel", f, node,
+                        f"host numpy {name!r} in kernel body {fn.name!r} "
+                        f"(pallas_call at line {site_line})")
+                elif leaf in _BANNED_ATTRS and root in _ARRAY_MODULES:
+                    yield finding(
+                        "kernel", f, node,
+                        f"{name!r} does not lower to TPU Pallas — banned "
+                        f"in kernel body {fn.name!r} (pallas_call at "
+                        f"line {site_line})")
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype":
+                for a in node.args:
+                    # dotted jnp.float64 args hit the Attribute check
+                    # above; this catches the string-dtype spelling.
+                    if isinstance(a, ast.Constant) and a.value == "float64":
+                        yield finding(
+                            "kernel", f, node,
+                            f"astype(float64) in kernel body {fn.name!r} "
+                            f"(pallas_call at line {site_line})")
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in defs:
+                queue.append(defs[node.func.id])
+
+
+def _sites(tree, consts):
+    """Yield (env, pallas_call) with the env of the innermost enclosing
+    def (module constants at top level) — each site exactly once."""
+    env_cache: dict[int, dict] = {}
+
+    def env_for(owner):
+        if owner is None:
+            return consts
+        if id(owner) not in env_cache:
+            env_cache[id(owner)] = local_env(owner, consts)
+        return env_cache[id(owner)]
+
+    def visit(node, owner):
+        for child in ast.iter_child_nodes(node):
+            nxt = child if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef)) else owner
+            if isinstance(child, ast.Call) and (
+                    dotted(child.func) or "").endswith("pallas_call"):
+                yield env_for(owner), child
+            yield from visit(child, nxt)
+
+    yield from visit(tree, None)
+
+
+def check(project):
+    cfg = project.config
+    for f in project.files:
+        if f.module.startswith("repro.analysis"):
+            continue
+        consts = module_constants(f.tree)
+        defs = _module_defs(f)
+        for env, call in _sites(f.tree, consts):
+            est, desc = _vmem_estimate(call, env, cfg)
+            if est > cfg.vmem_budget_bytes:
+                yield finding(
+                    "kernel", f, call,
+                    f"pallas_call VMEM lower bound {est} bytes ({desc}) "
+                    f"exceeds budget {cfg.vmem_budget_bytes}")
+            kernel = _resolve_kernel(call, env, defs)
+            if kernel is not None:
+                yield from _scan_body(kernel, defs, f, call.lineno)
+
+
+RULE = Rule(
+    id="kernel",
+    doc="Pallas VMEM budget and banned-primitive/f64 checks at "
+        "pl.pallas_call sites",
+    check=check,
+)

@@ -1,0 +1,250 @@
+"""Rule ``retrace``: recompile hazards inside jit-traced code.
+
+Traced contexts are collected per module: ``@jax.jit``-decorated defs
+(directly or via ``functools.partial(jax.jit, ...)``), defs passed to a
+``jax.jit(f)`` / ``jax.shard_map(f, ...)`` call anywhere in the module
+(the lru_cache'd jit-factory idiom), and defs nested inside either.
+Arguments bound by ``static_argnums``/``static_argnames`` are exempt.
+
+Inside a traced body the non-static parameters are *traced*; taint
+propagates through plain assignments, but shape/dtype metadata of a
+traced value is static (``n = q.shape[0]`` then branching on ``n`` is
+fine — that is exactly the capacity-class padding idiom).  Flagged:
+
+* python control flow (``if``/``while``/ternary/``assert``) on a traced
+  value — a concretization error or a retrace per distinct value,
+* host materialization of traced values (``int``/``float``/``bool``,
+  ``.item()``/``.tolist()``, ``np.*``),
+* per-call jit construction: ``jax.jit(<lambda>)`` anywhere, or a
+  ``jax.jit(...)`` call inside a loop body when the enclosing def is not
+  an ``lru_cache``/``cache``-memoized factory — each call builds a fresh
+  trace cache, so every invocation retraces.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..engine import finding
+from .common import Rule, dotted, is_metadata_expr
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_WRAP_NAMES = {"jax.jit", "jit", "jax.shard_map", "shard_map",
+               "jax.experimental.shard_map.shard_map"}
+_MEMO_NAMES = {"functools.lru_cache", "lru_cache", "functools.cache",
+               "cache"}
+
+
+def _static_params(call_kw) -> tuple:
+    """(static_argnums tuple, static_argnames tuple) from jit keywords."""
+    nums, names = (), ()
+    for kw in call_kw:
+        if kw.arg == "static_argnums":
+            got = _const_tuple(kw.value)
+            nums = tuple(v for v in got if isinstance(v, int))
+        elif kw.arg == "static_argnames":
+            got = _const_tuple(kw.value)
+            names = tuple(v for v in got if isinstance(v, str))
+    return nums, names
+
+
+def _const_tuple(node) -> tuple:
+    if isinstance(node, ast.Constant):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant))
+    return ()
+
+
+def _jit_decoration(dec) -> tuple | None:
+    """None if not a jit decorator, else (static_argnums, static_argnames).
+
+    Handles ``@jax.jit``, ``@jax.jit(...)``, and
+    ``@functools.partial(jax.jit, ...)``.
+    """
+    if dotted(dec) in _JIT_NAMES:
+        return (), ()
+    if isinstance(dec, ast.Call):
+        name = dotted(dec.func)
+        if name in _JIT_NAMES:
+            return _static_params(dec.keywords)
+        if name in {"functools.partial", "partial"} and dec.args \
+                and dotted(dec.args[0]) in _JIT_NAMES:
+            return _static_params(dec.keywords)
+    return None
+
+
+def _traced_defs(file):
+    """Yield (def node, static names set) for every traced def in file."""
+    # defs wrapped by name at a jit/shard_map call site anywhere in module
+    wrapped: dict[str, tuple] = {}
+    for node in ast.walk(file.tree):
+        if isinstance(node, ast.Call) and dotted(node.func) in _WRAP_NAMES \
+                and node.args and isinstance(node.args[0], ast.Name):
+            nums, names = _static_params(node.keywords)
+            wrapped[node.args[0].id] = (nums, names)
+
+    def emit(fn, nums, names):
+        argnames = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        static = {n for n in names}
+        static.update(argnames[i] for i in nums if i < len(argnames))
+        yield fn, static
+        for inner in ast.walk(fn):
+            if inner is not fn and isinstance(
+                    inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield inner, static
+
+    seen = set()
+    for node in ast.walk(file.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        spec = None
+        for dec in node.decorator_list:
+            spec = _jit_decoration(dec)
+            if spec is not None:
+                break
+        if spec is None and node.name in wrapped:
+            spec = wrapped[node.name]
+        if spec is None:
+            continue
+        for fn, static in emit(node, *spec):
+            if id(fn) not in seen:
+                seen.add(id(fn))
+                yield fn, static
+
+
+class _Taint:
+    """Forward taint over a traced body: non-static params are traced;
+    assignment spreads taint unless the RHS is pure metadata."""
+
+    def __init__(self, fn, static):
+        args = fn.args
+        names = [a.arg for a in args.posonlyargs + args.args
+                 + args.kwonlyargs]
+        self.tainted = {n for n in names if n not in static}
+        self.tainted -= {"self"}
+
+    def references(self, node) -> bool:
+        """Does ``node`` read a traced value outside metadata context?"""
+        if is_metadata_expr(node):
+            return False
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            # identity checks (`mask is None`) resolve at trace time
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            # .shape/.dtype of traced is static; other attrs propagate
+            return not is_metadata_expr(node) \
+                and self.references(node.value)
+        for child in ast.iter_child_nodes(node):
+            if self.references(child):
+                return True
+        return False
+
+    def assign(self, stmt):
+        if isinstance(stmt, ast.Assign):
+            src = stmt.value
+            for t in stmt.targets:
+                for name in ast.walk(t):
+                    if isinstance(name, ast.Name):
+                        if self.references(src):
+                            self.tainted.add(name.id)
+                        else:
+                            self.tainted.discard(name.id)
+        elif isinstance(stmt, ast.AugAssign) and \
+                isinstance(stmt.target, ast.Name):
+            if self.references(stmt.value):
+                self.tainted.add(stmt.target.id)
+
+
+def _scan_traced(fn, static, f):
+    taint = _Taint(fn, static)
+    for node in ast.walk(fn):
+        taint.assign(node) if isinstance(
+            node, (ast.Assign, ast.AugAssign)) else None
+        if isinstance(node, (ast.If, ast.While)) and \
+                taint.references(node.test):
+            yield finding(
+                "retrace", f, node,
+                f"python branch on traced value inside jit body "
+                f"{fn.name!r} — concretizes the tracer (use lax.cond/"
+                f"jnp.where, or mark the arg static)")
+        elif isinstance(node, ast.IfExp) and taint.references(node.test):
+            yield finding(
+                "retrace", f, node,
+                f"ternary on traced value inside jit body {fn.name!r}")
+        elif isinstance(node, ast.Assert) and taint.references(node.test):
+            yield finding(
+                "retrace", f, node,
+                f"assert on traced value inside jit body {fn.name!r}")
+        elif isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in {"int", "float", "bool"} \
+                    and any(taint.references(a) for a in node.args):
+                yield finding(
+                    "retrace", f, node,
+                    f"{node.func.id}() concretizes a traced value inside "
+                    f"jit body {fn.name!r}")
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in {"item", "tolist"} \
+                    and taint.references(node.func.value):
+                yield finding(
+                    "retrace", f, node,
+                    f".{node.func.attr}() on traced value inside jit "
+                    f"body {fn.name!r}")
+            elif name and name.split(".")[0] in {"np", "numpy"} \
+                    and any(taint.references(a) for a in node.args):
+                yield finding(
+                    "retrace", f, node,
+                    f"host numpy call on traced value inside jit body "
+                    f"{fn.name!r}")
+
+
+def _scan_jit_construction(file):
+    """jax.jit(<lambda>) anywhere; jax.jit(...) built inside a loop of a
+    non-memoized def."""
+    memo_defs = set()
+    for node in ast.walk(file.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if dotted(target) in _MEMO_NAMES:
+                    memo_defs.add(id(node))
+
+    def walk(node, in_loop, in_memo):
+        for child in ast.iter_child_nodes(node):
+            child_loop = in_loop or isinstance(child, (ast.For, ast.While))
+            child_memo = in_memo or id(child) in memo_defs
+            if isinstance(child, ast.Call) \
+                    and dotted(child.func) in _JIT_NAMES and child.args:
+                if isinstance(child.args[0], ast.Lambda):
+                    yield child, "jax.jit(lambda ...) builds a fresh " \
+                        "trace cache per call site evaluation"
+                elif child_loop and not child_memo:
+                    yield child, "jax.jit(...) constructed inside a " \
+                        "loop — every iteration retraces (hoist it, or " \
+                        "memoize the factory with functools.lru_cache)"
+            yield from walk(child, child_loop, child_memo)
+
+    yield from walk(file.tree, False, False)
+
+
+def check(project):
+    for f in project.files:
+        if f.module.startswith("repro.analysis"):
+            continue
+        for fn, static in _traced_defs(f):
+            yield from _scan_traced(fn, static, f)
+        for node, msg in _scan_jit_construction(f):
+            yield finding("retrace", f, node, msg)
+
+
+RULE = Rule(
+    id="retrace",
+    doc="retrace hazards in jit bodies: python branches/coercions on "
+        "traced values, per-call jit construction",
+    check=check,
+)

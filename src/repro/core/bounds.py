@@ -69,7 +69,9 @@ def window_widths(err_lo, err_hi):
     (the +3 is the clamp/rounding slack of the lookup's window math).
     Host numpy — this feeds static jit parameters, not traced code."""
     import numpy as np
+    # tracelint: ok[hot-sync](update-path bounds ingest feeding static jit params)
     elo = np.asarray(err_lo, np.float64)
+    # tracelint: ok[hot-sync](second leg of the same bounds ingest)
     ehi = np.asarray(err_hi, np.float64)
     return np.ceil(ehi) - np.floor(elo) + 3.0
 
@@ -80,6 +82,7 @@ def clamped_depth(widths, n_keys: int) -> int:
     there are caught by seam verification and re-searched at full depth)."""
     import math
     import numpy as np
+    # tracelint: ok[hot-sync](widths is the host-side np width mirror)
     w = np.asarray(widths, np.float64)
     live = w < n_keys
     wmax = float(w[live].max()) if live.any() else float(max(n_keys, 2))

@@ -142,8 +142,8 @@ class ShardedIndex:
             from ..kernels import lookup as _lk
             kr, km, kv = [], [], []
             for s in range(self.n_shards):
-                root_s = jax.tree.map(lambda a: a[s], self.root)
-                leaves_s = jax.tree.map(lambda a: a[s], self.leaves)
+                root_s = jax.tree.map(lambda a, s=s: a[s], self.root)
+                leaves_s = jax.tree.map(lambda a, s=s: a[s], self.leaves)
                 kr.append(_lk.pack_root("linear", root_s))
                 w1, b1, w2, b2 = rmi_mod._leaf_table_arrays(
                     "linear", leaves_s, self.n_leaves)
@@ -658,7 +658,7 @@ class ShardedDynamicIndex:
             return
         if bool(skew_d):
             nb = [s for s in (hot - 1, hot + 1) if 0 <= s < self.n_shards]
-            lv = {s: self.shards[s].live_count for s in nb + [hot]}
+            lv = {s: self.shards[s].live_count for s in [*nb, hot]}
             if lv[hot] >= min(lv[s] for s in nb):
                 src, dst = hot, min(nb, key=lambda s: lv[s])     # shed
             else:
@@ -776,8 +776,8 @@ class ShardedDynamicIndex:
         retired — the current global max).  The packed kernel tables are a
         lazy sub-entry riding the same rows, so jnp-path consumers never
         pay for them."""
-        bcap = int(self._bcaps.max())
-        dcap = int(self._dcaps.max())
+        bcap = int(self._bcaps.max())  # tracelint: ok[hot-sync](np mirror)
+        dcap = int(self._dcaps.max())  # tracelint: ok[hot-sync](np mirror)
         st = self._stack
         if st is None or st["bcap"] != bcap or st["dcap"] != dcap:
             return self._restack_full(bcap, dcap)
@@ -798,8 +798,8 @@ class ShardedDynamicIndex:
                 self._bcaps[s] = d.index.keys.shape[0]
                 self._dcaps[s] = d.delta_keys.shape[0]
                 self._iters_vec[s] = d.index.search_iters
-        bcap = int(self._bcaps.max())
-        dcap = int(self._dcaps.max())
+        bcap = int(self._bcaps.max())  # tracelint: ok[hot-sync](np mirror)
+        dcap = int(self._dcaps.max())  # tracelint: ok[hot-sync](np mirror)
         stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
         rows = [self._slice_rows(s, bcap, dcap)
                 for s in range(self.n_shards)]
@@ -810,7 +810,7 @@ class ShardedDynamicIndex:
             root=stack([d.index.root for d in self.shards]),
             leaves=stack([d.index.leaves for d in self.shards]),
             leaf_kind=self.shards[0].index.leaf_kind,
-            iters=int(self._iters_vec.max()),
+            iters=int(self._iters_vec.max()),   # tracelint: ok[hot-sync](np mirror)
             packed=None,
             **{k: jnp.stack([r[k] for r in rows]) for k in self._ROW_KEYS})
         self.restack_full += 1
@@ -839,7 +839,7 @@ class ShardedDynamicIndex:
                 for i, t in enumerate(st["packed"]))
         st["offs"] = _offs_jit(self._counts)
         st["splits"] = jnp.asarray(self.splits)
-        st["iters"] = int(self._iters_vec.max())
+        st["iters"] = int(self._iters_vec.max())  # tracelint: ok[hot-sync](np mirror)
         self.restack_rows += len(ids)
         self._dirty.clear()
 
@@ -952,7 +952,7 @@ class ShardedDynamicIndex:
         live = self.live_keys()
         lo = np.asarray(rank_lo).ravel()
         hi = np.asarray(rank_hi).ravel()
-        return [live[int(a):int(b)] for a, b in zip(lo, hi)]
+        return [live[int(a):int(b)] for a, b in zip(lo, hi, strict=True)]
 
 
 @functools.lru_cache(maxsize=64)

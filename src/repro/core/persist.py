@@ -651,7 +651,7 @@ def _reshard_pieces(shards: list, n_to: int, *, eps, n_leaves, pool,
         stats.pieces += len(over)
         counts = {s: int(min(offs[s + 1], hi) - max(offs[s], lo))
                   for s in over}
-        s_star = max(over, key=lambda s: counts[s])
+        s_star = max(over, key=counts.__getitem__)
         a_lo = int(max(offs[s_star], lo))
         a_hi = int(min(offs[s_star + 1], hi))
         # A whole-shard anchor is consumed as-is; a partial one is cut out

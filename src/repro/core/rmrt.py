@@ -188,7 +188,7 @@ def build_rmrt(
         cbase = np.full((real,), -1, np.int64)
         cbase[internal] = next_base + np.arange(internal.size) * fanout
 
-        trim = lambda a: a[:real]
+        trim = lambda a, real=real: a[:real]
         all_params.append(jax.tree.map(trim, params))
         all_leaf.append(jnp.asarray(leaf_mask))
         all_cbase.append(jnp.asarray(cbase, jnp.int32))

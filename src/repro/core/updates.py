@@ -88,7 +88,7 @@ def _compact_sorted(keys: Array, keep: Array, payloads: tuple,
     tgt = jnp.where(keep, tgt, cap)
     ck = jnp.full((cap,), jnp.inf, keys.dtype).at[tgt].set(keys, mode="drop")
     cp = tuple(jnp.full((cap,), f, p.dtype).at[tgt].set(p, mode="drop")
-               for p, f in zip(payloads, fills))
+               for p, f in zip(payloads, fills, strict=True))
     return ck, cp
 
 
@@ -111,7 +111,7 @@ def _merge_sorted(ak: Array, bk: Array, cap_out: int, a_payloads: tuple,
         ext = lambda x, f: jnp.concatenate(
             [x, jnp.full((pad,), f, x.dtype)])[:cap_out]
         return ext(ak, jnp.inf), tuple(
-            ext(pa, f) for pa, f in zip(a_payloads, fills))
+            ext(pa, f) for pa, f in zip(a_payloads, fills, strict=True))
     # One small-side searchsorted (nb queries; XLA's searchsorted costs
     # ~O(queries), so keep the big side out of the query slot), then the
     # per-slot source map comes from a bincount + cumsum over the output:
@@ -130,7 +130,7 @@ def _merge_sorted(ak: Array, bk: Array, cap_out: int, a_payloads: tuple,
     outp = tuple(
         jnp.where(in_range & from_b, pb[bi],
                   jnp.where(in_range, pa[ai], f))
-        for pa, pb, f in zip(a_payloads, b_payloads, fills))
+        for pa, pb, f in zip(a_payloads, b_payloads, fills, strict=True))
     return out, outp
 
 
@@ -705,8 +705,9 @@ class DynamicRMI:
         """Step either tier's capacity class back down — the inverse of the
         grow-only policy in ``insert_batch``/``_rebuild_leaves``, for after
         migration sheds or delete-heavy churn.  Hysteresis band: a tier
-        shrinks only when its capacity is ≥ ``hysteresis`` × the smallest
-        class that fits, and it steps down to ``hysteresis/2`` × that class
+        shrinks only when its capacity is ≥ ``hysteresis`` times the
+        smallest class that fits, and steps down to ``hysteresis/2`` times
+        that class
         — so a shrink always leaves a doubling of headroom and regrowing
         needs ≥ 2 doublings (no thrash at a class boundary, and a batch
         smaller than the tier's population can never re-cross one).  Finite
@@ -973,7 +974,7 @@ class DynamicRMI:
         live = self.live_keys()
         lo = np.asarray(rank_lo).ravel()
         hi = np.asarray(rank_hi).ravel()
-        return [live[int(a):int(b)] for a, b in zip(lo, hi)]
+        return [live[int(a):int(b)] for a, b in zip(lo, hi, strict=True)]
 
     def live_keys(self) -> np.ndarray:
         """Sorted live keys across both tiers (host numpy; ``find``'s rank
@@ -1087,7 +1088,7 @@ class HostBufferDynamicRMI:
         qn = np.asarray(q)
         buf_hit = np.zeros(qn.shape, bool)
         buf_rank = np.zeros(qn.shape, np.int64)
-        for i, (qq, lf) in enumerate(zip(qn, np.asarray(leaves))):
+        for i, (qq, lf) in enumerate(zip(qn, np.asarray(leaves), strict=True)):
             b = self.buffers[lf]
             j = np.searchsorted(b, qq)
             buf_rank[i] = j

@@ -147,7 +147,7 @@ class IndexedDataset:
             ql = np.where(s_lo[rid] == sid, lo[rid], live[0])
             qh = np.where(s_hi[rid] == sid, hi[rid], live[-1])
             rl, rh = dyn.find_range(jnp.asarray(ql), jnp.asarray(qh))
-            for r, a, b in zip(rid, np.asarray(rl), np.asarray(rh)):
+            for r, a, b in zip(rid, np.asarray(rl), np.asarray(rh), strict=True):
                 pieces[r][sid] = live[int(a):int(b)]
         return [[(sid, piece[sid]) for sid in sorted(piece)
                  if piece[sid].size] for piece in pieces]

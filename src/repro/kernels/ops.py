@@ -220,6 +220,7 @@ def dynamic_index_lookup(queries, root, mat, vec, keys, base_dead, base_psum,
         else:
             import numpy as np
             L = min(n_leaves, vec.shape[1])
+            # tracelint: ok[hot-sync](iters=None convenience path only; serve callers pass iters)
             vec_np = np.asarray(vec)
             iters = _lookup.search_iters(vec_np[1, :L], vec_np[2, :L],
                                          keys.shape[0])
@@ -301,6 +302,7 @@ def range_lookup(q_lo, q_hi, root, mat, vec, keys, base_dead, base_psum,
         else:
             import numpy as np
             L = min(n_leaves, vec.shape[1])
+            # tracelint: ok[hot-sync](iters=None convenience path only; serve callers pass iters)
             vec_np = np.asarray(vec)
             iters = _lookup.search_iters(vec_np[1, :L], vec_np[2, :L],
                                          keys.shape[0])

@@ -262,7 +262,7 @@ def main():
     ap.add_argument("--arch", required=True,
                     help=f"one of {list_archs()} or index_service")
     ap.add_argument("--shape", default="train_4k",
-                    choices=list(SHAPES) + ["lookup_64k"])
+                    choices=[*SHAPES, "lookup_64k"])
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--out", default=None)
     ap.add_argument("--compress-pod", action="store_true")

@@ -42,7 +42,7 @@ def run(out_dir: str, meshes, timeout: int, only_arch=None, jobs=1):
         todo.append((arch, shape, mesh, path))
     print(f"[sweep] {len(todo)} cells to run")
     results = []
-    for i, (arch, shape, mesh, path) in enumerate(todo):
+    for i, (arch, shape, mesh, _path) in enumerate(todo):
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mesh, "--out", out_dir]
         t0 = time.time()

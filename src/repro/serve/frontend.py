@@ -254,7 +254,7 @@ class TenantPack:
     def _refresh(self) -> dict:
         sts = [t._stacked() for t in self.tenants]
         if self.use_kernel:
-            for t, st in zip(self.tenants, sts):
+            for t, st in zip(self.tenants, sts, strict=True):
                 t._packed_stack(st)
         bcap = max(st["bcap"] for st in sts)
         dcap = max(st["dcap"] for st in sts)
@@ -262,7 +262,7 @@ class TenantPack:
         geom = (bcap, dcap)
         if self._st is None or geom != self._geom:
             rows = [self._tenant_row(t, st, bcap, dcap)
-                    for t, st in zip(self.tenants, sts)]
+                    for t, st in zip(self.tenants, sts, strict=True)]
             stack = lambda k: jnp.stack([r[k] for r in rows])
             self._st = {k: stack(k) for k in self._STACK_KEYS}
             tmap = lambda k: jax.tree.map(lambda *a: jnp.stack(a),
@@ -276,7 +276,9 @@ class TenantPack:
             self.pack_full += 1
         else:
             stale = [i for i, fp in enumerate(fps)
-                     if not all(a is b for a, b in zip(fp, self._fps[i]))
+                     if not all(a is b
+                                for a, b in zip(fp, self._fps[i],
+                                                strict=False))
                      or len(fp) != len(self._fps[i])]
             for i in stale:
                 row = self._tenant_row(self.tenants[i], sts[i], bcap, dcap)
@@ -286,8 +288,8 @@ class TenantPack:
                         else ()):
                     self._st[k] = dist_mod.scatter_rows_donated(
                         self._st[k], idx, row[k][None])
-                scat = lambda dst, r: dist_mod.scatter_rows_donated(
-                    dst, idx, r[None])
+                scat = lambda dst, r, idx=idx: \
+                    dist_mod.scatter_rows_donated(dst, idx, r[None])
                 self._st["root"] = jax.tree.map(scat, self._st["root"],
                                                 row["root"])
                 self._st["leaves"] = jax.tree.map(scat, self._st["leaves"],
@@ -505,7 +507,7 @@ class BatchingFrontend:
                 else:
                     tenant.delete_batch(req.keys)
                 self.stats.updates += req.keys.size
-            except Exception as e:          # noqa: BLE001 — fail the caller
+            except Exception as e:          # broad: fail the caller
                 req.error = e
             req.done_at = self.clock()
             req._event.set()
@@ -565,16 +567,18 @@ class BatchingFrontend:
     def _resolve(self, inf: _InFlight) -> None:
         now = self.clock()
         if inf.plan:
-            found = np.asarray(inf.found)   # one host sync per batch
-            rank = np.asarray(inf.rank)
+            # sync: ok(the one host sync per batch: point results resolve)
+            found = np.asarray(inf.found)
+            rank = np.asarray(inf.rank)  # sync: ok(rides the found sync)
             for req, t, a, b in inf.plan:
                 req.found = found[t, a:b]
                 req.rank = rank[t, a:b]
                 req.done_at = now
                 req._event.set()
         if inf.rplan:
+            # sync: ok(range leg of the same batch resolution point)
             rlo = np.asarray(inf.rank_lo)
-            rhi = np.asarray(inf.rank_hi)
+            rhi = np.asarray(inf.rank_hi)  # sync: ok(rides the rlo sync)
             for req, t, a, b in inf.rplan:
                 req.rank_lo = rlo[t, a:b]
                 req.rank_hi = rhi[t, a:b]
@@ -596,7 +600,7 @@ class BatchingFrontend:
             try:
                 self._apply_updates(batch)
                 inf = self._dispatch(batch)
-            except Exception as e:          # noqa: BLE001 — fail the batch
+            except Exception as e:          # broad: fail the batch
                 self._fail(batch, e)
                 continue
             if inf is not None:

@@ -18,6 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Packed block-key layout: key = (request_id << _BLOCK_BITS) | logical_block.
+# Every packer/unpacker below must use this constant — a divergent shift
+# silently aliases (req, block) pairs across requests.
+_BLOCK_BITS = 22
+
 
 @dataclass
 class PagedKVCache:
@@ -58,7 +63,7 @@ class PagedKVCache:
             raise MemoryError("KV page pool exhausted")
         pages = self.free[-len(blocks):][::-1]
         del self.free[-len(blocks):]
-        self.table.update(((req, b), p) for b, p in zip(blocks, pages))
+        self.table.update(((req, b), p) for b, p in zip(blocks, pages, strict=True))
         return np.asarray(pages, np.int32)
 
     def release(self, req: int) -> None:
@@ -97,7 +102,7 @@ def learned_page_table(table: dict, *, use_kernel: bool | None = None):
     at scale."""
     from repro.core import rmi as rmi_mod
     items = sorted(table.items())
-    keys = jnp.asarray([float((r << 22) | b) for (r, b), _ in items])
+    keys = jnp.asarray([float((r << _BLOCK_BITS) | b) for (r, b), _ in items])
     pages = jnp.asarray([p for _, p in items], jnp.int32)
     idx = rmi_mod.build_rmi(keys, n_leaves=max(len(items) // 64, 1),
                             kind="linear")
@@ -111,9 +116,6 @@ def learned_page_table(table: dict, *, use_kernel: bool | None = None):
         return pages[jnp.clip(pos, 0, pages.shape[0] - 1)]
 
     return lookup, keys, pages
-
-
-_BLOCK_BITS = 22
 
 
 def _pack_keys(req: int, blocks) -> np.ndarray:

@@ -38,6 +38,6 @@ def compressed_pod_psum(grads, residual, axis: str = "pod"):
 
     flat_g, tdef = jax.tree.flatten(grads)
     flat_r = tdef.flatten_up_to(residual)
-    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    out = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
     return (jax.tree.unflatten(tdef, [o[0] for o in out]),
             jax.tree.unflatten(tdef, [o[1] for o in out]))

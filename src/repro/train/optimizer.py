@@ -53,7 +53,8 @@ def global_grad_norm(grads: dict, repl_weight: dict) -> jax.Array:
     from repro.models.sharding import psum_forced
     sq = sum(w * jnp.sum(g.astype(F32) ** 2)
              for g, w in zip(jax.tree.leaves(grads),
-                             jax.tree.leaves(repl_weight)))
+                             jax.tree.leaves(repl_weight),
+                             strict=True))
     return jnp.sqrt(psum_forced(sq, ("data", "model")))
 
 
@@ -81,7 +82,7 @@ def update(params: dict, grads: dict, st: AdamWState, *, lr: float,
     flat_nu = tdef.flatten_up_to(st.nu)
     flat_m = tdef.flatten_up_to(st.master)
     new_mu, new_nu, new_m = [], [], []
-    for g, mu, nu, m in zip(flat_g, flat_mu, flat_nu, flat_m):
+    for g, mu, nu, m in zip(flat_g, flat_mu, flat_nu, flat_m, strict=True):
         a, b, c = upd(g, mu, nu, m)
         new_mu.append(a)
         new_nu.append(b)

@@ -1,0 +1,372 @@
+"""tracelint analyzer suite (repro.analysis).
+
+Every rule gets a positive fixture (the finding fires, with the right
+rule id / file / line) and a negative fixture (the sanctioned spelling
+stays clean).  Fixtures are written as miniature source trees under
+``tmp_path/src`` so module names resolve exactly as in the repo
+(``src/repro/serve/frontend.py`` -> ``repro.serve.frontend``), which is
+what the hot-path call-graph roots key on.  The acceptance test seeds a
+violation into a copy of the *real* ``serve/frontend.py`` by stripping
+its sanctioned ``sync: ok`` pragmas and asserts the analyzer fails.
+
+Pure-AST: no jax import, so this suite runs in milliseconds.
+"""
+import re
+import textwrap
+from pathlib import Path
+
+from repro.analysis import Config, analyze
+from repro.analysis.engine import main as cli_main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _write(tmp, rel, src):
+    p = tmp / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def _run(tmp, config=None):
+    return analyze([tmp / "src"], config, root=tmp)
+
+
+def _bad(findings, rule=None):
+    return [f for f in findings if f.suppressed is None
+            and (rule is None or f.rule == rule)]
+
+
+# -- hot-sync ---------------------------------------------------------------
+
+_FRONTEND_FIXTURE = """\
+    import numpy as np
+
+    class BatchingFrontend:
+        def _dispatch(self, batch):
+            return self._stage(batch)
+
+        def _stage(self, batch):
+            n = batch.shape[0]
+            pad = int(n)                # metadata: never flagged
+            return np.asarray(batch.found), pad      # line 10: flagged
+
+        def _resolve(self, inf):
+            return int(inf.rank)        # line 13: flagged
+
+    def cold_helper(x):
+        return np.asarray(x)            # unreachable from roots: clean
+    """
+
+
+def test_hot_sync_positive_and_reachability(tmp_path):
+    _write(tmp_path, "src/repro/serve/frontend.py", _FRONTEND_FIXTURE)
+    bad = _bad(_run(tmp_path), "hot-sync")
+    lines = sorted(f.line for f in bad)
+    assert lines == [10, 13], bad
+    assert all(str(f.path).endswith("serve/frontend.py") for f in bad)
+    # the transitively-reached helper is attributed, the cold one is not
+    assert any("_stage" in f.message for f in bad)
+    assert not any("cold_helper" in f.message for f in bad)
+
+
+def test_hot_sync_metadata_is_clean(tmp_path):
+    _write(tmp_path, "src/repro/serve/frontend.py", """\
+        class BatchingFrontend:
+            def _dispatch(self, batch):
+                n = batch.shape[0]
+                caps = [int(n), int(batch.ndim), bool(n > 4)]
+                return caps
+        """)
+    assert _bad(_run(tmp_path), "hot-sync") == []
+
+
+def test_hot_sync_pragma_suppresses_with_reason(tmp_path):
+    _write(tmp_path, "src/repro/serve/frontend.py", """\
+        import numpy as np
+
+        class BatchingFrontend:
+            def _resolve(self, inf):
+                # sync: ok(the one host sync per batch)
+                found = np.asarray(inf.found)
+                rank = np.asarray(inf.rank)  # tracelint: ok[hot-sync](rides it)
+                return found, rank
+        """)
+    findings = _run(tmp_path)
+    assert _bad(findings) == []
+    reasons = {f.suppressed for f in findings if f.rule == "hot-sync"}
+    assert reasons == {"the one host sync per batch", "rides it"}
+
+
+# -- retrace ----------------------------------------------------------------
+
+def test_retrace_branch_on_traced(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    bad = _bad(_run(tmp_path), "retrace")
+    assert len(bad) == 1 and bad[0].line == 5
+
+
+def test_retrace_static_and_metadata_are_clean(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("flag",))
+        def f(x, flag):
+            n = x.shape[0]
+            if flag and n > 4:          # static arg + shape metadata
+                return x
+            if x is None:               # identity: resolves at trace time
+                return x
+            return -x
+        """)
+    assert _bad(_run(tmp_path), "retrace") == []
+
+
+def test_retrace_jit_of_lambda_and_jit_in_loop(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import functools
+
+        import jax
+
+        g = jax.jit(lambda x: x + 1)
+
+        def rebuild_every_call(fns, x):
+            for fn in fns:
+                x = jax.jit(fn)(x)
+            return x
+
+        @functools.lru_cache(maxsize=8)
+        def jit_factory(fn):
+            return jax.jit(fn)          # memoized: sanctioned
+        """)
+    bad = _bad(_run(tmp_path), "retrace")
+    assert sorted(f.line for f in bad) == [5, 9]
+
+
+# -- donation ---------------------------------------------------------------
+
+_DONOR_FIXTURE = """\
+    import functools
+
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def upd(buf, x):
+        return buf + x
+
+    def bad(buf, x):
+        out = upd(buf, x)
+        return buf + out            # read of the deleted buffer
+
+    def good(buf, x):
+        buf = upd(buf, x)           # sanctioned same-statement rebind
+        return buf
+    """
+
+
+def test_donation_read_after_donating_call(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", _DONOR_FIXTURE)
+    bad = _bad(_run(tmp_path), "donation")
+    assert len(bad) == 1 and bad[0].line == 10
+    assert "'buf'" in bad[0].message
+
+
+def test_donation_wrapper_propagates(tmp_path):
+    # a thin wrapper forwarding its first arg into the donated slot is
+    # itself donating; misuse at the *wrapper's* call site is flagged
+    extra = textwrap.dedent("""\
+
+        def wrapper(dst, x):
+            return upd(dst, x)
+
+        def bad_via_wrapper(dst, x):
+            out = wrapper(dst, x)
+            return dst + out
+        """)
+    _write(tmp_path, "src/repro/core/mod.py",
+           textwrap.dedent(_DONOR_FIXTURE) + extra)
+    bad = _bad(_run(tmp_path), "donation")
+    assert {f.line for f in bad} == {10, 21}
+
+
+# -- kernel -----------------------------------------------------------------
+
+def _pallas_fixture(block):
+    return f"""\
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x):
+            return pl.pallas_call(
+                _kernel,
+                in_specs=[pl.BlockSpec(({block}, {block}), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec(({block}, {block}), lambda i: (0, 0)),
+            )(x)
+        """
+
+
+def test_kernel_vmem_budget(tmp_path):
+    # 2048*2048*4B doubled-buffered in+out = 64 MiB >> 16 MiB default
+    _write(tmp_path, "src/repro/kernels/mod.py", _pallas_fixture(2048))
+    bad = _bad(_run(tmp_path), "kernel")
+    assert len(bad) == 1 and "exceeds budget" in bad[0].message
+    # the same site fits a raised budget
+    cfg = Config(vmem_budget_bytes=128 * 1024 * 1024)
+    assert _bad(_run(tmp_path, cfg), "kernel") == []
+
+
+def test_kernel_small_blocks_are_clean(tmp_path):
+    _write(tmp_path, "src/repro/kernels/mod.py", _pallas_fixture(128))
+    assert _bad(_run(tmp_path), "kernel") == []
+
+
+def test_kernel_banned_primitive_and_f64(tmp_path):
+    _write(tmp_path, "src/repro/kernels/mod.py", """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = jnp.sort(x_ref[...])       # no TPU lowering
+            tmp = x_ref[...].astype(jnp.float64)    # f64 in kernel
+
+        def run(x):
+            return pl.pallas_call(
+                _kernel,
+                in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+            )(x)
+        """)
+    msgs = [f.message for f in _bad(_run(tmp_path), "kernel")]
+    assert any("jnp.sort" in m for m in msgs)
+    assert any("float64" in m for m in msgs)
+
+
+# -- f32-cast ---------------------------------------------------------------
+
+def test_f32_cast_of_keys_flagged(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax.numpy as jnp
+
+        def shrink(keys):
+            return keys.astype(jnp.float32)
+        """)
+    bad = _bad(_run(tmp_path), "f32-cast")
+    assert len(bad) == 1 and bad[0].line == 4
+
+
+def test_f32_cast_guard_site_and_kernel_module_are_clean(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        import jax.numpy as jnp
+
+        def checked(keys):
+            kf = keys.astype(jnp.float32)
+            return kf, _f32_exact(keys, kf)
+
+        def mask(keys, q):
+            return (keys == q).astype(jnp.float32)  # boolean mask, not keys
+        """)
+    # the kernel boundary package is sanctioned wholesale
+    _write(tmp_path, "src/repro/kernels/mod.py", """\
+        import jax.numpy as jnp
+
+        def pack(keys):
+            return keys.astype(jnp.float32)
+        """)
+    assert _bad(_run(tmp_path), "f32-cast") == []
+
+
+# -- pragma grammar ---------------------------------------------------------
+
+def test_pragma_requires_reason_and_known_rule(tmp_path):
+    _write(tmp_path, "src/repro/core/mod.py", """\
+        x = 1  # tracelint: ok[hot-sync]()
+        y = 2  # tracelint: ok[no-such-rule](whatever)
+        z = 3  # tracelint: ok
+        w = 4  # sync: ok()
+        """)
+    bad = _bad(_run(tmp_path), "pragma")
+    by_line = {f.line: f.message for f in bad}
+    assert "no reason" in by_line[1]
+    assert "unknown rule id" in by_line[2]
+    assert "malformed pragma" in by_line[3]
+    assert "no reason" in by_line[4]
+
+
+def test_pragma_in_string_does_not_suppress(tmp_path):
+    _write(tmp_path, "src/repro/serve/frontend.py", """\
+        import numpy as np
+
+        class BatchingFrontend:
+            def _dispatch(self, batch):
+                label = "sync: ok(not a comment)"
+                return np.asarray(batch.found), label
+        """)
+    assert len(_bad(_run(tmp_path), "hot-sync")) == 1
+
+
+def test_pragma_for_wrong_rule_does_not_suppress(tmp_path):
+    _write(tmp_path, "src/repro/serve/frontend.py", """\
+        import numpy as np
+
+        class BatchingFrontend:
+            def _dispatch(self, batch):
+                # tracelint: ok[retrace](wrong rule id for this finding)
+                return np.asarray(batch.found)
+        """)
+    assert len(_bad(_run(tmp_path), "hot-sync")) == 1
+
+
+# -- acceptance: seeded violation in the real front-end ---------------------
+
+def test_seeded_violation_in_real_frontend_fails(tmp_path):
+    real = (REPO / "src/repro/serve/frontend.py").read_text()
+    # strip the sanctioned per-batch sync pragmas: the resolve-site syncs
+    # become unsuppressed hot-sync findings
+    seeded = re.sub(r"#\s*sync:\s*ok\([^)]*\)", "# (pragma stripped)", real)
+    assert seeded != real, "fixture drift: frontend.py lost its sync pragmas"
+    _write(tmp_path, "src/repro/serve/frontend.py", seeded)
+    bad = _bad(_run(tmp_path), "hot-sync")
+    assert len(bad) >= 2
+    assert any("_resolve" in f.message for f in bad)
+
+
+def test_real_tree_is_clean():
+    findings = analyze([REPO / "src", REPO / "benchmarks", REPO / "examples"],
+                       root=REPO)
+    assert _bad(findings) == []
+    # every suppression carries a non-empty reason
+    assert all(f.suppressed for f in findings if f.suppressed is not None)
+
+
+# -- CLI --------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys, monkeypatch):
+    # module names resolve relative to cwd (the repo-root invocation
+    # contract: `python -m repro.analysis src benchmarks examples`)
+    monkeypatch.chdir(tmp_path)
+    _write(tmp_path, "src/repro/serve/frontend.py", _FRONTEND_FIXTURE)
+    assert cli_main(["src"]) == 1
+    out = capsys.readouterr().out
+    assert "[hot-sync]" in out and "tracelint:" in out
+
+    clean = tmp_path / "clean"
+    _write(clean, "src/repro/core/mod.py", "X = 1\n")
+    monkeypatch.chdir(clean)
+    assert cli_main(["src"]) == 0
+
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "hot-sync" in out and "kernel" in out

@@ -51,7 +51,8 @@ def test_train_step(arch):
     # params actually changed
     delta = sum(float(jnp.abs(a.astype(jnp.float32) -
                               b.astype(jnp.float32)).sum())
-                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2),
+                            strict=True))
     assert delta > 0
 
 

@@ -117,3 +117,54 @@ def test_mutated_history_is_detected(tmp_path, monkeypatch):
     p = _write(tmp_path, _updates_doc())
     errs = check_bench.check_append_immutable(p)
     assert any("pre-existing trajectory" in e for e in errs)
+
+
+def _lookup_doc():
+    base = {"variant": "DynamicRMI", "n_keys": 1000, "path": "jnp",
+            "ns_per_query": 9.5}
+    range_row = dict(base, mix="point")
+    return {
+        "meta": {"queries": 1},
+        "rows": [dict(base)],
+        "trajectory": [
+            {"sha": "abc1234", "suite": "lookup", "mode": "interpret/CPU",
+             "date": "2026-08-08", "rows": [dict(base)]},
+            {"sha": "abc1234", "suite": "lookup-range",
+             "mode": "interpret/CPU", "date": "2026-08-08",
+             "rows": [dict(range_row)]},
+        ],
+    }
+
+
+def test_lookup_doc_passes(tmp_path):
+    p = _write(tmp_path, _lookup_doc(), name="BENCH_lookup.json")
+    assert check_bench.check_file(p) == []
+
+
+def test_malformed_row_rejected():
+    """A non-object row — the shape a half-written append leaves behind —
+    fails both in the baseline and inside a trajectory entry."""
+    doc = _lookup_doc()
+    doc["rows"].append(["variant", "DynamicRMI"])
+    errs = check_bench.check_schema(Path("BENCH_lookup.json"), doc)
+    assert any("rows[1] is not an object" in e for e in errs)
+
+    doc = _lookup_doc()
+    doc["trajectory"][0]["rows"][0] = 42
+    errs = check_bench.check_schema(Path("BENCH_lookup.json"), doc)
+    assert any("trajectory[0].rows[0]" in e for e in errs)
+
+
+def test_suite_specific_column_required():
+    """lookup-range trajectory rows carry the YCSB mix column on top of
+    the file's baseline schema (_SUITE_ROW_KEYS); dropping it fails even
+    though the row satisfies the plain BENCH_lookup.json schema."""
+    doc = _lookup_doc()
+    del doc["trajectory"][1]["rows"][0]["mix"]
+    errs = check_bench.check_schema(Path("BENCH_lookup.json"), doc)
+    assert any("trajectory[1].rows[0] missing columns ['mix']" in e
+               for e in errs)
+    # the plain lookup suite does not require mix
+    doc = _lookup_doc()
+    errs = check_bench.check_schema(Path("BENCH_lookup.json"), doc)
+    assert errs == []

@@ -218,7 +218,8 @@ def run_range_case(seed: int) -> None:
                         interpret=True, **kw)
     want = _range_oracle(ql, qh, root, mat, vec, idx.keys, dyn.delta_keys,
                          **kw)
-    for g, w, leg in zip(got, want, ("blo", "bhi", "dlo", "dhi")):
+    for g, w, leg in zip(got, want, ("blo", "bhi", "dlo", "dhi"),
+                         strict=True):
         np.testing.assert_array_equal(
             np.asarray(g), np.asarray(w),
             err_msg=f"kernel!={leg}-oracle seed={seed}")

@@ -36,12 +36,12 @@ def assert_stack_equal(warm, cold, tag):
         elif k == "packed":
             assert (a is None) == (b is None), (tag, k)
             if a is not None:
-                for x, y in zip(a, b):
+                for x, y in zip(a, b, strict=True):
                     np.testing.assert_array_equal(
                         np.asarray(x), np.asarray(y),
                         err_msg="%%s %%s" %% (tag, k))
         elif k in ("root", "leaves"):
-            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
                 np.testing.assert_array_equal(
                     np.asarray(x), np.asarray(y),
                     err_msg="%%s %%s" %% (tag, k))

@@ -29,7 +29,8 @@ def test_checkpoint_roundtrip_and_corruption():
         template = {"params": jax.tree.map(jnp.zeros_like, params)}
         restored = ck.restore(10, template)
         for a, b in zip(jax.tree.leaves(params),
-                        jax.tree.leaves(restored["params"])):
+                        jax.tree.leaves(restored["params"]),
+                        strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         # corrupt one shard -> checksum must catch it
         step_dir = os.path.join(d, "step_00000010")
@@ -150,7 +151,8 @@ def test_microbatch_equivalence():
                            inputs, labels, pos)
         outs.append((float(m["loss"]), p2))
     assert abs(outs[0][0] - outs[1][0]) < 2e-2, (outs[0][0], outs[1][0])
-    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])):
+    for a, b in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1]),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=3e-2)
 

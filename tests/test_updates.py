@@ -494,7 +494,7 @@ def test_find_range_exact_under_churn(use_kernel):
     np.testing.assert_array_equal(np.asarray(rl), el)
     np.testing.assert_array_equal(np.asarray(rh), eh)
     # gather_range materializes exactly live[rank_lo:rank_hi]
-    for i, seg in zip(range(8), d.gather_range(rl[:8], rh[:8])):
+    for i, seg in zip(range(8), d.gather_range(rl[:8], rh[:8]), strict=True):
         np.testing.assert_array_equal(seg, live[el[i]:eh[i]])
 
 
@@ -547,7 +547,7 @@ def test_indexed_dataset_locate_range(lin_pool):
     lo = np.concatenate([lo, [4e5, -10.0, 100.0]])
     hi = np.concatenate([hi, [5e5, -5.0, 50.0]])     # oor-high / oor-low /
     res = ds.locate_range(lo, hi)                    # lo > hi
-    for i, (a, b) in enumerate(zip(lo, hi)):
+    for i, (a, b) in enumerate(zip(lo, hi, strict=True)):
         want = glob[(glob >= a) & (glob <= b)]
         got = np.concatenate([p for _, p in res[i]]) if res[i] \
             else np.zeros(0)
