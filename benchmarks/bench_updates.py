@@ -34,6 +34,13 @@ Times ns/op for the §4 update subsystem and writes ``BENCH_updates.json``
                 snapshot cost vs index size, same-width restore latency,
                 and restore-resharded 4->2 latency (the elastic-restart
                 path) — full_rebuilds in the detail must stay 0
+  drift         drifting-ingest trajectory through the ``repro.api.Index``
+                facade: per-key insert+maintenance latency over a
+                stationary -> shifted-lognormal -> zipf ingest, swap mode
+                (online KS monitor + bound-checked pool hot-swaps, see
+                core.drift) vs refit-only — swap-mode p99 must stay ~flat
+                while refit-only spikes on the merge storms the shifted
+                phases trigger
 
 Rows *append* to ``BENCH_updates.json`` under ``trajectory``, keyed by
 (git sha, suite) — the committed baseline rows stay untouched.
@@ -420,6 +427,134 @@ def bench_recover(n_values=(1 << 14, 1 << 16), eps: float = 0.7,
     return rows
 
 
+def bench_drift(n: int = 1 << 17, batches: int = 8, batch: int = 2000,
+                eps: float = 0.65) -> list[dict]:
+    """Drift-adaptive serving trajectory (core.drift, through the
+    ``repro.api.Index`` facade).
+
+    One workload, two modes: ``batches`` insert batches per phase of a
+    stationary -> shifted-lognormal -> zipf-hot ingest.  The timed section
+    is the serving-path cost only — the insert call plus a blocking probe
+    find; the idle-window maintenance that the serve frontend runs between
+    batches (``Index.maybe_swap`` + a delta-bloat flush) is untimed,
+    exactly like ``serve.frontend._maintain``.
+
+    ``swap`` builds with the online KS monitor + ``swap_on_drift``: the
+    insert path defers all structural repair to the idle window, where the
+    bound-checked pool hot-swap absorbs drift pressure (rejected leaves
+    take their refit there too, off the serving path).  ``refit-only`` is
+    the same index without monitoring, so every over-budget leaf pays the
+    O(n) merge + refit storm inline.  The committed claim: swap-mode p99
+    per-key insert latency stays ~flat across the phase shifts while
+    refit-only spikes by an order of magnitude.
+
+    The zipf phase is drawn over base-*rank* space (hot CDF slots,
+    interpolated between neighbouring base keys), not raw key space — a
+    raw-key hot set lands on single wide leaves in sparse regions and
+    models an out-of-support workload rather than hot-key drift.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.api import Index
+    from repro.core import reuse, synth
+
+    def f32e(a):
+        # tracelint: ok[f32-cast](f32-exact key synthesis)
+        return np.unique(np.sort(np.asarray(a, np.float64))
+                         .astype(np.float32).astype(np.float64))
+
+    base = f32e(np.random.default_rng(10).lognormal(0.0, 0.5, n))
+    pool = reuse.build_pool(synth.generate_pool(eps, ns=256, seed=1),
+                            kind="linear", m_sim=64)
+    rows: list[dict] = []
+
+    def _row(impl, phase, ns, detail):
+        rows.append({"op": "drift-ingest", "impl": impl, "phase": phase,
+                     "n_keys": int(base.size), "ns_per_op": round(ns, 1),
+                     "detail": detail})
+        print(f"drift-ingest {impl:10s} {phase:16s} {ns:12.0f} ns/key(p99)"
+              f"  {detail}")
+
+    def _phases():
+        """The phase schedule, regenerated per pass (same seed -> every
+        pass sees byte-identical batches, so the warm pass compiles every
+        shape the measured pass will hit)."""
+        rng = np.random.default_rng(11)
+        nb = base.shape[0]
+        slots = rng.permutation(64)
+
+        def zipf(s):
+            # Hot CDF slots: zipf over 64 rank-space slots, keys drawn by
+            # interpolating between neighbouring base keys inside the slot
+            # (even per-leaf pressure — the hot set spans whole leaves).
+            r = slots[(rng.zipf(1.2, s) - 1) % 64]
+            pos = (r + rng.uniform(0.0, 1.0, s)) * (nb - 1) / 64.0
+            i = pos.astype(int)
+            frac = pos - i
+            return (base[i] * (1.0 - frac)
+                    + base[np.minimum(i + 1, nb - 1)] * frac)
+
+        return [("stationary", lambda s: rng.lognormal(0.0, 0.5, s)),
+                ("shift-lognormal", lambda s: rng.lognormal(0.9, 0.45, s)),
+                ("zipf-hot", zipf)]
+
+    def _run(impl, drift_kw, measure):
+        ix = Index.build(jnp.asarray(base), eps=eps, n_leaves=256,
+                         kind="linear", **drift_kw)
+        d = ix.backend
+
+        def maintain():
+            # The serve idle window: proactive swaps + deferred refits,
+            # plus the delta-bloat flush both modes share.
+            ix.maybe_swap()
+            if d.delta_live > d.base_n // 4:
+                d.flush_delta()
+
+        for phase, draw in _phases():
+            ts = []
+            rb_in = rb_mnt = 0
+            sw0, rj0 = d.swaps_committed, d.swap_rejects
+            for _ in range(batches):
+                b = f32e(draw(batch))
+                probe = b[:64]
+                r0 = d.rebuilds
+                t0 = time.perf_counter()
+                ix.insert(b)
+                jax.block_until_ready(ix.find(probe, path="jnp"))
+                ts.append((time.perf_counter() - t0) / b.size * 1e9)
+                rb_in += d.rebuilds - r0
+                r1 = d.rebuilds
+                maintain()
+                rb_mnt += d.rebuilds - r1
+            if measure:
+                score = (float(np.max(np.asarray(d.drift.score)))
+                         if d.drift is not None else 0.0)
+                _row(impl, phase, float(np.percentile(ts, 99)),
+                     f"batches={len(ts)} batch~{batch} "
+                     f"p50={np.percentile(ts, 50):.0f} "
+                     f"max={max(ts):.0f} "
+                     f"swaps={d.swaps_committed - sw0} "
+                     f"rejects={d.swap_rejects - rj0} "
+                     f"rebuilds_inline={rb_in} "
+                     f"rebuilds_maint={rb_mnt} ks={score:.3f}")
+
+    for impl, drift_kw in (
+            ("refit-only", {}),
+            ("swap", dict(pool=pool, drift_bins=64, drift_hi=0.02,
+                          drift_lo=0.01, swap_on_drift=True))):
+        _run(impl, drift_kw, measure=False)   # warm: compile every shape
+        _run(impl, drift_kw, measure=True)
+    return rows
+
+
+def drift_quick_rows(n: int = 1 << 14) -> list[dict]:
+    """CSV rows for benchmarks.run's ``drift`` suite (single-host)."""
+    return [{"name": f"drift_{r['impl']}_{r['phase']}",
+             "us_per_call": r["ns_per_op"] / 1e3,
+             "derived": r["detail"]}
+            for r in bench_drift(n, batches=4, batch=1500)]
+
+
 def _sharded_rows(n_shards: int, n: int) -> list[dict]:
     """Sharded rows via the shared forced-device-count worker call
     (harness.worker_suite — the host-device count locks at first jax
@@ -538,6 +673,14 @@ def main() -> None:
                      "snapshot cost vs index size, same-width restore, and "
                      "restore-resharded 4->2 (elastic restart); "
                      "full_rebuilds must stay 0.")
+    drows = bench_drift(min(args.n, 1 << 17))
+    harness.append_bench(
+        args.out, "drift", drows,
+        note="Drifting ingest (stationary -> shifted lognormal -> zipf) "
+             "through the repro.api.Index facade: p99 per-key "
+             "insert+maintenance latency, swap mode (online KS monitor + "
+             "bound-checked pool hot-swaps) vs refit-only — swap-mode p99 "
+             "must stay ~flat while refit-only spikes on merge storms.")
 
 
 if __name__ == "__main__":

@@ -54,6 +54,15 @@ _SUITE_ROW_KEYS = {
         "path",
         "ns_per_query",
     },
+    # the drift suite adds the ingest-phase column
+    ("BENCH_updates.json", "drift"): {
+        "op",
+        "impl",
+        "phase",
+        "n_keys",
+        "ns_per_op",
+        "detail",
+    },
 }
 
 _ENTRY_KEYS = {"sha", "suite", "mode", "date", "rows"}

@@ -85,7 +85,7 @@ def rmrt_rows(n: int = 200_000, q: int = 16_384):
 
 
 SUITES = ["table2", "fig5", "fig6", "table3", "fig7", "updates", "sharded",
-          "restack", "recover", "serve", "kernels", "rmrt"]
+          "restack", "recover", "drift", "serve", "kernels", "rmrt"]
 
 # --record routes each suite's rows into the matching committed trajectory
 # (appended keyed by git sha + suite — never regenerated; see
@@ -94,6 +94,7 @@ _RECORD_TARGETS = {
     "fig7": "BENCH_updates.json", "updates": "BENCH_updates.json",
     "sharded": "BENCH_updates.json", "restack": "BENCH_updates.json",
     "recover": "BENCH_updates.json",
+    "drift": "BENCH_updates.json",
     "serve": "BENCH_serve.json",
     "kernels": "BENCH_lookup.json", "rmrt": "BENCH_lookup.json",
 }
@@ -146,6 +147,10 @@ def main() -> None:
     if "recover" in only:
         from . import bench_updates
         by_suite["recover"] = bench_updates.recover_quick_rows(
+            **({"n": args.n} if args.n else {}))
+    if "drift" in only:
+        from . import bench_updates
+        by_suite["drift"] = bench_updates.drift_quick_rows(
             **({"n": args.n} if args.n else {}))
     if "serve" in only:
         from . import bench_serve

@@ -23,19 +23,21 @@ import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
-from repro.core import distributed
+from repro.api import Index
 from repro.data.indexed_dataset import IndexedDataset
-from repro.serve.frontend import BatchingFrontend, ServeConfig
+from repro.serve.frontend import BatchingFrontend, Request, ServeConfig
 
 mesh = jax.make_mesh((4,), ("data",))
 rng = np.random.default_rng(3)
 
 # --- multi-tenant serving front-end ----------------------------------------
+# Tenants build through the unified facade (repro.api.Index): mesh= selects
+# the sharded backend, and .backend hands the front-end its tenant object.
 tenants, live = [], []
 for i, (n, n_leaves) in enumerate(((1 << 16, 256), (1 << 14, 64))):
     keys = np.unique(np.sort(rng.lognormal(0, 1, n) * 1e6 + i * 1e12))
-    tenants.append(distributed.ShardedDynamicIndex.build(
-        jnp.asarray(keys), mesh, n_leaves=n_leaves))
+    tenants.append(Index.build(jnp.asarray(keys), mesh=mesh,
+                               n_leaves=n_leaves).backend)
     live.append(keys)
 
 with BatchingFrontend(tenants,
@@ -43,9 +45,10 @@ with BatchingFrontend(tenants,
     fe.warmup((1, 128))
 
     # one insert riding the same queue as the finds (applies before the
-    # coalesced batch's finds dispatch)
+    # coalesced batch's finds dispatch) — submitted as a typed Request,
+    # the primitive every submit_* convenience wrapper funnels through
     extra = np.asarray([live[1][-1] + 7.0, live[1][-1] + 9.0])
-    fe.submit_insert(1, extra).result(timeout=300.0)
+    fe.submit(Request(1, "insert", extra)).result(timeout=300.0)
     found, rank = fe.lookup(1, extra)
     assert found.all(), "inserted keys must be visible to the next find"
 

@@ -13,6 +13,7 @@ import numpy as np
 import jax.numpy as jnp
 
 import repro  # noqa: F401
+from repro.api import Index
 from repro.core import reuse, rmi, rmrt, synth
 from repro.kernels import ops
 
@@ -60,3 +61,17 @@ r = ops.index_lookup(qf, root_blk, mat, vec, kf,
 hit = float(jnp.mean((jnp.abs(keys[jnp.clip(r, 0, index.n-1)] - q)
                       / q < 1e-6).astype(jnp.float32)))
 print(f"Pallas fused-lookup kernel: {hit:.1%} within f32 resolution ✓")
+
+# the unified dynamic facade (repro.api.Index): one verb set over the
+# single-host and sharded backends — find/insert/delete/gather_range —
+# with the same pool driving Algorithm-1 reuse on rebuilds
+dyn = Index.build(keys[: 1 << 16], n_leaves=256)
+extra = np.asarray(keys[: 1 << 16])[-1] + np.asarray([3.0, 7.0])
+dyn.insert(extra)
+found, rank = dyn.find(extra, path="jnp")
+assert bool(jnp.all(found)), "facade must serve fresh inserts"
+lo, hi = dyn.find_range(extra[:1], extra[1:])
+(span,) = dyn.gather_range(lo, hi)
+assert span.size == 2
+print(f"repro.api.Index facade: dynamic insert + find + range exact ✓ "
+      f"({dyn.live_count} live keys)")

@@ -1,0 +1,167 @@
+"""``repro.api`` — the one facade over every dynamic index backend.
+
+``Index.build(keys, *, mesh=None, pool=None)`` returns a single object
+with the canonical verb set, dispatching to the single-host
+``core.updates.DynamicRMI`` (``mesh=None``) or the range-partitioned
+``core.distributed.ShardedDynamicIndex`` (``mesh`` given).  Verb-to-
+backend mapping (also documented in ``core.drift``):
+
+  =============  ====================================================
+  verb           backend call
+  =============  ====================================================
+  find           ``backend.find(q, path=...)`` -> (found, rank)
+  find_range     ``backend.find_range(lo, hi, path=...)``
+  insert         ``backend.insert_batch(keys)``
+  delete         ``backend.delete_batch(keys)``
+  gather         ``backend.live_keys()[ranks]``
+  gather_range   ``backend.gather_range(rank_lo, rank_hi)``
+  snapshot       ``persist.snapshot_dynamic`` | ``persist.snapshot_sharded``
+  restore        ``persist.restore_dynamic`` | ``persist.restore_sharded``
+  =============  ====================================================
+
+Drift-adaptive serving rides the same facade: pass ``drift_bins=`` (plus
+``drift_hi``/``drift_lo`` thresholds and ``swap_on_drift=True``) to
+``build`` and the backend maintains a per-shard KS drift score online;
+``maybe_swap()`` runs one bound-checked pool hot-swap pass and
+``drift_scores()`` exposes the ``(n_shards, 2)`` [score, latch] table.
+
+The per-backend entry points (``DynamicRMI.build``,
+``ShardedDynamicIndex.build``) remain importable and supported — the
+facade adds no state of its own, so mixing levels is safe — but new code
+should go through :class:`Index`.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+from .core import persist as persist_mod
+from .core.distributed import ShardedDynamicIndex
+from .core.updates import DynamicRMI
+
+__all__ = ["Index", "build_index"]
+
+
+def _as_store(src) -> persist_mod.SnapshotStore:
+    if isinstance(src, persist_mod.SnapshotStore):
+        return src
+    return persist_mod.SnapshotStore(str(src))
+
+
+@dataclass
+class Index:
+    """One dynamic learned index (module docstring: verb table).  Thin by
+    design: every verb forwards to the backend, so anything true of
+    ``DynamicRMI`` / ``ShardedDynamicIndex`` (rank semantics, path
+    selection, drift lifecycle) is true here verbatim."""
+    backend: object                     # DynamicRMI | ShardedDynamicIndex
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, keys, *, mesh=None, axis: str = "data", pool=None,
+              **kwargs) -> "Index":
+        """Build over sorted ``keys``.  ``mesh=None`` -> single-host
+        ``DynamicRMI``; a ``jax.sharding.Mesh`` -> ``ShardedDynamicIndex``
+        range-partitioned over ``mesh.shape[axis]`` shards.  ``pool`` is
+        the pre-trained ``reuse.ModelPool`` consulted by Algorithm 1 on
+        rebuilds and drift hot-swaps; remaining kwargs forward to the
+        backend ``build`` (``n_leaves``, ``eps``, ``drift_bins``,
+        ``swap_on_drift``, ...)."""
+        if mesh is None:
+            return cls(DynamicRMI.build(keys, pool=pool, **kwargs))
+        return cls(ShardedDynamicIndex.build(keys, mesh, axis=axis,
+                                             pool=pool, **kwargs))
+
+    @property
+    def sharded(self) -> bool:
+        return isinstance(self.backend, ShardedDynamicIndex)
+
+    # -- queries -----------------------------------------------------------
+    def find(self, queries, *, path: str = "auto"):
+        """(found, rank) device arrays per query — rank is the leftmost
+        live rank, indexing :meth:`gather`'s key order."""
+        return self.backend.find(queries, path=path)
+
+    def find_range(self, q_lo, q_hi, *, path: str = "auto"):
+        """(rank_lo, rank_hi) live ranks of the inclusive ranges
+        ``[q_lo[i], q_hi[i]]`` (degenerate ranges come back empty)."""
+        return self.backend.find_range(q_lo, q_hi, path=path)
+
+    # -- mutation ----------------------------------------------------------
+    def insert(self, keys) -> None:
+        self.backend.insert_batch(np.atleast_1d(np.asarray(keys)))
+
+    def delete(self, keys) -> None:
+        self.backend.delete_batch(np.atleast_1d(np.asarray(keys)))
+
+    # -- materialization ---------------------------------------------------
+    def gather(self, ranks) -> np.ndarray:
+        """Keys at the given live ranks (what :meth:`find` returned)."""
+        return self.backend.live_keys()[np.asarray(ranks, np.int64)]
+
+    def gather_range(self, rank_lo, rank_hi) -> list[np.ndarray]:
+        """Materialize :meth:`find_range` spans as per-range sorted live
+        key arrays."""
+        return self.backend.gather_range(rank_lo, rank_hi)
+
+    def live_keys(self) -> np.ndarray:
+        return self.backend.live_keys()
+
+    @property
+    def live_count(self) -> int:
+        return int(self.backend.total_live if self.sharded
+                   else self.backend.live_count)
+
+    # -- drift maintenance -------------------------------------------------
+    def maybe_swap(self) -> int:
+        """One drift-maintenance pass: bound-checked pool hot-swaps on the
+        drift-latched shards (no-op without ``drift_bins``).  Returns the
+        number of leaves swapped."""
+        return self.backend.maybe_swap()
+
+    def drift_scores(self) -> np.ndarray:
+        """(n_shards, 2) [KS score, drifted latch] rows (single-host:
+        one row).  All-zero when drift monitoring is off."""
+        if self.sharded:
+            return self.backend.drift_scores()
+        from .core import drift as drift_mod
+        return np.asarray(drift_mod.state_row(self.backend.drift))[None]
+
+    # -- durability --------------------------------------------------------
+    def snapshot(self, store, step: int = 0, *, blocking: bool = True,
+                 include_pool: bool = True) -> None:
+        """Write one checksummed, atomically-committed snapshot into
+        ``store`` (a ``persist.SnapshotStore`` or a directory path).
+        Drift-monitor state rides the snapshot."""
+        st = _as_store(store)
+        if self.sharded:
+            persist_mod.snapshot_sharded(st, step, self.backend,
+                                         blocking=blocking,
+                                         include_pool=include_pool)
+        else:
+            persist_mod.snapshot_dynamic(st, step, self.backend,
+                                         blocking=blocking,
+                                         include_pool=include_pool)
+
+    @classmethod
+    def restore(cls, store, *, mesh=None, axis: str = "data",
+                step: int | None = None) -> "Index":
+        """Restore from the newest verifiable snapshot in ``store`` (or
+        exactly ``step``).  ``mesh=None`` restores the single-host
+        backend; a mesh restores (and reshards onto) the sharded one."""
+        st = _as_store(store)
+        if mesh is None:
+            backend, _ = persist_mod.restore_dynamic(st, step=step)
+        else:
+            backend, _ = persist_mod.restore_sharded(st, mesh, axis,
+                                                     step=step)
+        return cls(backend)
+
+
+def build_index(keys, **kwargs) -> Index:
+    """Deprecated alias of :meth:`Index.build`."""
+    warnings.warn("build_index() is deprecated; use Index.build()",
+                  DeprecationWarning, stacklevel=2)
+    return Index.build(keys, **kwargs)

@@ -7,14 +7,21 @@ Public surface:
   rmi.build_rmi / rmi.lookup          — RMI, RMI-MR, RMI-NN, RMI-NN-MR
   rmrt.build_rmrt / rmrt.lookup       — the paper's RMRT
   updates.DynamicRMI                  — §4 insert handling (Lemma 4.1)
+  drift                               — online KS drift monitoring +
+                                        bound-checked pool hot-swaps
+  paths.resolve_path                  — the path="auto"|"kernel"|"jnp"
+                                        execution-path policy
   distributed.build_sharded           — multi-host sharded index service
   distributed.ShardedDynamicIndex     — sharded two-tier dynamic serving
                                         (per-shard delta tiers, routed
                                         updates, split rebalancing)
   btree / pgm / radix_spline          — baselines from the paper's roster
-"""
-from . import (adapt, bounds, btree, cdf, distributed, models, pgm,
-               radix_spline, reuse, rmi, rmrt, synth, updates)
 
-__all__ = ["adapt", "bounds", "btree", "cdf", "distributed", "models", "pgm",
-           "radix_spline", "reuse", "rmi", "rmrt", "synth", "updates"]
+The unified front door over the dynamic backends is ``repro.api.Index``.
+"""
+from . import (adapt, bounds, btree, cdf, distributed, drift, models, paths,
+               pgm, radix_spline, reuse, rmi, rmrt, synth, updates)
+
+__all__ = ["adapt", "bounds", "btree", "cdf", "distributed", "drift",
+           "models", "paths", "pgm", "radix_spline", "reuse", "rmi", "rmrt",
+           "synth", "updates"]

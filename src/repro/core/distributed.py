@@ -90,7 +90,9 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from . import drift as drift_mod
 from . import rmi as rmi_mod
+from .paths import resolve_path
 
 Array = jax.Array
 
@@ -227,6 +229,7 @@ def build_sharded(keys: Array, mesh: Mesh, axis: str = "data",
 
 def make_lookup_fn(index: ShardedIndex, *,
                    capacity_factor: float | None = None,
+                   path: str = "auto",
                    use_kernel: bool | None = None,
                    interpret: bool | None = None):
     """Returns a jitted distributed lookup: (q_local sharded on axis) ->
@@ -239,14 +242,13 @@ def make_lookup_fn(index: ShardedIndex, *,
     dropping queries beyond the budget (returned rank -1, retried by the
     caller) — EXPERIMENTS.md §Perf index-service iteration.
 
-    ``use_kernel`` routes the per-shard answer through the fused Pallas
-    kernel (``kernels.ops.index_lookup``: in-kernel routing + clamped tiled
-    search + sparse seam verification) instead of the clamped jnp path —
-    the same path-selection contract as ``rmi.lookup``: default on TPU
-    backends when every shard's keys are f32-exact, explicit True on a
-    non-f32-exact index raises (the kernel's f32 seam verification cannot
-    detect f32 key collisions).  ``interpret`` forwards to the kernel
-    (None = auto: interpreter off-TPU)."""
+    ``path`` routes the per-shard answer through the fused Pallas kernel
+    (``kernels.ops.index_lookup``: in-kernel routing + clamped tiled
+    search + sparse seam verification) or the clamped jnp path — the
+    shared :func:`core.paths.resolve_path` contract (``"auto"`` = kernel
+    on TPU backends when every shard's keys are f32-exact).
+    ``use_kernel=`` is the deprecated boolean shim.  ``interpret``
+    forwards to the kernel (None = auto: interpreter off-TPU)."""
     mesh, axis = index.mesh, index.axis
     n_shards = index.n_shards
     n_leaves = index.n_leaves
@@ -254,13 +256,9 @@ def make_lookup_fn(index: ShardedIndex, *,
 
     iters = index.search_iters      # static across shards; closure-captured
 
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
-    elif use_kernel and not index.f32_exact:
-        raise ValueError(
-            "use_kernel=True on a sharded key space that is not f32-exact: "
-            "the kernel's f32 seam verification cannot detect f32 key "
-            "collisions, so wrong positions would be returned silently")
+    use_kernel = resolve_path(path, f32_exact=lambda: index.f32_exact,
+                              use_kernel=use_kernel,
+                              what="sharded key space")
 
     if use_kernel:
         from ..kernels import ops as kernel_ops
@@ -508,6 +506,13 @@ class ShardedDynamicIndex:
     # soon as the shard's live count changes.  Tier-ratio triggers never
     # need this: their in-place flush/rebuild fallback always clears them.
     _muted: Array = None                # (n_shards,) i64 live count, -1 off
+    # Per-shard drift monitor mirror: (n_shards, 2) device table of
+    # [KS score, drifted latch] rows (``drift.state_row``), refreshed with
+    # the same O(touched) row scatters as the counter table so the
+    # maintenance trigger (``maybe_swap``) costs one sync, never a host
+    # scan over shard DriftStates.  All-zero when drift monitoring is off.
+    _drift: Array = None                # (n_shards, 2) f64 [score, drifted]
+    swaps_committed: int = 0            # pool hot-swaps across all shards
     # Host mirrors of per-shard shape/depth metadata, updated O(touched):
     # capacity classes decide when the global pad width must change, the
     # depth vector feeds the static search depth of the find trace.
@@ -557,6 +562,8 @@ class ShardedDynamicIndex:
             [[d.base_n, d.base_dead_count, d.delta_live, d.delta_dead_count]
              for d in self.shards], jnp.int64)
         self._muted = jnp.full((S,), -1, jnp.int64)
+        self._drift = jnp.stack(
+            [drift_mod.state_row(d.drift) for d in self.shards])
 
     def _touch(self, ids) -> None:
         """Mark shards mutated: refresh their counter rows (one batched
@@ -583,6 +590,9 @@ class ShardedDynamicIndex:
              for s in ids], np.int64)
         self._counts = self._counts.at[jnp.asarray(ids)].set(
             jnp.asarray(vals))
+        self._drift = self._drift.at[jnp.asarray(ids)].set(
+            jnp.stack([drift_mod.state_row(self.shards[s].drift)
+                       for s in ids]))
 
     # -- shape / bookkeeping ----------------------------------------------
     @property
@@ -737,6 +747,42 @@ class ShardedDynamicIndex:
             jnp.asarray(keys), pool=self.pool, eps=self.eps,
             n_leaves=self.n_leaves, **self.build_kwargs)
 
+    # -- drift maintenance -------------------------------------------------
+    def drift_scores(self) -> np.ndarray:
+        """(n_shards, 2) [KS score, drifted latch] snapshot of the device
+        drift table (one sync; all-zero when monitoring is off)."""
+        return np.asarray(self._drift)
+
+    def maybe_swap(self) -> int:
+        """Pool hot-swap pass over every drift-latched shard: read the
+        device drift table once (the only sync), run each flagged shard's
+        ``DynamicRMI.maybe_swap`` — Algorithm 1 pool selection over its
+        over-budget leaves, committed per leaf only when the on-device
+        Lemma 4.1 bound check holds — and push swapped shards through the
+        dirty-row slice cache (``_touch``), so new leaf/bound rows rewrite
+        in place on the next find instead of forcing a cold re-pad.
+        Returns the number of leaves swapped across all shards."""
+        if all(d.drift is None for d in self.shards):
+            return 0
+        latched = set(
+            np.flatnonzero(self.drift_scores()[:, 1] > 0.0).tolist())
+        total = 0
+        for s, d in enumerate(self.shards):
+            if d.drift is None:
+                continue
+            # Un-latched shards still take the maintenance pass: the
+            # per-shard call is where deferred over-budget refits run
+            # (swap-mode insert_batch keeps them off the insert path).
+            if s not in latched and not (d.n_inserts > d.budget).any():
+                continue
+            rb0 = d.rebuilds
+            n = d.maybe_swap()
+            if n or d.rebuilds != rb0:
+                total += n
+                self._touch([s])
+        self.swaps_committed += total
+        return total
+
     # -- serving: the per-shard slice cache --------------------------------
     # Invalidation contract (module docstring): mutations mark shards dirty
     # via _touch; _stacked rewrites exactly the dirty rows of the stacked
@@ -862,7 +908,8 @@ class ShardedDynamicIndex:
                                  for i in range(3))
         return st["packed"]
 
-    def find(self, queries, *, use_kernel: bool | None = None,
+    def find(self, queries, *, path: str = "auto",
+             use_kernel: bool | None = None,
              interpret: bool | None = None) -> tuple[Array, Array]:
         """(found, global live rank) per query, one ``shard_map`` dispatch:
         queries route to their owning shard by the split vector (capacity-
@@ -870,15 +917,11 @@ class ShardedDynamicIndex:
         find — the ``dynamic_lookup_pallas`` kernel via ``ops.dynamic_find``
         or the jnp oracle — and the globalized answer returns through the
         inverse exchange.  Path-selection contract mirrors
-        ``DynamicRMI.find`` (kernel default on TPU + f32-exact tiers)."""
+        ``DynamicRMI.find`` (:func:`core.paths.resolve_path`)."""
         q = jnp.asarray(queries, jnp.float64)
-        if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
-        elif use_kernel and not self.f32_exact:
-            raise ValueError(
-                "use_kernel=True on a sharded key space that is not "
-                "f32-exact: the kernel's f32 search cannot distinguish "
-                "f32-colliding keys")
+        use_kernel = resolve_path(path, f32_exact=lambda: self.f32_exact,
+                                  use_kernel=use_kernel,
+                                  what="sharded key space")
         st = self._stacked()
         Q = q.shape[0]
         qp = -(-max(Q, 1) // self.n_shards) * self.n_shards
@@ -896,7 +939,8 @@ class ShardedDynamicIndex:
                          st["dpsum"], tables, q)
         return found[:Q], rank[:Q]
 
-    def find_range(self, q_lo, q_hi, *, use_kernel: bool | None = None,
+    def find_range(self, q_lo, q_hi, *, path: str = "auto",
+                   use_kernel: bool | None = None,
                    interpret: bool | None = None) -> tuple[Array, Array]:
         """(rank_lo, rank_hi) global live ranks of the inclusive key ranges
         ``[q_lo[i], q_hi[i]]``, one ``shard_map`` dispatch: both endpoint
@@ -919,13 +963,9 @@ class ShardedDynamicIndex:
         qh = jnp.asarray(q_hi, jnp.float64)
         if ql.shape != qh.shape:
             raise ValueError("find_range endpoint arrays must pair up")
-        if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
-        elif use_kernel and not self.f32_exact:
-            raise ValueError(
-                "use_kernel=True on a sharded key space that is not "
-                "f32-exact: the kernel's f32 search cannot distinguish "
-                "f32-colliding keys")
+        use_kernel = resolve_path(path, f32_exact=lambda: self.f32_exact,
+                                  use_kernel=use_kernel,
+                                  what="sharded key space")
         st = self._stacked()
         Q = ql.shape[0]
         qp = -(-max(Q, 1) // self.n_shards) * self.n_shards

@@ -1,0 +1,322 @@
+"""Online drift monitoring + bound-checked hot-swap reuse (paper Alg. 1/2
+turned into a *serving-time* feature — the top open ROADMAP item).
+
+Drift-score lifecycle
+---------------------
+A :class:`DriftState` rides on every ``DynamicRMI`` (one per shard in the
+sharded index).  It is a pair of raw-count histograms over the build-time
+key domain ``[lo, hi]`` at resolution ``m``:
+
+  ``ref``   the accepted baseline — the build-time CDF (``core.cdf``
+            histogram of the base tier), later *re-baselined* when a
+            ``flush_delta`` merges every buffered insert into the base:
+            ``ref += acc; acc = 0; score = 0``.  Partial per-leaf
+            rebuilds do NOT rebaseline — the global score keeps tracking
+            the workload shift until an explicit flush accepts it.
+  ``acc``   every key inserted since the last rebaseline (accumulated at
+            ``insert_batch`` time in one scatter-add jit — no host sync;
+            deletes are not subtracted, a documented approximation).
+
+The drift score is the binned two-sample KS statistic (max CDF gap at
+the bin edges) between the normalized baseline and the normalized
+*mixture* ``ref + acc`` — the distance between the distribution the
+models were fitted on and the distribution the index currently stores.
+(Algorithm-2's ``hist_distance`` is deliberately NOT used for the score:
+its within-bin slack keeps it an upper bound for pool-selection
+soundness, at the price of a distribution-dependent floor — its
+self-distance is the max bin mass — which a threshold latch cannot
+tolerate.  The slack-bearing distance still governs pool *selection*
+inside the swap pass.)  Keys outside ``[lo, hi]`` clip into the edge
+bins, so domain-shifting workloads register immediately.  The score is
+zero at stationarity, monotone in both the shift magnitude and the
+drifted mass fraction, and lives on device (reading it is a
+maintenance-path sync).
+
+Threshold / hysteresis contract
+-------------------------------
+``drifted`` is a latch, not a comparison: it sets when ``score``
+crosses ``thresh_hi`` from below and clears only when ``score`` falls
+under ``thresh_lo`` (< thresh_hi) — or on rebaseline, which resets the
+score outright.  Scores inside the ``[thresh_lo, thresh_hi]`` band keep
+the previous value, so a score oscillating around either threshold
+cannot flap the latch, and maintenance never alternates swap/refit
+decisions on noise.
+
+Swap-commit semantics
+---------------------
+When the latch is set and a leaf exhausts its Lemma 4.1 insert budget,
+``DynamicRMI.maybe_swap`` tries an Algorithm-1 pool swap *instead of* the
+refit storm: one fused jit computes the touched leaves' current key
+histograms (base + delta tiers, searchsorted range counts), selects pool
+models (``select_from_pool_batch``), adapts them (Lemma 3.2 affine
+folds), measures post-swap residual bounds over the base tier, and
+derives fresh Lemma 4.1 budgets — then commits each leaf's swap with a
+*masked row write* iff, on device:
+
+  * the pool had an eligible model (``dist <= 1 - eps``),
+  * the fresh Lemma 4.1 budget covers every insert already buffered on
+    the leaf (the budget-exhaustion trigger falls silent — the swap buys
+    the headroom a refit would have bought, without the refit's merge +
+    retrain cost), and
+  * the new error window fits under the current clamped-depth width cap
+    (table contents change, shapes and search depth do not — zero
+    retraces).
+
+Leaves whose bound check fails fall back to the ordinary
+``_rebuild_leaves`` refit.  A committed swap replaces leaf params, error
+bounds, sim, and budget in place; the delta tier is untouched (models
+index only the base tier), so the swap is O(touched leaves), not O(n).
+
+Facade verb-to-backend mapping (``repro.api``)
+----------------------------------------------
+``Index.build(keys, mesh=None, pool=None)`` wraps ``DynamicRMI``
+(``mesh=None``) or ``ShardedDynamicIndex`` (mesh given).  Verbs map as:
+
+  ============== ============================ ===========================
+  verb            DynamicRMI backend           ShardedDynamicIndex backend
+  ============== ============================ ===========================
+  find            ``find``                     ``find``
+  find_range      ``find_range``               ``find_range``
+  insert          ``insert_batch``             ``insert``
+  delete          ``delete_batch``             ``delete``
+  gather          ``live_keys()[ranks]``       ``live_keys()[ranks]``
+  gather_range    ``gather_range``             ``gather_range``
+  snapshot        ``persist.snapshot_dynamic`` ``persist.snapshot_sharded``
+  restore         ``persist.restore_dynamic``  ``persist.restore_sharded``
+  ============== ============================ ===========================
+
+Drift state survives snapshot/restore/reshard (``core.persist`` carries
+``ref``/``acc``/``score``/``drifted`` plus the scalar config per shard).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import rmi as rmi_mod
+from .adapt import DomainSpec, adapt_linear, adapt_mlp
+from .bounds import insertion_budget
+from .reuse import select_from_pool_batch
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Drift state.
+# ---------------------------------------------------------------------------
+@dataclass
+class DriftState:
+    """Per-index (per-shard) online drift monitor — see the module
+    docstring for the lifecycle and hysteresis contract."""
+    m: int                  # histogram resolution (static)
+    lo: float               # build-time key domain (host scalars; keys
+    hi: float               # outside clip into the edge bins)
+    thresh_hi: float        # latch sets when score crosses this
+    thresh_lo: float        # latch clears when score falls under this
+    ref: Array              # (m,) f64 raw counts — accepted baseline
+    acc: Array              # (m,) f64 raw counts since last rebaseline
+    score: Array            # () f64 — Algorithm-2 distance, on device
+    drifted: Array          # () bool — the hysteresis latch, on device
+    updates: int = 0        # batches accumulated (host counter)
+    rebaselines: int = 0    # merge events absorbed (host counter)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _raw_hist_jit(keys: Array, lo, hi, *, m: int) -> Array:
+    """Raw-count histogram with ``cdf.histogram_stream``'s right-closed
+    binning; non-finite entries (capacity padding) drop out."""
+    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float64).tiny)
+    b = jnp.clip(jnp.ceil((keys - lo) / span * m).astype(jnp.int32) - 1,
+                 0, m - 1)
+    idx = jnp.where(jnp.isfinite(keys), b, m)
+    return jnp.zeros((m,), jnp.float64).at[idx].add(1.0, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _accumulate_jit(ref: Array, acc: Array, batch: Array, drifted: Array,
+                    lo, hi, thr_hi, thr_lo, *, m: int):
+    """Fold one insert batch into ``acc`` and refresh (score, latch) —
+    all on device, nothing for the caller to sync."""
+    acc = acc + _raw_hist_jit(batch, lo, hi, m=m)
+    ref_n = ref / jnp.maximum(ref.sum(), 1.0)
+    cur = ref + acc
+    cur_n = cur / jnp.maximum(cur.sum(), 1.0)
+    # Binned two-sample KS statistic: max CDF gap at the bin edges.  NOT
+    # Algorithm-2's hist_distance — that adds within-bin slack to stay an
+    # upper bound for pool-selection soundness (Eq. 3), which gives it a
+    # distribution-dependent floor (its self-distance is the max bin
+    # mass).  A threshold latch needs a score that is zero at
+    # stationarity and monotone in the shift, which the tight KS gap is.
+    score = jnp.max(jnp.abs(jnp.cumsum(ref_n) - jnp.cumsum(cur_n)))
+    drifted = jnp.where(score > thr_hi, True,
+                        jnp.where(score < thr_lo, False, drifted))
+    return acc, score, drifted
+
+
+@jax.jit
+def _rebase_jit(ref: Array, acc: Array):
+    return (ref + acc, jnp.zeros_like(acc), jnp.zeros((), jnp.float64),
+            jnp.zeros((), bool))
+
+
+def init_drift(sorted_keys, m: int = 64, thresh_hi: float = 0.15,
+               thresh_lo: float = 0.05) -> DriftState:
+    """Baseline a monitor on the build-time key array (build path — the
+    one-time domain sync is fine there)."""
+    if thresh_lo >= thresh_hi:
+        raise ValueError("hysteresis needs thresh_lo < thresh_hi, got "
+                         f"[{thresh_lo}, {thresh_hi}]")
+    keys = jnp.asarray(sorted_keys, jnp.float64)
+    if keys.shape[0] == 0:
+        lo, hi = 0.0, 1.0
+        ref = jnp.zeros((m,), jnp.float64)
+    else:
+        lo, hi = float(keys[0]), float(keys[-1])
+        if hi <= lo:
+            hi = lo + 1.0
+        ref = _raw_hist_jit(keys, jnp.float64(lo), jnp.float64(hi), m=m)
+    return DriftState(m=m, lo=lo, hi=hi, thresh_hi=thresh_hi,
+                      thresh_lo=thresh_lo, ref=ref,
+                      acc=jnp.zeros((m,), jnp.float64),
+                      score=jnp.zeros((), jnp.float64),
+                      drifted=jnp.zeros((), bool))
+
+
+def update_drift(state: DriftState, batch: Array) -> DriftState:
+    """Accumulate one insert batch (device-resident, no host sync)."""
+    acc, score, drifted = _accumulate_jit(
+        state.ref, state.acc, batch, state.drifted,
+        jnp.float64(state.lo), jnp.float64(state.hi),
+        jnp.float64(state.thresh_hi), jnp.float64(state.thresh_lo),
+        m=state.m)
+    return replace(state, acc=acc, score=score, drifted=drifted,
+                   updates=state.updates + 1)
+
+
+def rebaseline(state: DriftState) -> DriftState:
+    """Absorb ``acc`` into the baseline after a merge event (rebuild /
+    flush): the models were just refitted on the merged data, so the
+    stored distribution IS the new reference and the latch clears."""
+    ref, acc, score, drifted = _rebase_jit(state.ref, state.acc)
+    return replace(state, ref=ref, acc=acc, score=score, drifted=drifted,
+                   rebaselines=state.rebaselines + 1)
+
+
+def state_row(state: DriftState | None) -> Array:
+    """(2,) device row [score, drifted] for the sharded drift table —
+    the ``(n_shards, k)`` counter-table pattern of ``core.distributed``."""
+    if state is None:
+        return jnp.zeros((2,), jnp.float64)
+    return jnp.stack([state.score, state.drifted.astype(jnp.float64)])
+
+
+# ---------------------------------------------------------------------------
+# The fused swap pass.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("leaf_kind", "m", "n_leaves"))
+def swap_leaves_jit(base_keys: Array, buckets: Array, dk: Array,
+                    dleaf: Array, rid_p: Array, leaves, err_lo: Array,
+                    err_hi: Array, leaf_sim: Array, reused_mask: Array,
+                    sel_a: Array, sel_ps: Array, p_params, p_domains,
+                    n_ins: Array, win_cap, eps, *,
+                    leaf_kind: str, m: int, n_leaves: int):
+    """One fused Algorithm-1 swap attempt for the (pow2-padded) leaf rows
+    ``rid_p``: current-distribution histograms -> pool selection ->
+    Lemma 3.2 adaptation -> measured bounds over the base tier -> Lemma
+    4.1 budgets -> masked row commit.  Requires a monotone (linear) root:
+    every per-leaf range is a searchsorted run over the sorted tiers.
+
+    Returns the *committed* full tables plus per-row diagnostics
+    ``(leaves, err_lo, err_hi, sim, reused, commit, budget, width,
+    dist)`` — rows whose bound check fails keep their old values, and the
+    caller refits those leaves instead.  Padding rows repeat a real leaf
+    id and scatter identical values (harmless, keeps the jit cache keyed
+    on pow2 row counts only).
+    """
+    n = base_keys.shape[0]
+    nd = dk.shape[0]
+    rid = rid_p.astype(jnp.int32)
+    bs = jnp.searchsorted(buckets, rid, side="left").astype(jnp.int32)
+    be = jnp.searchsorted(buckets, rid, side="right").astype(jnp.int32)
+    # Delta runs: under the monotone root the routed-leaf table is
+    # non-decreasing over the sorted tier; -1 pads map past every leaf.
+    dl = jnp.where(dleaf >= 0, dleaf, n_leaves)
+    ds = jnp.searchsorted(dl, rid, side="left").astype(jnp.int32)
+    de = jnp.searchsorted(dl, rid, side="right").astype(jnp.int32)
+    bcnt = (be - bs).astype(jnp.float64)
+    dcnt = (de - ds).astype(jnp.float64)
+
+    # Combined key span across both tiers (the leaf's *current* data).
+    bk_lo = jnp.where(bcnt > 0, base_keys[jnp.clip(bs, 0, n - 1)], jnp.inf)
+    bk_hi = jnp.where(bcnt > 0, base_keys[jnp.clip(be - 1, 0, n - 1)],
+                      -jnp.inf)
+    dk_lo = jnp.where(dcnt > 0, dk[jnp.clip(ds, 0, nd - 1)], jnp.inf)
+    dk_hi = jnp.where(dcnt > 0, dk[jnp.clip(de - 1, 0, nd - 1)], -jnp.inf)
+    empty = (bcnt + dcnt) == 0
+    kmin = jnp.where(empty, 0.0, jnp.minimum(bk_lo, dk_lo))
+    kmax = jnp.where(empty, 1.0, jnp.maximum(bk_hi, dk_hi))
+    span = jnp.maximum(kmax - kmin, jnp.finfo(jnp.float64).tiny)
+
+    # Per-row combined histograms: searchsorted range counts at the bin
+    # edges over each sorted tier (cost ~ R*m, not n) — the incremental
+    # KS-distance input, same right-closed binning as cdf/leaf_histograms.
+    frac = jnp.arange(1, m, dtype=jnp.float64) / m
+    edges = (kmin[:, None] + span[:, None] * frac[None, :]).reshape(-1)
+
+    def range_counts(tier, s, e):
+        pos = jnp.searchsorted(tier, edges, side="right") \
+            .reshape(rid.shape[0], m - 1).astype(jnp.int32)
+        pos = jnp.clip(pos, s[:, None], e[:, None])
+        bounds = jnp.concatenate([s[:, None], pos, e[:, None]], 1)
+        return (bounds[:, 1:] - bounds[:, :-1]).astype(jnp.float64)
+
+    counts = range_counts(base_keys, bs, be) + range_counts(dk, ds, de)
+    hists = counts / jnp.maximum(counts.sum(1, keepdims=True), 1.0)
+
+    sel = select_from_pool_batch(sel_a, sel_ps, hists,
+                                 eps.astype(jnp.float32))
+
+    # Lemma 3.2 adaptation onto (combined key span -> base position span):
+    # the swapped model indexes the base tier only (the delta tier is
+    # probed by plain searchsorted), so bounds are measured on base keys.
+    pmin = bs.astype(jnp.float64)
+    pmax = jnp.maximum((be - 1).astype(jnp.float64), pmin)
+    tgt = DomainSpec(x_start=kmin,
+                     x_end=jnp.where(kmax > kmin, kmax, kmin + 1.0),
+                     y_start=pmin, y_end=jnp.maximum(pmax, pmin + 1.0))
+    src = jax.tree.map(lambda a: a[sel.index], p_domains)
+    pp = jax.tree.map(lambda a: a[sel.index], p_params)
+    adapt = adapt_linear if leaf_kind == "linear" else adapt_mlp
+    cand_rows = jax.vmap(adapt)(pp, src, tgt)
+
+    # Measured residual bounds of the candidate tree over the base tier
+    # (capacity pads route to the dump bucket and drop out of the scan).
+    cand = jax.tree.map(lambda full, new: full.at[rid].set(new),
+                        leaves, cand_rows)
+    pred = rmi_mod._leaf_predict_all(leaf_kind, cand, base_keys, buckets)
+    lo_all, hi_all = rmi_mod.segment_residual_bounds_sorted(pred, buckets,
+                                                            n_leaves)
+    nlo, nhi = lo_all[rid], hi_all[rid]
+    new_w = jnp.ceil(nhi) - jnp.floor(nlo) + 3.0   # bounds.window_widths
+    sim = 1.0 - sel.dist
+    new_budget = insertion_budget(sim, eps, bcnt)
+
+    # The on-device commit gate (module docstring "Swap-commit semantics").
+    commit = (sel.found & (bcnt > 1.0)
+              & (new_budget >= n_ins) & (new_w <= win_cap))
+
+    keep = lambda new, old: jnp.where(
+        jnp.expand_dims(commit, tuple(range(1, new.ndim))), new, old)
+    out_leaves = jax.tree.map(
+        lambda full, new: full.at[rid].set(keep(new, full[rid])),
+        leaves, cand_rows)
+    out_lo = err_lo.at[rid].set(jnp.where(commit, nlo, err_lo[rid]))
+    out_hi = err_hi.at[rid].set(jnp.where(commit, nhi, err_hi[rid]))
+    out_sim = leaf_sim.at[rid].set(jnp.where(commit, sim, leaf_sim[rid]))
+    out_reused = reused_mask.at[rid].set(commit | reused_mask[rid])
+    return (out_leaves, out_lo, out_hi, out_sim, out_reused, commit,
+            new_budget, new_w, sel.dist)

@@ -1,0 +1,68 @@
+"""Unified execution-path selection for every lookup surface.
+
+Historically each lookup entry point (``rmi.lookup``, ``rmrt.lookup``,
+``DynamicRMI.find/find_range``, ``ShardedDynamicIndex.find/find_range``,
+``distributed.make_lookup_fn``, the serve-front-end ``TenantPack``) carried
+its own ``use_kernel: bool | None`` tri-state plus a copy of the implicit
+f32-exactness fallback.  This module is now the single owner of that
+policy, exposed as a three-value enum:
+
+  ``path="auto"``    Pallas kernel on TPU backends when the key space is
+                     exactly f32-representable, jnp otherwise (the
+                     historical ``use_kernel=None`` behavior).
+  ``path="kernel"``  force the fused Pallas kernel; raises ``ValueError``
+                     when the key space is not f32-exact (the kernel
+                     searches and seam-verifies in f32, so f32-colliding
+                     f64 keys would resolve to wrong positions silently).
+  ``path="jnp"``     force the jnp oracle path (never touches exactness —
+                     the f64 fallback works for any key space).
+
+``use_kernel=`` is kept as a deprecated shim on every public entry point:
+``True`` maps to ``path="kernel"``, ``False`` to ``path="jnp"`` (``None``
+defers to ``path``), with a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable
+
+import jax
+
+PATHS = ("auto", "kernel", "jnp")
+
+
+def resolve_path(path: str = "auto", *,
+                 f32_exact: bool | Callable[[], bool],
+                 use_kernel: bool | None = None,
+                 what: str = "key space") -> bool:
+    """Resolve the ``path`` enum (or the deprecated ``use_kernel`` kwarg)
+    to a concrete use-the-kernel decision.
+
+    ``f32_exact`` may be a bool or a zero-arg callable — the callable is
+    only invoked when the decision actually needs exactness (``"auto"`` /
+    ``"kernel"``), so ``path="jnp"`` never pays the device round-trip of
+    computing it.  ``what`` names the key space in the error message so
+    sharded/tenant surfaces keep their specific wording.
+    """
+    if use_kernel is not None:
+        warnings.warn(
+            "use_kernel= is deprecated; pass path='kernel'|'jnp'|'auto' "
+            "instead", DeprecationWarning, stacklevel=3)
+        if path != "auto":
+            raise ValueError(
+                "pass either path= or the deprecated use_kernel=, not both")
+        path = "kernel" if use_kernel else "jnp"
+    if path not in PATHS:
+        raise ValueError(f"path must be one of {PATHS}, got {path!r}")
+    if path == "jnp":
+        return False
+    exact = f32_exact() if callable(f32_exact) else bool(f32_exact)
+    if path == "kernel":
+        if not exact:
+            raise ValueError(
+                f"path='kernel' on a {what} that is not f32-exact: the "
+                "kernel's f32 search and seam verification cannot "
+                "distinguish f32-colliding f64 keys, so wrong positions "
+                "would be returned silently")
+        return True
+    return jax.default_backend() == "tpu" and exact

@@ -387,6 +387,7 @@ class SnapshotStore:
 # Sharded dynamic index snapshots.
 # ---------------------------------------------------------------------------
 KIND_SHARDED = "sharded-dynamic-index"
+KIND_DYNAMIC = "dynamic-index"
 _SHARD_FMT = "shard_{:05d}.npz"
 
 _SHARD_SCALARS = (
@@ -395,7 +396,8 @@ _SHARD_SCALARS = (
     "capacity_shrinks")
 _IDX_COUNTERS = (
     "rebalances", "migrations_incremental", "migrations_full",
-    "restack_full", "restack_rows", "capacity_shrinks")
+    "restack_full", "restack_rows", "capacity_shrinks",
+    "swaps_committed")
 
 
 def _params_to(arrays: dict, prefix: str, params) -> None:
@@ -441,7 +443,24 @@ def _shard_arrays(d) -> tuple[dict, dict]:
                 n_leaves=int(idx.n_leaves),
                 compact_dead_ratio=_json_scalar(d.compact_dead_ratio),
                 reuse_on_rebuild=d.reuse_on_rebuild,
-                build_kwargs=d.build_kwargs)
+                build_kwargs=d.build_kwargs,
+                swap_on_drift=bool(d.swap_on_drift),
+                swaps_committed=int(d.swaps_committed),
+                swap_rejects=int(d.swap_rejects))
+    if d.drift is not None:
+        # Raw counts are the drift monitor's whole state; score/latch are
+        # tiny scalars synced here so restore needs no recompute pass.
+        arrays["drift.ref"] = np.asarray(d.drift.ref)
+        arrays["drift.acc"] = np.asarray(d.drift.acc)
+        meta["drift"] = {
+            "m": int(d.drift.m), "lo": float(d.drift.lo),
+            "hi": float(d.drift.hi),
+            "thresh_hi": float(d.drift.thresh_hi),
+            "thresh_lo": float(d.drift.thresh_lo),
+            "score": float(d.drift.score),
+            "drifted": bool(d.drift.drifted),
+            "updates": int(d.drift.updates),
+            "rebaselines": int(d.drift.rebaselines)}
     return arrays, meta
 
 
@@ -494,6 +513,25 @@ def _restore_shard(arrays: dict, meta: dict, pool):
         reuse_on_rebuild=meta["reuse_on_rebuild"],
         build_kwargs=dict(meta["build_kwargs"]))
     d.capacity_shrinks = int(meta.get("capacity_shrinks", 0))
+    # Drift-monitor state (meta.get: snapshots predating the drift schema
+    # restore with monitoring off, same backward-compat rule as
+    # capacity_shrinks).
+    d.swap_on_drift = bool(meta.get("swap_on_drift", False))
+    d.swaps_committed = int(meta.get("swaps_committed", 0))
+    d.swap_rejects = int(meta.get("swap_rejects", 0))
+    dm = meta.get("drift")
+    if dm is not None:
+        from . import drift as drift_mod
+        d.drift = drift_mod.DriftState(
+            m=int(dm["m"]), lo=float(dm["lo"]), hi=float(dm["hi"]),
+            thresh_hi=float(dm["thresh_hi"]),
+            thresh_lo=float(dm["thresh_lo"]),
+            ref=jnp.asarray(arrays["drift.ref"]),
+            acc=jnp.asarray(arrays["drift.acc"]),
+            score=jnp.float64(dm["score"]),
+            drifted=jnp.asarray(bool(dm["drifted"])),
+            updates=int(dm["updates"]),
+            rebaselines=int(dm["rebaselines"]))
     d._win = np.asarray(arrays["win"], np.float64)
     index._iters = clamped_depth(d._win, index.n)
     return d
@@ -559,6 +597,65 @@ def snapshot_sharded(store: SnapshotStore, step: int, idx, *,
         files["pool.npz"] = arrays
         meta["pool"] = pm
     store.save(step, files, meta, blocking=blocking)
+
+
+def snapshot_dynamic(store: SnapshotStore, step: int, d, *,
+                     blocking: bool = False,
+                     include_pool: bool = True) -> None:
+    """Snapshot a single-host ``DynamicRMI`` (the ``repro.api.Index``
+    local backend): the same per-shard array/meta schema as one shard of
+    :func:`snapshot_sharded` — both tiers, tombstones, fitted params,
+    Lemma 4.1 counters, window widths, and the drift-monitor state —
+    checksummed and atomically committed by ``store``."""
+    store.kind = KIND_DYNAMIC
+    arrays, m = _shard_arrays(d)
+    files = {_SHARD_FMT.format(0): arrays}
+    meta = {"shard": m}
+    if include_pool and d.pool is not None:
+        parr, pm = _pool_files(d.pool)
+        files["pool.npz"] = parr
+        meta["pool"] = pm
+    store.save(step, files, meta, blocking=blocking)
+
+
+def restore_dynamic(store: SnapshotStore, *, step: int | None = None,
+                    on_corrupt: str = "fallback"):
+    """Restore a single-host ``DynamicRMI`` from the newest verifiable
+    :func:`snapshot_dynamic` snapshot (or exactly ``step``), with the
+    same latest-complete fallback contract as :func:`restore_sharded`
+    (``"fallback"`` skips damaged snapshots, ``"raise"`` does not).
+    Returns (index, restored step)."""
+    if on_corrupt not in ("fallback", "raise"):
+        raise ValueError(f"unknown on_corrupt={on_corrupt!r}")
+    candidates = [step] if step is not None else \
+        list(reversed(store.steps()))
+    if not candidates:
+        raise SnapshotError(f"no snapshots in {store.directory}")
+    last_err = None
+    for cand in candidates:
+        try:
+            manifest = store.read_manifest(cand)
+            if manifest.get("kind") != KIND_DYNAMIC:
+                raise SnapshotCorruption(
+                    f"step {cand}: kind {manifest.get('kind')!r} is not "
+                    f"{KIND_DYNAMIC!r}")
+            meta = manifest["meta"]
+            pool = None
+            if "pool" in meta:
+                pool = _restore_pool(
+                    store.load_file(cand, "pool.npz", manifest),
+                    meta["pool"])
+            d = _restore_shard(
+                store.load_file(cand, _SHARD_FMT.format(0), manifest),
+                meta["shard"], pool)
+            return d, cand
+        except SnapshotCorruption as e:
+            last_err = e
+            if on_corrupt == "raise" or step is not None:
+                raise
+    raise SnapshotCorruption(
+        f"no verifiable snapshot among steps "
+        f"{sorted(candidates)}: last error: {last_err}")
 
 
 @dataclass

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from . import models
 from .adapt import DomainSpec, adapt_linear, adapt_mlp
 from .bounds import reuse_err_bounds
+from .paths import resolve_path
 from .reuse import ModelPool, PoolSelection, select_from_pool_batch
 
 Array = jax.Array
@@ -693,27 +694,22 @@ def bounded_search(keys: Array, queries: Array, lo: Array, hi: Array,
     return lo
 
 
-def lookup(index: RMIIndex, queries: Array, *, use_kernel: bool | None = None,
+def lookup(index: RMIIndex, queries: Array, *, path: str = "auto",
+           use_kernel: bool | None = None,
            clamp_iters: bool = True) -> Array:
-    """Serving lookup. ``use_kernel`` selects the fused Pallas kernel
-    (default: on TPU backends, and only when the key space is exactly
-    f32-representable — the kernel searches and seam-verifies in f32, so
-    f32-colliding f64 keys would resolve wrongly; the jnp path is the CPU
-    fast path, the kernel's oracle, and the f64 fallback). Note the kernel
-    path's left boundary is defined in f32 key space even for f32-exact
-    keys: a non-member f64 query within one f32 ulp of a key rounds onto it
-    and returns that key's position, where the f64 jnp path returns the
-    position after it. ``clamp_iters`` bounds the search depth by the
-    index's error window instead of log2(n)."""
+    """Serving lookup. ``path`` selects the execution path (see
+    ``core.paths.resolve_path``): ``"kernel"`` is the fused Pallas kernel,
+    ``"jnp"`` the CPU fast path / kernel oracle / f64 fallback, and
+    ``"auto"`` picks the kernel on TPU backends when the key space is
+    exactly f32-representable. Note the kernel path's left boundary is
+    defined in f32 key space even for f32-exact keys: a non-member f64
+    query within one f32 ulp of a key rounds onto it and returns that
+    key's position, where the f64 jnp path returns the position after it.
+    ``clamp_iters`` bounds the search depth by the index's error window
+    instead of log2(n). ``use_kernel`` is the deprecated bool shim."""
     iters = index.search_iters if clamp_iters else None
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
-    elif use_kernel and not index.f32_exact:
-        raise ValueError(
-            "use_kernel=True on a key space that is not f32-exact: the "
-            "kernel's f32 seam verification cannot detect f32 key "
-            "collisions, so wrong positions would be returned silently")
-    if use_kernel:
+    if resolve_path(path, f32_exact=lambda: index.f32_exact,
+                    use_kernel=use_kernel):
         from ..kernels import ops as kernel_ops
         from ..kernels.lookup import full_iters
         root, mat, vec = index.packed_tables()

@@ -25,6 +25,7 @@ import numpy as np
 from . import models
 from .adapt import DomainSpec, adapt_linear, adapt_mlp
 from .bounds import reuse_err_bounds
+from .paths import resolve_path
 from .reuse import ModelPool, select_from_pool_batch
 from .rmi import (leaf_histograms, leaf_stats, segment_linear_fit,
                   segment_residual_bounds, verified_search,
@@ -233,21 +234,16 @@ def build_rmrt(
 # ---------------------------------------------------------------------------
 # Lookup.
 # ---------------------------------------------------------------------------
-def lookup(index: RMRTIndex, queries: Array, *, use_kernel: bool | None = None,
+def lookup(index: RMRTIndex, queries: Array, *, path: str = "auto",
+           use_kernel: bool | None = None,
            clamp_iters: bool = True) -> Array:
-    """Serving lookup.  ``use_kernel`` selects the fused Pallas kernel —
-    descent AND clamped search in one kernel (default: on TPU backends, and
-    only for f32-exact key spaces; the masked-descent jnp path below is the
-    CPU fast path, the kernel's f64 reference, and the f64 fallback).  Same
-    path-selection semantics as ``rmi.lookup``."""
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" and index.f32_exact
-    elif use_kernel and not index.f32_exact:
-        raise ValueError(
-            "use_kernel=True on a key space that is not f32-exact: the "
-            "kernel's f32 seam verification cannot detect f32 key "
-            "collisions, so wrong positions would be returned silently")
-    if use_kernel:
+    """Serving lookup.  ``path="kernel"`` is the fused Pallas kernel —
+    descent AND clamped search in one kernel; the masked-descent jnp path
+    below is the CPU fast path, the kernel's f64 reference, and the f64
+    fallback.  Same path-selection semantics as ``rmi.lookup``
+    (``core.paths.resolve_path``; ``use_kernel`` is the deprecated shim)."""
+    if resolve_path(path, f32_exact=lambda: index.f32_exact,
+                    use_kernel=use_kernel):
         from ..kernels import ops as kernel_ops
         from ..kernels.lookup import full_iters
         iters = index.search_iters if clamp_iters else full_iters(index.n)

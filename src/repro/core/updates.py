@@ -32,6 +32,23 @@ the lookup path:
                  from a maintained per-leaf window-width vector (ROADMAP
                  "Update path x clamped depth") instead of being invalidated.
 
+  maybe_swap     drift-adaptive maintenance (PR 10; ``core.drift``): an
+                 online binned KS score over inserted keys vs the build-time
+                 CDF drives a ``drift_hi``/``drift_lo`` hysteresis latch.
+                 When latched, at-risk leaves (pressure past a quarter of
+                 their Lemma 4.1 budget) take an Algorithm-1 pool hot-swap in
+                 ONE fused jit — select, adapt, bound-check, commit — where a
+                 commit requires the refreshed budget to cover the buffered
+                 inserts and the new window to fit the current width cap, so
+                 the clamped search depth (and every jit keyed on it) is
+                 untouched: zero retraces across commits.  A committed swap
+                 starts a fresh budget epoch (``n_inserts`` resets — the
+                 bound check paid for the buffered inserts).  In swap mode
+                 (``swap_on_drift=True``) the insert path defers ALL
+                 structural repair here: budget-exhausted leaves wait for the
+                 idle-window maintenance pass, which sweeps them with the
+                 ordinary refit when a swap cannot absorb them.
+
 Routing is frozen at build time (``route_n``): the root model plus the
 build-time key count define a pure key->leaf hash, so base merges never
 remap existing keys between leaves and insert-time routing always matches
@@ -51,10 +68,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import drift as drift_mod
 from . import models
 from . import rmi as rmi_mod
 from .bounds import (clamped_depth, insertion_budget, insertion_headroom,
                      window_widths)
+from .paths import resolve_path
 from .reuse import ModelPool
 
 Array = jax.Array
@@ -472,6 +491,10 @@ class DynamicRMI:
     rebuilds: int = 0
     deleted: int = 0
     capacity_shrinks: int = 0           # tier capacity step-downs taken
+    # maybe_swap route cache: (keys ref, slice len, base, buckets) — valid
+    # while the base keys array object is unchanged (rebuild/flush replace
+    # it); keeps the maintenance pass O(selection), not O(base scan)
+    _swap_route: tuple | None = None
     # Rebuild re-indexing policy: None (auto) runs Algorithm-1 pool
     # selection only when a leaf refit requires *training* (MLP leaves) —
     # for linear leaves the closed-form segment refit is free, optimal, and
@@ -480,6 +503,13 @@ class DynamicRMI:
     # False disables it.
     reuse_on_rebuild: bool | None = None
     build_kwargs: dict = field(default_factory=dict)
+    # Online drift monitoring + hot-swap reuse (core.drift; None = off so
+    # the seed behavior — and every existing caller — is untouched).
+    drift: drift_mod.DriftState | None = None
+    swap_on_drift: bool = False         # try pool swaps before refits when
+                                        # the drift latch is set
+    swaps_committed: int = 0            # leaves hot-swapped (bound held)
+    swap_rejects: int = 0               # swap attempts that fell back
     _win: np.ndarray = None             # per-leaf window widths (depth calc)
     _delta_f32: bool | None = None
     _kroot: Array = None                # packed kernel root (frozen: the
@@ -490,7 +520,14 @@ class DynamicRMI:
     def build(cls, keys, pool=None, eps: float = 0.9,
               reuse_on_rebuild: bool | None = None,
               compact_dead_ratio: float | None = _COMPACT_RATIO,
+              drift_bins: int = 0, drift_hi: float = 0.15,
+              drift_lo: float = 0.05, swap_on_drift: bool = False,
               **rmi_kwargs):
+        """``drift_bins > 0`` turns on the online drift monitor
+        (``core.drift``) at that histogram resolution, with the
+        [drift_lo, drift_hi] hysteresis band; ``swap_on_drift`` addition-
+        ally lets budget-exhausted leaves try an Algorithm-1 pool swap
+        before the refit while the drift latch is set."""
         idx = rmi_mod.build_rmi(keys, pool=pool, **rmi_kwargs)
         n = idx.n
         # Frozen routing scale: floor at 1 so an empty build (a sharded
@@ -510,11 +547,16 @@ class DynamicRMI:
         # merges change shapes (and retrace jits) only on capacity doubling.
         from ..kernels.lookup import pad_capacity
         cap = _capacity(n)
+        drift = drift_mod.init_drift(idx.keys, m=drift_bins,
+                                     thresh_hi=drift_hi,
+                                     thresh_lo=drift_lo) \
+            if drift_bins else None
         padded = pad_capacity(idx.keys, cap)
         idx = replace(idx, keys=padded, _f32_exact=None, _packed=None)
         d = cls(index=idx, pool=pool, eps=eps, route_n=route_n, base_n=n,
                 reuse_on_rebuild=reuse_on_rebuild,
                 compact_dead_ratio=compact_dead_ratio,
+                drift=drift, swap_on_drift=swap_on_drift,
                 delta_keys=jnp.full((_MIN_CAP,), jnp.inf, jnp.float64),
                 delta_leaf=jnp.full((_MIN_CAP,), -1, jnp.int32),
                 delta_dead=jnp.zeros((_MIN_CAP,), bool),
@@ -559,11 +601,23 @@ class DynamicRMI:
         self.delta_psum = jnp.zeros((cap + 1,), jnp.int32)
         self.delta_live += keys.size
         self._delta_f32 = None
+        if self.drift is not None:
+            self.drift = drift_mod.update_drift(self.drift, k)
         cnt = np.asarray(_batch_counts_sorted(lv, idx.n_leaves)
                          if idx.root_kind == "linear"
                          else jnp.bincount(lv, length=idx.n_leaves))
         self.n_inserts += cnt
         over = np.flatnonzero(self.n_inserts > self.budget)
+        if over.size and self.swap_on_drift and self.drift is not None \
+                and self.pool is not None:
+            # Drift-adaptive serving mode: structural repair is deferred
+            # to the next idle-window maintenance pass (``maybe_swap``
+            # sweeps budget-exhausted leaves — hot-swap when the bound
+            # holds, refit otherwise).  Queries stay exact meanwhile:
+            # buffered inserts live in the delta tier, which find/gather
+            # search directly, so the insert path itself never pays an
+            # O(n) merge or an O(pool) swap pass.
+            return
         if over.size:
             self._rebuild_leaves(over)
 
@@ -698,6 +752,10 @@ class DynamicRMI:
                     n_inserts=self.n_inserts.copy(),
                     budget=self.budget.copy(),
                     build_kwargs=dict(self.build_kwargs))
+        if self.drift is not None:
+            # Device arrays are immutable and updates rebind a fresh
+            # DriftState, so a shallow copy fully decouples the clones.
+            d.drift = replace(self.drift)
         d._win = self._win.copy()
         return d
 
@@ -760,6 +818,14 @@ class DynamicRMI:
         lid = np.flatnonzero(np.asarray(cnt))
         if lid.size:
             self._rebuild_leaves(lid)
+        # Full merge event: every buffered insert is now part of the base
+        # tier and its leaves were refitted on it, so the drift baseline
+        # absorbs the accumulated histogram and the latch clears
+        # (core.drift lifecycle; partial per-leaf rebuilds do NOT
+        # rebaseline — the global score keeps tracking the workload shift
+        # until an explicit flush accepts it).
+        if self.drift is not None:
+            self.drift = drift_mod.rebaseline(self.drift)
 
     @property
     def insertion_headroom(self) -> float:
@@ -893,6 +959,99 @@ class DynamicRMI:
         self.budget[leaf_ids] = np.asarray(budget)[leaf_ids]
         self.n_inserts[leaf_ids] = 0
 
+    # -- drift-triggered hot swap ------------------------------------------
+    def maybe_swap(self, leaf_ids=None) -> int:
+        """Attempt an Algorithm-1 pool hot-swap on ``leaf_ids`` (default:
+        every leaf with buffered inserts): one fused jit selects, adapts,
+        bound-checks, and commits per-leaf — see ``core.drift`` for the
+        commit gate.  Returns the number of leaves swapped.  Requires a
+        monotone (linear) root and a kind-matched pool; otherwise (or with
+        drift monitoring off) it is a no-op and callers fall through to
+        the ordinary refit path."""
+        idx = self.index
+        if (self.drift is None or self.pool is None
+                or self.pool.kind != idx.leaf_kind
+                or idx.root_kind != "linear"):
+            return 0
+        if leaf_ids is None:
+            # Maintenance-style call (facade / serve idle window).
+            # Proactive swaps only fire when the drift latch is set,
+            # mirroring the sharded pass; explicit leaf_ids (tests,
+            # targeted callers) skip the gate — the caller already
+            # decided to attempt.
+            swaps = 0
+            if bool(self.drift.drifted):
+                # Only at-risk leaves: pressure within a quarter
+                # Lemma-4.1 budget of forcing a merge.  A committed swap
+                # resets their budget from the pool fit; swapping
+                # low-pressure leaves would only shrink budgets (pool
+                # sim < fresh-fit sim) and churn the packed tables.
+                at_risk = np.flatnonzero(
+                    self.n_inserts >= np.maximum(self.budget * 0.25, 1.0))
+                if at_risk.size:
+                    swaps = self.maybe_swap(at_risk)
+            # Deferred-refit sweep (latched or not): ``insert_batch`` in
+            # swap mode leaves budget-exhausted leaves for this idle
+            # window — leaves a swap could not absorb (bound-check
+            # reject, or no drift latch) take the ordinary refit here,
+            # off the insert path.
+            over = np.flatnonzero(self.n_inserts > self.budget)
+            if over.size:
+                self._rebuild_leaves(over)
+            return swaps
+        leaf_ids = np.asarray(leaf_ids, np.int64).ravel()
+        if leaf_ids.size == 0:
+            return 0
+        if self.pool.sel_a is None:
+            self.pool._refresh_tables()
+        rp = 1 << max(int(leaf_ids.size) - 1, 0).bit_length()
+        pad_ids = np.concatenate(
+            [leaf_ids, np.full(rp - leaf_ids.size, leaf_ids[0])])
+        cap = idx.keys.shape[0]
+        sl = min(cap, -(-self.base_n // 8192) * 8192)
+        rc = self._swap_route
+        if rc is None or rc[0] is not idx.keys or rc[1] != sl:
+            base = idx.keys[:sl]
+            buckets = _routed_buckets(idx.root_kind, idx.root, base,
+                                      idx.n_leaves, self.route_n)
+            self._swap_route = rc = (idx.keys, sl, base, buckets)
+        base, buckets = rc[2], rc[3]
+        out = drift_mod.swap_leaves_jit(
+            base, buckets, self.delta_keys, self.delta_leaf,
+            jnp.asarray(pad_ids.astype(np.int32)),
+            idx.leaves, idx.err_lo, idx.err_hi, idx.leaf_sim,
+            idx.reused_mask, self.pool.sel_a, self.pool.sel_ps,
+            self.pool.params, self.pool.domains,
+            jnp.asarray(self.n_inserts[pad_ids], jnp.float64),
+            jnp.float64(float(self._win.max())), jnp.float64(self.eps),
+            leaf_kind=idx.leaf_kind, m=self.pool.m, n_leaves=idx.n_leaves)
+        leaves, err_lo, err_hi, sim, reused, commit, nbud, nw, _ = out
+        # One maintenance-path sync of the commit verdicts; the table
+        # writes themselves already happened asynchronously on device.
+        commit_np = np.asarray(commit)[:leaf_ids.size]
+        nc = int(commit_np.sum())
+        self.swap_rejects += int(leaf_ids.size) - nc
+        if nc == 0:
+            return 0
+        self.index = replace(idx, leaves=leaves, err_lo=err_lo,
+                             err_hi=err_hi, leaf_sim=sim,
+                             reused_mask=reused, _packed=None)
+        # Commit gate bounds every new window by the current width cap, so
+        # the clamped search depth — and every jit keyed on it — is
+        # untouched: zero retraces across swap commits.
+        cid = leaf_ids[commit_np]
+        self.budget[cid] = np.asarray(nbud)[:leaf_ids.size][commit_np]
+        self._win[cid] = np.asarray(nw)[:leaf_ids.size][commit_np]
+        # The committed window covers the leaf's buffered inserts (that is
+        # what the bound check verified), so the swap starts a fresh
+        # budget epoch: pending pressure is paid for, the new budget
+        # meters future inserts.  Without this, pressure accumulates
+        # across swaps and every leaf still ends in a merge.
+        self.n_inserts[cid] = 0
+        self.swaps_committed += nc
+        self.pool.reuse_count += nc
+        return nc
+
     # -- queries -----------------------------------------------------------
     @property
     def f32_exact(self) -> bool:
@@ -902,22 +1061,17 @@ class DynamicRMI:
             self._delta_f32 = bool(jnp.all(d32 == self.delta_keys))
         return self.index.f32_exact and self._delta_f32
 
-    def find(self, queries: Array, *, use_kernel: bool | None = None
-             ) -> tuple[Array, Array]:
+    def find(self, queries: Array, *, path: str = "auto",
+             use_kernel: bool | None = None) -> tuple[Array, Array]:
         """(found, rank) per query. ``found`` is True iff a live (non-
         tombstoned) copy of the key exists in either tier; ``rank`` counts
-        live keys < q across both tiers.  Default path selection mirrors
-        ``rmi.lookup``: the fused Pallas kernel on TPU backends with
-        f32-exact tiers, the jitted f64 oracle otherwise."""
+        live keys < q across both tiers.  ``path`` selects the execution
+        path (``core.paths.resolve_path``, same policy as ``rmi.lookup``);
+        ``use_kernel`` is the deprecated bool shim."""
         idx = self.index
         q = jnp.asarray(queries, jnp.float64)
-        if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
-        elif use_kernel and not self.f32_exact:
-            raise ValueError(
-                "use_kernel=True on a key space that is not f32-exact: the "
-                "kernel's f32 search cannot distinguish f32-colliding keys")
-        if use_kernel:
+        if resolve_path(path, f32_exact=lambda: self.f32_exact,
+                        use_kernel=use_kernel):
             from ..kernels import ops as kernel_ops
             root, mat, vec = idx.packed_tables()
             return kernel_ops.dynamic_find(
@@ -934,7 +1088,7 @@ class DynamicRMI:
             route_n=self.route_n, iters=idx.search_iters)
         return found, rank
 
-    def find_range(self, q_lo: Array, q_hi: Array, *,
+    def find_range(self, q_lo: Array, q_hi: Array, *, path: str = "auto",
                    use_kernel: bool | None = None) -> tuple[Array, Array]:
         """(rank_lo, rank_hi) live ranks of the inclusive key ranges
         ``[q_lo[i], q_hi[i]]``: rank_lo is the leftmost live rank of q_lo,
@@ -946,13 +1100,8 @@ class DynamicRMI:
         idx = self.index
         ql = jnp.asarray(q_lo, jnp.float64)
         qh = jnp.asarray(q_hi, jnp.float64)
-        if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu" and self.f32_exact
-        elif use_kernel and not self.f32_exact:
-            raise ValueError(
-                "use_kernel=True on a key space that is not f32-exact: the "
-                "kernel's f32 search cannot distinguish f32-colliding keys")
-        if use_kernel:
+        if resolve_path(path, f32_exact=lambda: self.f32_exact,
+                        use_kernel=use_kernel):
             from ..kernels import ops as kernel_ops
             root, mat, vec = idx.packed_tables()
             return kernel_ops.range_lookup(

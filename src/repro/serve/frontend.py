@@ -48,9 +48,19 @@ Pipeline (the latency-budget / capacity-class contract)::
   (``core.distributed._tenant_stacked_range_fn``) on a [lo block | hi
   block] query row with its own capacity class.  Both endpoints of every
   pair count toward the ``max_batch`` early-cut, so one scan-heavy caller
-  can't starve the coalescer.  Every request kind — finds, ranges, and
-  mutations — rejects non-finite keys at submit (a NaN/±inf insert would
-  poison the sorted delta tier, whose pad sentinel is ``+inf``).
+  can't starve the coalescer.
+* **Typed requests**: every submission surface funnels through
+  ``submit(Request(tenant, kind, payload))`` — the ``submit_*`` methods
+  are thin constructors.  Payload validation (the kind filter, the
+  finiteness rejection that protects the +inf-padded delta tier, range
+  endpoint pairing) lives in exactly one place: the :class:`Request`
+  constructor.
+* **Idle-window drift maintenance**: when the queue drains after a batch,
+  the dispatcher thread gives each tenant one pool hot-swap pass
+  (``ShardedDynamicIndex.maybe_swap``) — drift-latched shards try the
+  Lemma 4.1 bound-checked leaf swaps and ride the dirty-row slice cache
+  back into the stacked state, so adaptation happens *between* batches
+  with zero retraces and no refit stalls on the serving path.
 """
 from __future__ import annotations
 
@@ -64,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import distributed as dist_mod
+from ..core.paths import resolve_path
 from ..kernels.lookup import capacity_class, pad_packed_leaves
 
 Array = jax.Array
@@ -78,17 +89,51 @@ class ServeConfig:
     pipeline_depth: int = 2           # batches in flight (double-buffered)
 
 
+REQUEST_KINDS = ("find", "range", "insert", "delete")
+
+
 class Request:
-    """Future returned by ``BatchingFrontend.submit_*``."""
+    """One typed serving request — and the future its caller waits on.
+
+    Validation lives HERE, in exactly one place, for every submission
+    surface (``frontend.submit`` and the thin ``submit_*`` wrappers):
+
+      * ``kind`` must be one of ``find | range | insert | delete`` — an
+        unrecognized kind would fall through the dispatcher's kind
+        filters and leave its caller waiting forever;
+      * keys coerce to f64 and must be **finite**: a NaN/±inf insert or
+        delete would poison the sorted delta tier (+inf is the delta pad
+        sentinel, so a +inf insert silently corrupts every later merge),
+        and a non-finite find/range key would walk the rank algebra into
+        the exchange's +inf capacity padding;
+      * a range's payload is the (2, n) ``[lo; hi]`` endpoint stack —
+        endpoint arrays must pair up.
+    """
     __slots__ = ("tenant", "kind", "keys", "arrival", "done_at", "found",
                  "rank", "rank_lo", "rank_hi", "error", "_event")
 
-    def __init__(self, tenant: int, kind: str, keys: np.ndarray,
-                 arrival: float):
-        self.tenant = tenant
-        self.kind = kind          # "find" | "range" | "insert" | "delete"
+    def __init__(self, tenant: int, kind: str, keys,
+                 arrival: float | None = None):
+        if kind not in REQUEST_KINDS:
+            raise ValueError(
+                f"kind must be one of {REQUEST_KINDS}, got {kind!r}")
+        keys = np.asarray(keys, np.float64)
+        if kind == "range":
+            if keys.ndim != 2 or keys.shape[0] != 2:
+                raise ValueError(
+                    "range payload must be the (2, n) [lo; hi] endpoint "
+                    "stack: endpoint arrays must pair up")
+        else:
+            keys = np.atleast_1d(keys)
+            if keys.ndim != 1:
+                raise ValueError(f"{kind} payload must be a key vector, "
+                                 f"got shape {keys.shape}")
+        if not np.all(np.isfinite(keys)):
+            raise ValueError(f"{kind} keys must be finite")
+        self.tenant = int(tenant)
+        self.kind = kind          # one of REQUEST_KINDS
         self.keys = keys          # (n,) keys; ranges carry (2, n) endpoints
-        self.arrival = arrival
+        self.arrival = arrival    # stamped by submit() when None
         self.done_at = None               # completion time (frontend clock)
         self.found = None
         self.rank = None
@@ -163,7 +208,8 @@ class TenantPack:
     scatters), and re-assembles cold only when a cross-tenant capacity
     class crosses a pow2."""
 
-    def __init__(self, tenants: list, *, use_kernel: bool | None = None,
+    def __init__(self, tenants: list, *, path: str = "auto",
+                 use_kernel: bool | None = None,
                  interpret: bool | None = None):
         if not tenants:
             raise ValueError("TenantPack needs at least one tenant")
@@ -173,14 +219,9 @@ class TenantPack:
             raise ValueError("tenants must share one mesh and axis")
         if len(kinds) != 1:
             raise ValueError(f"tenants must share one leaf kind: {kinds}")
-        f32 = all(t.f32_exact for t in tenants)
-        if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu" and f32
-        elif use_kernel and not f32:
-            raise ValueError(
-                "use_kernel=True with a tenant key space that is not "
-                "f32-exact: the kernel's f32 search cannot distinguish "
-                "f32-colliding keys")
+        use_kernel = resolve_path(
+            path, f32_exact=lambda: all(t.f32_exact for t in tenants),
+            use_kernel=use_kernel, what="tenant key space")
         self.tenants = tenants
         self.mesh, self.axis = mesh, axis
         self.use_kernel = bool(use_kernel)
@@ -356,6 +397,7 @@ class FrontendStats:
     queries: int = 0              # live find keys served
     ranges: int = 0               # live range pairs served
     updates: int = 0              # insert/delete keys applied
+    swaps: int = 0                # drift-maintenance pool hot-swaps
     padded_slots: int = 0         # pad lanes dispatched (wasted work)
     qcaps: set = field(default_factory=set)   # capacity classes seen
 
@@ -379,11 +421,12 @@ class BatchingFrontend:
     through the batcher into stacked dispatches (module docstring).  Use
     as a context manager, or ``start()``/``stop()`` explicitly."""
 
-    def __init__(self, tenants: list, *, use_kernel: bool | None = None,
+    def __init__(self, tenants: list, *, path: str = "auto",
+                 use_kernel: bool | None = None,
                  interpret: bool | None = None,
                  config: ServeConfig | None = None, clock=time.monotonic):
         self.config = config or ServeConfig()
-        self.pack = TenantPack(tenants, use_kernel=use_kernel,
+        self.pack = TenantPack(tenants, path=path, use_kernel=use_kernel,
                                interpret=interpret)
         self.stats = FrontendStats()
         self.clock = clock
@@ -432,26 +475,26 @@ class BatchingFrontend:
             jax.block_until_ready((found, rank, rlo, rhi))
 
     # -- submission --------------------------------------------------------
-    def _submit(self, tenant: int, kind: str, keys) -> Request:
+    def submit(self, request: Request) -> Request:
+        """THE submission verb: enqueue one constructed :class:`Request`.
+        Payload validation (finiteness, kind filter, range pairing)
+        already ran on the Request constructor — this only checks the
+        frontend-level facts (started, known tenant), stamps the arrival
+        clock, and offers the request to the coalescer.  The ``submit_*``
+        convenience wrappers below all funnel through here."""
         if self._thread is None:
             raise RuntimeError("frontend not started")
-        if not 0 <= int(tenant) < self.pack.n_tenants:
-            raise ValueError(f"unknown tenant {tenant}")
-        keys = np.atleast_1d(np.asarray(keys, np.float64))
-        # Every kind validates: a NaN/±inf key in an insert or delete would
-        # poison the sorted delta tier (+inf is the delta pad sentinel, so a
-        # +inf insert silently corrupts every later merge), and a non-finite
-        # range endpoint would walk the rank algebra into capacity padding.
-        if not np.all(np.isfinite(keys)):
-            raise ValueError(f"{kind} keys must be finite")
-        req = Request(int(tenant), kind, keys, self.clock())
+        if not 0 <= request.tenant < self.pack.n_tenants:
+            raise ValueError(f"unknown tenant {request.tenant}")
+        if request.arrival is None:
+            request.arrival = self.clock()
         with self._cond:
-            self.batcher.offer(req)
+            self.batcher.offer(request)
             self._cond.notify_all()
-        return req
+        return request
 
     def submit_find(self, tenant: int, keys) -> Request:
-        return self._submit(tenant, "find", keys)
+        return self.submit(Request(tenant, "find", keys))
 
     def submit_range(self, tenant: int, lo_keys, hi_keys) -> Request:
         """Inclusive key ranges ``[lo, hi]`` -> ``(rank_lo, rank_hi)``
@@ -460,14 +503,16 @@ class BatchingFrontend:
         lo = np.atleast_1d(np.asarray(lo_keys, np.float64))
         hi = np.atleast_1d(np.asarray(hi_keys, np.float64))
         if lo.shape != hi.shape:
-            raise ValueError("range endpoint arrays must pair up")
-        return self._submit(tenant, "range", np.stack([lo, hi]))
+            raise ValueError(
+                "range payload must be the (2, n) [lo; hi] endpoint "
+                "stack: endpoint arrays must pair up")
+        return self.submit(Request(tenant, "range", np.stack([lo, hi])))
 
     def submit_insert(self, tenant: int, keys) -> Request:
-        return self._submit(tenant, "insert", keys)
+        return self.submit(Request(tenant, "insert", keys))
 
     def submit_delete(self, tenant: int, keys) -> Request:
-        return self._submit(tenant, "delete", keys)
+        return self.submit(Request(tenant, "delete", keys))
 
     def lookup(self, tenant: int, keys, timeout: float | None = 60.0):
         """Synchronous convenience: submit one find and wait."""
@@ -592,6 +637,28 @@ class BatchingFrontend:
                 req.done_at = self.clock()
                 req._event.set()
 
+    def _maintain(self) -> None:
+        """Idle-window drift maintenance, run on the dispatcher thread
+        between batches when the queue has drained: one pool hot-swap pass
+        per tenant (``ShardedDynamicIndex.maybe_swap`` — per-leaf Lemma
+        4.1 bound-checked commits on the drift-latched shards, riding the
+        dirty-row slice cache).  Swaps rewrite stacked row *contents*,
+        never shapes or search depths, so the warm find/range traces
+        survive — the serve TRACE_COUNTS guard pins zero retraces across
+        swap commits.  The same pass also runs the deferred-refit sweep:
+        in swap mode the insert path never does structural work, so
+        budget-exhausted leaves a swap could not absorb take their O(n)
+        merge + refit HERE, in the idle window, off the serving path
+        (refits may legitimately retrace — they change base shapes and
+        can widen the clamped search depth).  Tenants without drift
+        monitoring short-circuit on a host flag; the per-pass cost for
+        monitored tenants is the one drift-table sync inside
+        ``maybe_swap``."""
+        for t in self.pack.tenants:
+            swap = getattr(t, "maybe_swap", None)
+            if swap is not None:
+                self.stats.swaps += swap()
+
     def _loop(self) -> None:
         while True:
             batch = self._collect()
@@ -608,5 +675,7 @@ class BatchingFrontend:
             while len(self._inflight) >= self.config.pipeline_depth or \
                     (self._inflight and not len(self.batcher)):
                 self._resolve(self._inflight.popleft())
+            if not len(self.batcher):
+                self._maintain()
         while self._inflight:
             self._resolve(self._inflight.popleft())

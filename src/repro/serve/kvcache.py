@@ -89,30 +89,33 @@ class PagedKVCache:
         return self.kv[layer, 0, p], self.kv[layer, 1, p]
 
 
-def learned_page_table(table: dict, *, use_kernel: bool | None = None):
+def learned_page_table(table: dict, *, path: str = "auto",
+                       use_kernel: bool | None = None):
     """Build a learned index over the page table's flat key space.
 
     Returns (lookup_fn, keys, pages): lookup_fn(query_keys) -> page ids via
     the paper's RMI lookup path with the error-window-clamped search depth.
     The packed (req << 22 | block) keys exceed 2^24 once req > 3 and then do
     not round-trip through f32, so the f32 Pallas kernel path is only legal
-    for small tables — ``use_kernel=True`` is rejected when the key space is
+    for small tables — ``path="kernel"`` is rejected when the key space is
     not f32-exact (the kernel's f32 seam verification cannot detect f32 key
-    collisions). Used by benchmarks to compare dense vs learned table lookup
-    at scale."""
+    collisions; ``use_kernel=`` is the deprecated bool shim, see
+    ``core.paths``). Used by benchmarks to compare dense vs learned table
+    lookup at scale."""
     from repro.core import rmi as rmi_mod
+    from repro.core.paths import resolve_path
     items = sorted(table.items())
     keys = jnp.asarray([float((r << _BLOCK_BITS) | b) for (r, b), _ in items])
     pages = jnp.asarray([p for _, p in items], jnp.int32)
     idx = rmi_mod.build_rmi(keys, n_leaves=max(len(items) // 64, 1),
                             kind="linear")
-    if use_kernel and not idx.f32_exact:
-        raise ValueError(
-            "learned_page_table: key space is not f32-exact; the Pallas "
-            "kernel path would resolve colliding keys to wrong page ids")
+    kernel = resolve_path(path, f32_exact=lambda: idx.f32_exact,
+                          use_kernel=use_kernel,
+                          what="page-table key space")
 
     def lookup(query_keys: jax.Array) -> jax.Array:
-        pos = rmi_mod.lookup(idx, query_keys, use_kernel=use_kernel)
+        pos = rmi_mod.lookup(idx, query_keys,
+                             path="kernel" if kernel else "jnp")
         return pages[jnp.clip(pos, 0, pages.shape[0] - 1)]
 
     return lookup, keys, pages

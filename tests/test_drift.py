@@ -1,0 +1,347 @@
+"""Drift monitoring + bound-checked pool hot-swap tests (``core.drift``,
+the ``DynamicRMI``/``ShardedDynamicIndex`` wiring, and the ``repro.api``
+facade).
+
+Contract under test (core.drift module docstring):
+
+  * the per-shard drift score is the binned two-sample KS statistic over
+    the build-time reference histogram — ~0 at stationarity, monotone
+    under a sustained distribution shift;
+  * the drifted latch has hysteresis: set above ``thresh_hi``, cleared
+    below ``thresh_lo``, HELD inside the band (no flapping);
+  * a hot-swap commits per leaf only when the on-device Lemma 4.1 bound
+    check passes; rejected leaves fall back to the ordinary refit path,
+    and either way ``find``/``find_range`` stay bit-exact against the
+    refit-only twin (checked on 1/2/4-device meshes through the serve
+    front-end, whose TRACE_COUNTS guard pins zero retraces across swap
+    commits);
+  * drift state survives snapshot/restore.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_mesh_script
+
+import jax.numpy as jnp  # noqa: E402
+
+import repro  # noqa: E402,F401
+from repro.api import Index  # noqa: E402
+from repro.core import drift as drift_mod  # noqa: E402
+from repro.core import reuse, synth  # noqa: E402
+from repro.core.updates import DynamicRMI  # noqa: E402
+
+
+def _f32e(a) -> np.ndarray:
+    """f32-exact f64 keys (the kernel-path precondition every suite uses)."""
+    return np.asarray(a, np.float64).astype(np.float32).astype(np.float64)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    sp = synth.generate_pool(0.65, ns=256, seed=1)
+    return reuse.build_pool(sp, kind="linear", m_sim=64)
+
+
+@pytest.fixture(scope="module")
+def base_keys():
+    rng = np.random.default_rng(7)
+    return np.unique(np.sort(_f32e(rng.lognormal(0.0, 0.5, 40_000))))
+
+
+def _shifted(rng, n=3000):
+    return np.sort(_f32e(rng.lognormal(1.5, 0.4, n)))
+
+
+def _stationary(rng, n=3000):
+    return np.sort(_f32e(rng.lognormal(0.0, 0.5, n)))
+
+
+# ---------------------------------------------------------------------------
+# Detector unit tests
+# ---------------------------------------------------------------------------
+def test_ks_score_monotone_under_shift(base_keys):
+    st = drift_mod.init_drift(jnp.asarray(base_keys), m=64,
+                              thresh_hi=0.08, thresh_lo=0.04)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        st = drift_mod.update_drift(st, jnp.asarray(_stationary(rng)))
+    stationary = float(st.score)
+    assert stationary < 0.04, "stationary ingest must not look like drift"
+    assert not bool(st.drifted)
+    scores = []
+    for _ in range(5):
+        st = drift_mod.update_drift(st, jnp.asarray(_shifted(rng)))
+        scores.append(float(st.score))
+    assert all(b > a for a, b in zip(scores, scores[1:])), \
+        f"KS score must grow monotonically under sustained shift: {scores}"
+    assert scores[0] > stationary
+    assert bool(st.drifted), f"latch must set past thresh_hi: {scores}"
+    assert st.updates == 8
+
+
+def test_hysteresis_latch_does_not_flap():
+    rng = np.random.default_rng(2)
+    ref = np.unique(np.sort(_f32e(rng.lognormal(0.0, 0.5, 10_000))))
+    st = drift_mod.init_drift(jnp.asarray(ref), m=64,
+                              thresh_hi=0.08, thresh_lo=0.04)
+    while not bool(st.drifted):
+        st = drift_mod.update_drift(st, jnp.asarray(_shifted(rng, 2000)))
+    # Stationary traffic now dilutes the accumulated shift: the score
+    # decays through the (thresh_lo, thresh_hi) band, where the latch
+    # must HOLD — it clears only below thresh_lo.
+    in_band_steps = 0
+    for _ in range(200):
+        st = drift_mod.update_drift(st, jnp.asarray(_stationary(rng, 2000)))
+        s = float(st.score)
+        if s >= st.thresh_lo:
+            assert bool(st.drifted), \
+                f"latch flapped inside the hysteresis band at score {s}"
+            if s < st.thresh_hi:
+                in_band_steps += 1
+        else:
+            assert not bool(st.drifted), \
+                f"latch must clear below thresh_lo, score {s}"
+            break
+    assert in_band_steps > 0, "decay never traversed the hysteresis band"
+    # rebaseline resets score and latch
+    st = drift_mod.rebaseline(st)
+    assert float(st.score) == 0.0 and not bool(st.drifted)
+    assert st.rebaselines == 1
+
+
+# ---------------------------------------------------------------------------
+# Swap commit / fallback on the single-host backend
+# ---------------------------------------------------------------------------
+def test_swap_vs_refit_bit_exact_single_host(pool, base_keys):
+    kw = dict(pool=pool, eps=0.65, n_leaves=64)
+    d_swap = DynamicRMI.build(jnp.asarray(base_keys), drift_bins=64,
+                              drift_hi=0.08, drift_lo=0.04,
+                              swap_on_drift=True, **kw)
+    d_refit = DynamicRMI.build(jnp.asarray(base_keys), **kw)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        b = _shifted(rng)
+        d_swap.insert_batch(b)
+        d_refit.insert_batch(b)
+    # shifted ingest latches the detector; the maintenance pass then runs
+    # the bound-checked hot-swap over every pressured leaf
+    assert bool(d_swap.drift.drifted), float(d_swap.drift.score)
+    d_swap.maybe_swap()
+    assert d_swap.swaps_committed > 0, "shifted ingest must commit swaps"
+    live = d_swap.live_keys()
+    assert np.array_equal(live, d_refit.live_keys())
+    q = np.concatenate([live[::53], _f32e(live[::101] * (1 + 1e-3))])
+    f1, r1 = d_swap.find(q, path="jnp")
+    f2, r2 = d_refit.find(q, path="jnp")
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    assert np.all(live[np.asarray(r1)[:live[::53].size]] == live[::53])
+    lo = live[::201]
+    hi = _f32e(lo * 1.02)
+    rl1, rh1 = d_swap.find_range(lo, hi)
+    rl2, rh2 = d_refit.find_range(lo, hi)
+    assert np.array_equal(np.asarray(rl1), np.asarray(rl2))
+    assert np.array_equal(np.asarray(rh1), np.asarray(rh2))
+
+
+def test_bound_violation_rejects_and_falls_back(pool, base_keys):
+    d = DynamicRMI.build(jnp.asarray(base_keys), pool=pool, eps=0.65,
+                         n_leaves=64, drift_bins=64, drift_hi=0.08,
+                         drift_lo=0.04, swap_on_drift=True)
+    # Pressure far beyond any Lemma 4.1 budget: the on-device bound check
+    # (new_budget >= n_inserts) must reject every candidate, leaving the
+    # fitted state untouched so the refit path handles the leaves.
+    before = np.asarray(d.index.err_lo)
+    ids = np.asarray([5, 9, 21])
+    d.n_inserts[ids] = 10_000_000
+    assert d.maybe_swap(ids) == 0
+    assert d.swap_rejects >= ids.size
+    assert d.swaps_committed == 0
+    assert np.array_equal(np.asarray(d.index.err_lo), before)
+    # the refit fallback clears the pressure and keeps answers exact
+    rb0 = d.rebuilds
+    d._rebuild_leaves(ids)
+    assert d.rebuilds > rb0
+    assert np.all(d.n_inserts[ids] == 0)
+    live = d.live_keys()
+    q = live[::97]
+    f, r = d.find(q, path="jnp")
+    assert bool(np.all(np.asarray(f)))
+    assert np.all(live[np.asarray(r)] == q)
+
+
+def test_maintenance_swap_gated_on_latch(pool, base_keys):
+    d = DynamicRMI.build(jnp.asarray(base_keys), pool=pool, eps=0.65,
+                         n_leaves=64, drift_bins=64, drift_hi=0.08,
+                         drift_lo=0.04)
+    rng = np.random.default_rng(4)
+    d.insert_batch(_stationary(rng, 500))
+    # stationary: latch unset, the maintenance-style call must be a no-op
+    assert not bool(d.drift.drifted)
+    assert d.maybe_swap() == 0
+    assert d.swaps_committed == 0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore round-trip (facade verbs)
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_drift_roundtrip(pool, base_keys, tmp_path):
+    ix = Index.build(jnp.asarray(base_keys), pool=pool, eps=0.65,
+                     n_leaves=64, drift_bins=64, drift_hi=0.08,
+                     drift_lo=0.04, swap_on_drift=True)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        ix.insert(_shifted(rng))
+    ix.snapshot(str(tmp_path), 11)
+    ix2 = Index.restore(str(tmp_path))
+    d1, d2 = ix.backend, ix2.backend
+    assert d2.drift is not None
+    assert float(d2.drift.score) == float(d1.drift.score)
+    assert bool(d2.drift.drifted) == bool(d1.drift.drifted)
+    assert np.array_equal(np.asarray(d2.drift.ref), np.asarray(d1.drift.ref))
+    assert np.array_equal(np.asarray(d2.drift.acc), np.asarray(d1.drift.acc))
+    assert (d2.drift.updates, d2.drift.rebaselines) == \
+        (d1.drift.updates, d1.drift.rebaselines)
+    assert d2.swap_on_drift
+    assert d2.swaps_committed == d1.swaps_committed
+    assert d2.swap_rejects == d1.swap_rejects
+    assert np.array_equal(ix2.drift_scores(), ix.drift_scores())
+    live = ix.live_keys()
+    q = live[::61]
+    f1, r1 = ix.find(q, path="jnp")
+    f2, r2 = ix2.find(q, path="jnp")
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+    assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    # the restored monitor keeps accumulating (not a frozen copy)
+    ix2.insert(_shifted(rng, 500))
+    assert ix2.backend.drift.updates == d1.drift.updates + 1
+
+
+# ---------------------------------------------------------------------------
+# Sharded swap-vs-refit bit-exactness + serve-path zero-retrace guard,
+# on 1/2/4-device meshes (fresh interpreter per device count).
+# ---------------------------------------------------------------------------
+_SCRIPT = r"""
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.api import Index
+from repro.core import distributed, reuse, synth
+from repro.serve.frontend import BatchingFrontend, Request, ServeConfig
+
+ndev = %(ndev)d
+mesh = jax.make_mesh((ndev,), ("data",))
+rng = np.random.default_rng(0)
+f32e = lambda a: np.asarray(a, np.float64).astype(np.float32).astype(np.float64)
+keys = np.unique(np.sort(f32e(rng.lognormal(0.0, 0.5, 40_000))))
+sp = synth.generate_pool(0.65, ns=256, seed=1)
+pool = reuse.build_pool(sp, kind="linear", m_sim=64)
+kw = dict(mesh=mesh, pool=pool, eps=0.65, n_leaves=64)
+ix = Index.build(jnp.asarray(keys), drift_bins=64, drift_hi=0.06,
+                 drift_lo=0.03, swap_on_drift=True, **kw)
+ref = Index.build(jnp.asarray(keys), **kw)      # refit-only twin
+
+def committed():
+    return sum(s.swaps_committed for s in ix.backend.shards)
+
+fe = BatchingFrontend([ix.backend],
+                      config=ServeConfig(latency_budget_s=1e-3))
+fe.start()
+fe.warmup((1, 128))
+# --- ingest phase: shifted traffic latches the detector; delta growth
+# crosses capacity classes here, so retraces are legitimate and unmeasured
+for step in range(4):
+    b = np.sort(f32e(rng.lognormal(1.5, 0.4, 3000)))
+    fe.submit(Request(0, "insert", b)).result(timeout=600.0)
+    ref.insert(b)
+    fe.submit(Request(0, "find", rng.choice(b, 64))).result(timeout=600.0)
+latched = int(ix.drift_scores()[:, 1].sum())
+assert latched > 0, "shifted ingest must latch at least one shard"
+
+# --- settle: let in-flight idle maintenance finish, drain every deferred
+# repair (sweep refits may change the clamped search depth — a legitimate
+# retrace, so it must happen BEFORE the measured window), then zero the
+# pressure accounting so the window's pressure is exactly the batch below
+# (ingest residue would otherwise make the refit fallback nondeterministic)
+time.sleep(0.3)
+ix.maybe_swap()
+for s in ix.backend.shards:
+    s.n_inserts[:] = 0.0
+
+# --- warm the final shapes once (find class 128, range class 128)
+live = ix.live_keys()
+q = live[:: max(live.size // 120, 1)][:120]
+lo = q[:100]
+hi = f32e(lo * 1.02)
+fe.submit(Request(0, "find", q)).result(timeout=600.0)
+fe.submit(Request(0, "range", np.stack([lo, hi]))).result(timeout=600.0)
+
+# --- measured window: pressure crafted to be at-risk but never over-
+# budget.  Midpoints between consecutive base keys, routed per leaf via
+# the shard's own (frozen) root, ~1/3 of each leaf's Lemma-4.1 budget on
+# the smallest-budget leaves first, capped to the delta tier's current
+# capacity-class headroom.  The idle maintenance pass can then only
+# hot-swap (commit gate: refreshed budget covers the pressure), never
+# refit, and no array shape changes: zero retraces, deterministically.
+# Snapshots are taken BEFORE the insert — the dispatcher's idle
+# _maintain may commit at any point after it, and all commits count.
+from repro.core import rmi as rmi_mod
+hot = ix.backend.shards[-1]
+bk = np.asarray(hot.index.keys[: hot.base_n])
+lv = np.asarray(rmi_mod.root_buckets(
+    hot.index.root_kind, hot.index.root, jnp.asarray(bk),
+    hot.index.n_leaves, hot.route_n))
+head = hot.delta_keys.shape[0] - hot.delta_live - 64
+parts = []
+for leaf in np.argsort(hot.budget):
+    m = int(0.3 * hot.budget[leaf]) + 2
+    ks = bk[lv == leaf]
+    if ks.size < m + 1 or m > head:
+        continue
+    p = np.linspace(0, ks.size - 2, m).astype(int)
+    parts.append((ks[p] + ks[p + 1]) * 0.5)
+    head -= m
+    if head < 16:
+        break
+b = np.unique(f32e(np.concatenate(parts)))
+assert b.size > 0, "no pressure batch fits the delta headroom"
+before_f = distributed.TRACE_COUNTS["tenant_find"]
+before_r = distributed.TRACE_COUNTS["tenant_range"]
+swaps0 = committed()
+ix.insert(b)                    # direct: same capacity classes throughout
+ref.insert(b)
+time.sleep(0.3)                 # idle window: dispatcher runs _maintain()
+ix.maybe_swap()                 # same pass, deterministic
+in_window = committed() - swaps0
+assert in_window > 0, "no bound-held swap committed inside the window"
+
+live = ix.live_keys()
+assert np.array_equal(live, ref.live_keys())
+q = live[:: max(live.size // 120, 1)][:120]
+f1, r1 = fe.submit(Request(0, "find", q)).result(timeout=600.0)
+f2, r2 = ref.find(q, path="jnp")
+assert np.array_equal(np.asarray(f1), np.asarray(f2))
+assert np.array_equal(np.asarray(r1), np.asarray(r2))
+assert bool(np.all(np.asarray(f1)))
+lo = q[:100]
+hi = f32e(lo * 1.02)
+rl1, rh1 = fe.submit(Request(0, "range",
+                             np.stack([lo, hi]))).result(timeout=600.0)
+rl2, rh2 = ref.find_range(lo, hi)
+assert np.array_equal(np.asarray(rl1), np.asarray(rl2))
+assert np.array_equal(np.asarray(rh1), np.asarray(rh2))
+d_find = distributed.TRACE_COUNTS["tenant_find"] - before_f
+d_range = distributed.TRACE_COUNTS["tenant_range"] - before_r
+fe.stop()
+assert d_find == 0 and d_range == 0, \
+    ("retrace across swap commit", d_find, d_range)
+print(f"DRIFT_OK ndev={ndev} swaps={committed()} latched={latched} "
+      f"in_window={in_window} retraces=0")
+"""
+
+
+@pytest.mark.parametrize(
+    "ndev", [1, 2, pytest.param(4, marks=pytest.mark.slow)])
+def test_sharded_swap_bit_exact_zero_retrace(ndev):
+    run_mesh_script(_SCRIPT % {"ndev": ndev}, f"DRIFT_OK ndev={ndev}")
